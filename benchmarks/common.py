@@ -1,0 +1,37 @@
+"""Benchmark helpers: timing + CSV emission.
+
+All benchmarks run the REAL implementations on CPU at reduced scale (the
+paper's A100 ladder does not fit a CPU container); the quantities compared
+are the same ones the paper tables compare, and byte/traffic models are
+evaluated exactly.  CSV schema: ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Best-of-iters wall time (us) of a jitted fn, fully blocked."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.tree_util.tree_map(
+            lambda x: x.block_until_ready() if hasattr(
+                x, "block_until_ready") else x, out)
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.tree_util.tree_map(
+            lambda x: x.block_until_ready() if hasattr(
+                x, "block_until_ready") else x, out)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def emit(name: str, us: float, derived: str = "") -> str:
+    line = f"{name},{us:.1f},{derived}"
+    print(line, flush=True)
+    return line

@@ -1,0 +1,34 @@
+"""Benchmark driver — one module per paper table.
+
+Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        table1_weak_scaling,
+        table2_backends,
+        table3_ptap_ablation,
+        table4_nnz_row,
+        table5_traffic,
+    )
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (table1_weak_scaling, table2_backends, table3_ptap_ablation,
+                table4_nnz_row, table5_traffic):
+        try:
+            mod.run()
+        except Exception:
+            failures += 1
+            print(f"{mod.__name__},FAILED,", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Distributed AMG example: the paper's production solve on N shards.
+
+Runs the shard_map distributed solver (halo-exchange SpMV, state-gated
+P_oth cache, all_to_all off-process reduction) on host placeholder devices
+and checks parity with the single-device result.
+
+Run:  PYTHONPATH=src python examples/amg_distributed.py [ndev] [m]
+      (re-execs itself to set the device-count flag before jax loads)
+"""
+import os
+import subprocess
+import sys
+
+
+def main() -> None:
+    ndev = sys.argv[1] if len(sys.argv) > 1 else "8"
+    m = sys.argv[2] if len(sys.argv) > 2 else "6"
+    env = dict(os.environ)
+    env["REPRO_SELFTEST_NDEV"] = ndev
+    env.setdefault("PYTHONPATH", "src")
+    raise SystemExit(subprocess.run(
+        [sys.executable, "-m", "repro.dist.selftest", m], env=env).returncode)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Serving driver: batched prefill + decode with KV cache.
+
+Builds a reduced falcon-mamba (constant-memory state) and a reduced qwen2
+(KV cache) model, prefetches a batch of prompts and generates continuations
+— the serve_step path the decode dry-run cells lower at production scale.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.models import transformer as T
+from repro.train.steps import make_serve_step
+
+B, PROMPT, GEN = 4, 32, 32
+
+
+def serve(arch: str) -> None:
+    cfg = get_config(arch).reduced()
+    params = T.init_lm(cfg, jax.random.key(0))
+    serve_step = jax.jit(make_serve_step(cfg, cdt=jnp.float32))
+    cache = T.init_full_cache(cfg, B, PROMPT + GEN, cdt=jnp.float32)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, PROMPT)),
+                          jnp.int32)
+    # prefill via the decode path (token-by-token; production uses the
+    # fused prefill lowering benchmarked by the prefill_32k cells)
+    t0 = time.perf_counter()
+    for pos in range(PROMPT):
+        logits, cache = serve_step(params, cache, prompts[:, pos:pos + 1],
+                                   jnp.asarray(pos, jnp.int32))
+    toks = [jnp.argmax(logits, axis=-1).astype(jnp.int32)]
+    for pos in range(PROMPT, PROMPT + GEN - 1):
+        logits, cache = serve_step(params, cache, toks[-1],
+                                   jnp.asarray(pos, jnp.int32))
+        toks.append(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+    dt = time.perf_counter() - t0
+    out = np.concatenate([np.asarray(t) for t in toks], axis=1)
+    print(f"{arch}: generated {B}x{GEN} tokens in {dt:.2f}s "
+          f"({B*(PROMPT+GEN)/dt:,.0f} tok/s incl. prefill)")
+    print(f"  sample continuation: {out[0][:12].tolist()}")
+
+
+def main() -> None:
+    serve("qwen2-0.5b")          # KV-cache attention path
+    serve("falcon-mamba-7b")     # constant-state SSM path
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""repro — a natively blocked, device-resident AMG framework in JAX.
+
+Subpackages:
+  core     blocked sparse containers + SA-AMG (the paper's contribution)
+  dist     shard_map distributed runtime (halo plans, distributed AMG)
+  fem      Q1/Q2 hex elasticity model problems (PETSc ex56 analogues)
+  kernels  Pallas TPU kernels for the bandwidth-bound hot spots
+  models   assigned LM architecture zoo (dense/MoE/MLA/SSM/hybrid/enc-dec)
+  train    optimizer, train/serve steps, checkpointing, data, fault tolerance
+  configs  one module per assigned architecture + the paper's elasticity cfg
+  launch   production mesh, multi-pod dry-run, roofline extraction
+"""

@@ -1,0 +1,15 @@
+"""Core blocked-AMG library (the paper's contribution, in JAX).
+
+AMG runs in fp64 (the paper's setting); enable x64 before any core module
+builds arrays.  LM-model code uses explicit bf16/f32 dtypes and is unaffected.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.block_csr import (  # noqa: E402,F401
+    BlockCSR,
+    BlockELL,
+    identity_bcsr,
+    transpose_bcsr,
+)

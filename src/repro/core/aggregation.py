@@ -1,0 +1,185 @@
+"""Aggregation — greedy host coarsener + device Luby-MIS coarsener.
+
+The paper keeps the aggregation graph phase on the host (Sec. 3.2): it is
+irregular, serial-leaning work, built once and reused across every solve.
+``greedy_aggregate`` is that path — the classical smoothed-aggregation
+greedy disjoint covering (Vanek et al.):
+
+  pass 1  visit nodes in order; a node whose strong neighborhood is fully
+          unaggregated roots a new aggregate containing the neighborhood;
+  pass 2  remaining nodes join the strongest adjacent aggregate;
+  pass 3  still-isolated nodes become singletons, then undersized
+          aggregates (fewer block rows than needed to keep the tentative
+          prolongator full column rank) merge into an adjacent aggregate.
+
+``luby_mis_device`` implements the paper's *future-work* device coarsener
+(MATCOARSENMISKOKKOS, Sec. 6): parallel Luby rounds with deterministic hash
+weights, entirely in ``jax.lax`` control flow, followed by a device
+root-attach pass.  It is selectable via ``gamg.setup(coarsener="mis")`` and
+keeps even the cold graph phase on device for single-shard problems —
+completing the fully device-resident cold setup the paper sketches.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.strength import StrengthGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class Aggregation:
+    node_to_agg: np.ndarray   # (n,) aggregate id per node
+    n_agg: int
+
+    def sizes(self) -> np.ndarray:
+        return np.bincount(self.node_to_agg, minlength=self.n_agg)
+
+
+def greedy_aggregate(graph: StrengthGraph, min_size: int = 2) -> Aggregation:
+    """Greedy disjoint covering of the strong-coupling graph (host)."""
+    n = graph.n
+    agg = np.full(n, -1, dtype=np.int64)
+    indptr, indices = graph.indptr, graph.indices
+    n_agg = 0
+    # pass 1: root aggregates on untouched neighborhoods
+    for i in range(n):
+        if agg[i] >= 0:
+            continue
+        nbrs = indices[indptr[i]:indptr[i + 1]]
+        if len(nbrs) and (agg[nbrs] >= 0).any():
+            continue
+        agg[i] = n_agg
+        agg[nbrs] = n_agg
+        n_agg += 1
+    # pass 2: attach stragglers to the strongest adjacent aggregate
+    weights = graph.weights
+    for i in range(n):
+        if agg[i] >= 0:
+            continue
+        sl = slice(indptr[i], indptr[i + 1])
+        nbrs = indices[sl]
+        if len(nbrs):
+            aggd = agg[nbrs] >= 0
+            if aggd.any():
+                w = weights[sl][aggd]
+                agg[i] = agg[nbrs[aggd][np.argmax(w)]]
+                continue
+        # pass 3 inline: isolated node roots a singleton
+        agg[i] = n_agg
+        n_agg += 1
+    # undersized-aggregate repair: merge into an adjacent aggregate so the
+    # tentative prolongator stays full column rank (bs_f * size >= nns)
+    sizes = np.bincount(agg, minlength=n_agg)
+    for i in range(n):
+        a = agg[i]
+        if sizes[a] >= min_size:
+            continue
+        nbrs = indices[indptr[i]:indptr[i + 1]]
+        cand = nbrs[agg[nbrs] != a] if len(nbrs) else nbrs
+        if len(cand):
+            target = agg[cand[0]]
+            sizes[target] += sizes[a]
+            sizes[a] = 0
+            agg[agg == a] = target
+    # compact ids
+    uniq, agg = np.unique(agg, return_inverse=True)
+    return Aggregation(node_to_agg=agg.astype(np.int64), n_agg=len(uniq))
+
+
+# ---------------------------------------------------------------------------
+# Device Luby-MIS coarsener (paper Sec. 6 future work, implemented).
+# ---------------------------------------------------------------------------
+
+def _hash_weights(n: int, seed: int) -> jax.Array:
+    """Deterministic per-vertex hash weights (Luby round priorities)."""
+    x = jnp.arange(n, dtype=jnp.uint32) + jnp.uint32(seed * 2654435761 + 1)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    return (x ^ (x >> 16)).astype(jnp.uint32)
+
+
+def luby_mis_device(nbr_idx: jax.Array, nbr_mask: jax.Array,
+                    seed: int = 0) -> jax.Array:
+    """Maximal independent set via deterministic Luby rounds, on device.
+
+    nbr_idx:  (n, kmax) padded neighbor lists (ELL of the strength graph)
+    nbr_mask: (n, kmax) validity
+    returns   (n,) int32 state: 1 = in MIS, 0 = excluded
+    """
+    n = nbr_idx.shape[0]
+    w = _hash_weights(n, seed)
+    # state: 0 undecided, 1 in MIS, 2 excluded
+    state0 = jnp.zeros(n, dtype=jnp.int32)
+
+    def round_body(carry):
+        state, it = carry
+        undecided = state == 0
+        # a vertex enters the MIS if it is undecided and its weight beats
+        # every undecided neighbor (ties broken by index)
+        nw = w[nbr_idx]                                    # (n, kmax)
+        n_undecided = (state[nbr_idx] == 0) & nbr_mask
+        my_key = w.astype(jnp.uint64) * n + jnp.arange(n, dtype=jnp.uint64)
+        nbr_key = (nw.astype(jnp.uint64) * n
+                   + nbr_idx.astype(jnp.uint64))
+        beats = jnp.where(n_undecided, nbr_key > my_key[:, None], True)
+        winner = undecided & jnp.all(beats, axis=1)
+        state = jnp.where(winner, 1, state)
+        # exclude neighbors of fresh winners
+        nbr_in_mis = jnp.any((state[nbr_idx] == 1) & nbr_mask, axis=1)
+        state = jnp.where((state == 0) & nbr_in_mis, 2, state)
+        return state, it + 1
+
+    def cond(carry):
+        state, it = carry
+        return jnp.any(state == 0) & (it < n + 2)
+
+    state, _ = jax.lax.while_loop(cond, round_body, (state0, 0))
+    return (state == 1).astype(jnp.int32)
+
+
+def mis_aggregate_device(nbr_idx: jax.Array, nbr_mask: jax.Array,
+                         seed: int = 0) -> jax.Array:
+    """MIS roots claim their neighborhoods — device aggregation.
+
+    Returns (n,) aggregate id per node (root nodes numbered densely), with
+    non-adjacent leftovers attached to the nearest root within two hops.
+    """
+    n = nbr_idx.shape[0]
+    in_mis = luby_mis_device(nbr_idx, nbr_mask)
+    root_id = jnp.cumsum(in_mis) - 1                     # dense ids for roots
+    agg = jnp.where(in_mis == 1, root_id, -1)
+
+    def attach(agg, _):
+        # undecided nodes adopt the first aggregated neighbor's id
+        nbr_agg = jnp.where(nbr_mask, agg[nbr_idx], -1)   # (n, kmax)
+        best = jnp.max(nbr_agg, axis=1)
+        return jnp.where((agg < 0) & (best >= 0), best, agg), None
+
+    agg, _ = jax.lax.scan(attach, agg, None, length=2)   # two hops
+    # any leftovers (isolated): give each its own fresh id
+    leftover = agg < 0
+    fresh = jnp.cumsum(leftover) - 1 + jnp.max(agg) + 1
+    return jnp.where(leftover, fresh, agg).astype(jnp.int32)
+
+
+def aggregation_from_device(agg_dev: jax.Array) -> Aggregation:
+    agg = np.asarray(agg_dev, dtype=np.int64)
+    uniq, agg = np.unique(agg, return_inverse=True)
+    return Aggregation(node_to_agg=agg, n_agg=len(uniq))
+
+
+def graph_to_ell(graph: StrengthGraph):
+    """Pad the strength graph to ELL for the device coarsener."""
+    counts = np.diff(graph.indptr)
+    kmax = max(int(counts.max()) if len(counts) else 0, 1)
+    idx = np.zeros((graph.n, kmax), dtype=np.int32)
+    mask = np.zeros((graph.n, kmax), dtype=bool)
+    r = np.repeat(np.arange(graph.n), counts)
+    within = np.arange(graph.nedges) - np.repeat(graph.indptr[:-1], counts)
+    idx[r, within] = graph.indices
+    mask[r, within] = True
+    return jnp.asarray(idx), jnp.asarray(mask)

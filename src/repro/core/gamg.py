@@ -1,0 +1,232 @@
+"""GAMG — smoothed-aggregation AMG with the paper's hot/cold split.
+
+``setup``      cold symbolic phase (paper Sec. 3.1): strength graph,
+               aggregation, tentative + smoothed prolongators, every SpGEMM/
+               transpose/ELL plan, all computed *on the block format* — the
+               coarsening path never touches scalar AIJ (the paper's first
+               invariant; ``tests/test_no_scalar_expansion.py`` enforces it).
+
+``recompute``  hot numeric phase: given new fine-operator values (same
+               structure — a Newton/time step), rebuild every level operator
+               through the cached, state-gated PtAP plans, plus the smoother
+               data (pbjacobi inverses, Chebyshev bounds).  One jitted
+               device graph, no host symbolic work — the paper's hot PtAP.
+
+``solve``      hot KSPSolve: AMG-preconditioned CG, fully device-resident.
+
+Reuse model = PETSc ``-pc_gamg_reuse_interpolation true``: aggregates and
+prolongator *values* are fixed across recomputes; only operators and
+smoother data refresh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import (
+    Aggregation,
+    aggregation_from_device,
+    graph_to_ell,
+    greedy_aggregate,
+    mis_aggregate_device,
+)
+from repro.core.block_csr import BlockCSR, ELLPlan, transpose_bcsr
+from repro.core.ptap import PtAPCache, ptap_numeric_data, ptap_symbolic
+from repro.core.smooth import (
+    invert_diag_blocks,
+    lambda_max_dinv_a,
+    smoothed_prolongator,
+)
+from repro.core.strength import strength_graph
+from repro.core.tentative import tentative_prolongator
+from repro.core.vcycle import Hierarchy, LevelState, vcycle
+from repro.core.spmv import spmv_ell
+from repro.core.krylov import CGResult, pcg
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class LevelSetup:
+    """Cold, host-side symbolic data for one level (structure + plans)."""
+
+    A0: BlockCSR            # level operator at setup time
+    P: BlockCSR             # smoothed prolongator (values fixed on reuse)
+    R: BlockCSR             # cached transpose (prolongator-side cache)
+    ptap_cache: PtAPCache
+    a_ell_plan: ELLPlan
+    p_ell: "object"         # BlockELL (fixed values)
+    r_ell: "object"
+    aggr: Aggregation
+    omega: Array
+    n_fine: int
+    n_coarse: int
+
+
+@dataclasses.dataclass
+class GAMGSetup:
+    levels: List[LevelSetup]
+    coarse_struct: BlockCSR   # coarsest-level operator structure
+    bs_fine: int
+    nns_dim: int
+    smoother: str
+    degree: int
+    theta: float
+    coarsener: str
+    stats: dict
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.levels) + 1
+
+
+def setup(A: BlockCSR, B: Array, *, theta: float = 0.08,
+          max_levels: int = 10, coarse_size: int = 100,
+          smoother: str = "chebyshev", degree: int = 2,
+          coarsener: str = "greedy") -> GAMGSetup:
+    """Cold GAMG setup on the block format (no scalar expansion anywhere)."""
+    assert A.br == A.bc, "system operator must have square blocks"
+    levels: List[LevelSetup] = []
+    Acur, Bcur = A, jnp.asarray(B)
+    nns = int(Bcur.shape[1])
+    stats = {"level_rows": [A.nbr * A.br], "level_nnzb": [A.nnzb],
+             "level_bs": [A.br], "conversions_to_scalar": 0}
+    while Acur.nbr > coarse_size and len(levels) < max_levels - 1:
+        bs = Acur.br
+        graph = strength_graph(Acur, theta)
+        if coarsener == "mis":
+            idx, mask = graph_to_ell(graph)
+            aggr = aggregation_from_device(mis_aggregate_device(idx, mask))
+            aggr = _repair_small_aggregates(aggr, graph,
+                                            min_size=-(-nns // bs))
+        else:
+            aggr = greedy_aggregate(graph, min_size=-(-nns // bs))
+        if aggr.n_agg >= Acur.nbr:        # no coarsening possible
+            break
+        Ptent, Bc = tentative_prolongator(aggr, Bcur, bs)
+        P, omega, lam, _plans = smoothed_prolongator(Acur, Ptent)
+        cache = ptap_symbolic(Acur, P)
+        a_next_data = ptap_numeric_data(cache, Acur.data, P.data)
+        Anext = BlockCSR.from_arrays(cache.ac_plan.indptr,
+                                     cache.ac_plan.indices, a_next_data,
+                                     cache.n_coarse)
+        R = transpose_bcsr(P)
+        levels.append(LevelSetup(
+            A0=Acur, P=P, R=R, ptap_cache=cache,
+            a_ell_plan=Acur.ell_plan(), p_ell=P.to_ell(), r_ell=R.to_ell(),
+            aggr=aggr, omega=omega, n_fine=Acur.nbr, n_coarse=aggr.n_agg))
+        stats["level_rows"].append(Anext.nbr * Anext.br)
+        stats["level_nnzb"].append(Anext.nnzb)
+        stats["level_bs"].append(Anext.br)
+        Acur, Bcur = Anext, Bc
+    return GAMGSetup(levels=levels, coarse_struct=Acur, bs_fine=A.br,
+                     nns_dim=nns, smoother=smoother, degree=degree,
+                     theta=theta, coarsener=coarsener, stats=stats)
+
+
+def _repair_small_aggregates(aggr: Aggregation, graph, min_size: int
+                             ) -> Aggregation:
+    """Merge undersized MIS aggregates into neighbors (host, cold)."""
+    agg = aggr.node_to_agg.copy()
+    sizes = np.bincount(agg, minlength=aggr.n_agg)
+    indptr, indices = graph.indptr, graph.indices
+    for i in range(len(agg)):
+        a = agg[i]
+        if sizes[a] >= min_size:
+            continue
+        nbrs = indices[indptr[i]:indptr[i + 1]]
+        cand = nbrs[agg[nbrs] != a] if len(nbrs) else nbrs
+        if len(cand):
+            t = agg[cand[0]]
+            sizes[t] += sizes[a]
+            sizes[a] = 0
+            agg[agg == a] = t
+    uniq, agg = np.unique(agg, return_inverse=True)
+    return Aggregation(node_to_agg=agg.astype(np.int64), n_agg=len(uniq))
+
+
+# ---------------------------------------------------------------------------
+# Hot numeric recompute (the paper's state-gated PtAP chain).
+# ---------------------------------------------------------------------------
+
+def _level_state(ls: LevelSetup, a_data: Array) -> LevelState:
+    A = ls.A0.with_data(a_data)
+    diag = A.diagonal_blocks()
+    dinv = invert_diag_blocks(diag)
+    a_ell = ls.a_ell_plan.build(a_data)
+    dinva_ell = jnp.einsum("nab,nkbc->nkac", dinv, a_ell.data,
+                           preferred_element_type=a_data.dtype)
+    lam = lambda_max_dinv_a(a_ell.indices, dinva_ell, a_ell.mask,
+                            A.nbr, A.br)
+    return LevelState(a_ell=a_ell, p_ell=ls.p_ell, r_ell=ls.r_ell,
+                      dinv=dinv, lam_max=lam)
+
+
+def recompute(setupd: GAMGSetup, a_fine_data: Array) -> Hierarchy:
+    """Hot numeric hierarchy rebuild: pure function of the fine values.
+
+    Wrap with ``make_recompute`` for the jitted production entry point.
+    """
+    states = []
+    a_data = a_fine_data
+    for ls in setupd.levels:
+        states.append(_level_state(ls, a_data))
+        a_data = ptap_numeric_data(ls.ptap_cache, a_data, ls.P.data)
+    Ac = setupd.coarse_struct.with_data(a_data)
+    dense = Ac.to_dense()
+    n = dense.shape[0]
+    jitter = 1e-12 * jnp.trace(dense) / n
+    chol = jnp.linalg.cholesky(dense + jitter * jnp.eye(n, dtype=dense.dtype))
+    return Hierarchy(levels=tuple(states), coarse_chol=chol)
+
+
+def make_recompute(setupd: GAMGSetup):
+    """Jitted hot-recompute closure (symbolic data baked in as constants)."""
+    return jax.jit(partial(recompute, setupd))
+
+
+def make_solve(setupd: GAMGSetup, rtol: float = 1e-8, maxiter: int = 200):
+    """Jitted hot KSPSolve: AMG-preconditioned CG on a Hierarchy pytree."""
+    smoother, degree = setupd.smoother, setupd.degree
+
+    @partial(jax.jit, static_argnames=())
+    def solve(hier: Hierarchy, b: Array) -> CGResult:
+        def apply_a(x):
+            return spmv_ell(hier.levels[0].a_ell, x)
+
+        def apply_m(r):
+            return vcycle(hier, r, smoother=smoother, degree=degree)
+
+        return pcg(apply_a, apply_m, b, rtol=rtol, maxiter=maxiter)
+
+    return solve
+
+
+# ---------------------------------------------------------------------------
+# Convenience front door
+# ---------------------------------------------------------------------------
+
+class GAMGSolver:
+    """PETSc-shaped convenience wrapper: setup once, re-solve many times."""
+
+    def __init__(self, A: BlockCSR, B: Array, **opts):
+        solve_opts = {k: opts.pop(k) for k in ("rtol", "maxiter")
+                      if k in opts}
+        self.setup_data = setup(A, B, **opts)
+        self._recompute = make_recompute(self.setup_data)
+        self._solve = make_solve(self.setup_data, **solve_opts)
+        self.hierarchy = self._recompute(A.data)
+        self.n_recomputes = 0
+
+    def update_operator(self, a_fine_data: Array) -> None:
+        """Hot path: new operator values, same structure (Newton step)."""
+        self.hierarchy = self._recompute(a_fine_data)
+        self.n_recomputes += 1
+
+    def solve(self, b: Array) -> CGResult:
+        return self._solve(self.hierarchy, b)

@@ -1,0 +1,57 @@
+"""Preconditioned conjugate gradients (the paper's Krylov accelerator).
+
+Convergence is monitored on the *unpreconditioned* residual norm, matching
+the paper's Sec. 4.1 ("with this norm the two formats converge in the same
+iteration count to the same true residual") — which makes the blocked/scalar
+iteration-parity test exact.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class CGResult(NamedTuple):
+    x: Array
+    iters: Array
+    relres: Array
+    converged: Array
+
+
+def pcg(apply_a: Callable[[Array], Array],
+        apply_m: Callable[[Array], Array],
+        b: Array, x0: Array | None = None, rtol: float = 1e-8,
+        maxiter: int = 200) -> CGResult:
+    """Standard PCG; fixed SPD preconditioner (one AMG V-cycle)."""
+    x = jnp.zeros_like(b) if x0 is None else x0
+    r = b - apply_a(x)
+    z = apply_m(r)
+    p = z
+    rz = jnp.vdot(r, z)
+    bnorm = jnp.maximum(jnp.linalg.norm(b), 1e-300)
+    rnorm = jnp.linalg.norm(r)
+
+    def cond(state):
+        x, r, z, p, rz, rnorm, k = state
+        return (rnorm > rtol * bnorm) & (k < maxiter)
+
+    def body(state):
+        x, r, z, p, rz, rnorm, k = state
+        Ap = apply_a(p)
+        alpha = rz / jnp.vdot(p, Ap)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        z = apply_m(r)
+        rz_new = jnp.vdot(r, z)
+        beta = rz_new / rz
+        p = z + beta * p
+        return x, r, z, p, rz_new, jnp.linalg.norm(r), k + 1
+
+    state = (x, r, z, p, rz, rnorm, jnp.asarray(0))
+    x, r, z, p, rz, rnorm, k = jax.lax.while_loop(cond, body, state)
+    return CGResult(x=x, iters=k, relres=rnorm / bnorm,
+                    converged=rnorm <= rtol * bnorm)

@@ -1,0 +1,73 @@
+"""Scalar AIJ (CSR) baseline — the format the paper compares against.
+
+The paper's point is precisely that GAMG historically *required* this
+expansion: every ``br x bc`` block becomes ``br*bc`` scalar entries, each
+carrying its own 4-byte column index (paper Sec. 2.3 byte accounting).  This
+module provides that expansion and keeps it quarantined: nothing on the
+blocked coarsening path imports it (asserted by
+``tests/test_no_scalar_expansion.py``), it exists only so the benchmarks can
+measure the scalar baseline the paper measures.
+
+A scalar CSR matrix is simply a ``BlockCSR`` with 1x1 blocks, so the whole
+numeric machinery (SpMV, two-phase SpGEMM, PtAP, COO) is reused verbatim at
+``bs=1`` — the same algorithm in both formats, which is what makes the
+iteration-count parity test (paper Sec. 4.1) meaningful.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.block_csr import BlockCSR
+
+
+def expand_bcsr(A: BlockCSR) -> BlockCSR:
+    """Expand blocked storage to scalar CSR (the AIJ conversion).
+
+    This is the conversion the paper *eliminates* from the coarsening path;
+    benchmarks use it to build the scalar baseline.
+    """
+    br, bc = A.br, A.bc
+    nbr = A.nbr
+    counts = np.diff(A.indptr)               # blocks per block row
+    # scalar row i = I*br + a has counts[I]*bc entries
+    s_counts = np.repeat(counts, br) * bc
+    s_indptr = np.zeros(nbr * br + 1, dtype=np.int64)
+    np.cumsum(s_counts, out=s_indptr[1:])
+    # entries of scalar row (I, a): for each block k in row I (in order),
+    # columns J*bc + [0..bc)
+    blk_rows = np.repeat(np.arange(nbr), counts)           # per block nnz
+    # order scalar entries as: block row I -> a in [0,br) -> block k -> b
+    # within-row block offsets:
+    order_cols = (A.indices[:, None] * bc
+                  + np.arange(bc)[None, :]).astype(np.int32)  # (nnzb, bc)
+    s_indices = np.empty(int(s_indptr[-1]), dtype=np.int32)
+    data = np.asarray(A.data)                                  # (nnzb,br,bc)
+    s_data = np.empty(int(s_indptr[-1]), dtype=data.dtype)
+    # vectorized fill: for each block nnz, its bc columns appear in br rows.
+    # scalar position of (block nnz k, a, b):
+    #   s_indptr[I*br + a] + (k - indptr[I])*bc + b
+    k_idx = np.arange(A.nnzb)
+    base_in_row = (k_idx - A.indptr[blk_rows]) * bc            # (nnzb,)
+    for a in range(br):
+        pos = s_indptr[blk_rows * br + a] + base_in_row        # (nnzb,)
+        cols_flat = order_cols.reshape(-1)
+        pos_flat = (pos[:, None] + np.arange(bc)[None, :]).reshape(-1)
+        s_indices[pos_flat] = cols_flat
+        s_data[pos_flat] = data[:, a, :].reshape(-1)
+    return BlockCSR.from_arrays(s_indptr, s_indices,
+                                s_data.reshape(-1, 1, 1), A.nbc * bc)
+
+
+def csr_matrix_bytes(A: BlockCSR, value_bytes: int = 8,
+                     index_bytes: int = 4) -> int:
+    """Steady-state matrix bytes in scalar CSR (paper Sec. 4.2 accounting)."""
+    nnz = A.nnzb * A.br * A.bc
+    nrows = A.nbr * A.br
+    return nnz * (value_bytes + index_bytes) + (nrows + 1) * 8
+
+
+def bcsr_matrix_bytes(A: BlockCSR, value_bytes: int = 8,
+                      index_bytes: int = 4) -> int:
+    """Steady-state matrix bytes in blocked storage: one index per block."""
+    return (A.nnzb * (A.br * A.bc * value_bytes + index_bytes)
+            + (A.nbr + 1) * 8)

@@ -1,0 +1,111 @@
+"""Scalar (AIJ) solve path — the paper's baseline, kept out of the blocked
+coarsening path.
+
+Builds a scalar-format hierarchy from the *same* GAMG setup: identical
+aggregates, prolongator values, smoother data and Chebyshev bounds, with the
+level operators and transfer operators expanded to 1x1-block CSR.  Because
+it is the same algorithm in a different storage format, CG converges in the
+*same iteration count to the same true residual* — the paper's Sec. 4.1
+parity claim, asserted by ``tests/test_amg_convergence.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.block_csr import BlockCSR
+from repro.core.gamg import GAMGSetup, _level_state
+from repro.core.ptap import ptap_numeric_data
+from repro.core.scalar_csr import expand_bcsr
+from repro.core.vcycle import Hierarchy, LevelState
+
+Array = jax.Array
+
+
+def expand_map(A: BlockCSR) -> "np.ndarray":
+    """Flat gather map: scalar CSR data = blocked.data.reshape(-1)[map].
+
+    Lets the scalar numeric path run as a pure jitted gather of the blocked
+    payloads (no host conversion on the timed path).
+    """
+    import numpy as np
+    br, bc = A.br, A.bc
+    counts = np.diff(A.indptr)
+    blk_rows = np.repeat(np.arange(A.nbr), counts)
+    k_idx = np.arange(A.nnzb)
+    base_in_row = (k_idx - A.indptr[blk_rows]) * bc
+    s_counts = np.repeat(counts, br) * bc
+    s_indptr = np.zeros(A.nbr * br + 1, dtype=np.int64)
+    np.cumsum(s_counts, out=s_indptr[1:])
+    out = np.empty(int(s_indptr[-1]), dtype=np.int64)
+    for a in range(br):
+        pos = s_indptr[blk_rows * br + a] + base_in_row
+        pos_flat = (pos[:, None] + np.arange(bc)[None, :]).reshape(-1)
+        src = (k_idx[:, None] * (br * bc) + a * bc
+               + np.arange(bc)[None, :]).reshape(-1)
+        out[pos_flat] = src
+    return out
+
+
+def build_scalar_ptap_chain(setupd: GAMGSetup):
+    """Scalar-format hot PtAP chain with cached symbolic plans.
+
+    Mirrors the blocked ``gamg.make_recompute`` PtAP chain but in expanded
+    AIJ storage: the cold phase expands every level operator/prolongator and
+    builds scalar SpGEMM plans; the returned jitted fn is numeric-only (the
+    scalar baseline's hot PtAP, paper Table 1).
+    """
+    import numpy as np
+    from repro.core.ptap import ptap_symbolic
+    stages = []
+    for ls in setupd.levels:
+        A_s = expand_bcsr(ls.A0)
+        P_s = expand_bcsr(ls.P)
+        cache_s = ptap_symbolic(A_s, P_s)
+        stages.append((expand_map(ls.A0), cache_s,
+                       P_s.data, ls.A0.br * ls.A0.bc))
+
+    # The scalar product pattern of expanded operators equals the expansion
+    # of the blocked product pattern (both keep all structural entries and
+    # sort by scalar (row, col)), so each level's scalar PtAP output feeds
+    # the next level's scalar PtAP directly — a pure scalar chain, exactly
+    # like the blocked one.  Verified in tests/test_scalar_chain.py.
+    def chain_full(a_fine_data: Array):
+        emap0 = stages[0][0]
+        s_data = a_fine_data.reshape(-1)[
+            jnp.asarray(emap0)].reshape(-1, 1, 1)
+        outs = []
+        for lvl, (emap, cache_s, p_data, area) in enumerate(stages):
+            if lvl > 0:
+                s_data = outs[-1]
+            outs.append(ptap_numeric_data(cache_s, s_data, p_data))
+        return outs
+
+    return jax.jit(chain_full)
+
+
+def recompute_scalar(setupd: GAMGSetup, a_fine_data: Array) -> Hierarchy:
+    """Numeric hierarchy rebuild with scalar-CSR level/transfer operators.
+
+    The PtAP chain itself still runs blocked (this is the paper's production
+    structure: the baseline differs in the *solve-phase format*); the
+    benchmark harness separately times scalar-format PtAP via expanded
+    SpGEMM plans (``benchmarks/table1_weak_scaling.py``).
+    """
+    states = []
+    a_data = a_fine_data
+    for ls in setupd.levels:
+        blocked = _level_state(ls, a_data)     # reuse dinv + lam (identical)
+        A = ls.A0.with_data(a_data)
+        a_ell = expand_bcsr(A).to_ell()
+        p_ell = expand_bcsr(ls.P).to_ell()
+        r_ell = expand_bcsr(ls.R).to_ell()
+        states.append(LevelState(a_ell=a_ell, p_ell=p_ell, r_ell=r_ell,
+                                 dinv=blocked.dinv, lam_max=blocked.lam_max))
+        a_data = ptap_numeric_data(ls.ptap_cache, a_data, ls.P.data)
+    Ac = setupd.coarse_struct.with_data(a_data)
+    dense = Ac.to_dense()
+    n = dense.shape[0]
+    jitter = 1e-12 * jnp.trace(dense) / n
+    chol = jnp.linalg.cholesky(dense + jitter * jnp.eye(n, dtype=dense.dtype))
+    return Hierarchy(levels=tuple(states), coarse_chol=chol)

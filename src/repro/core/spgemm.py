@@ -1,0 +1,198 @@
+"""Two-phase rectangular-block SpGEMM (C = A @ B).
+
+The Galerkin product is the paper's second hot kernel.  Mixed block sizes
+(A: br_a x k, B: k x bc_b) are exactly what the vendor square-BSR formats
+cannot express (paper Sec. 2.4) and what this module is templated on.
+
+Phases, mirroring cuSPARSE/PETSc symbolic+numeric:
+
+symbolic (host, cached)
+    Expand the multiply into a flat *pair list*: pair p contributes
+    ``A.data[pair_a[p]] @ B.data[pair_b[p]]`` to output block
+    ``out_idx[p]``.  Pairs are sorted by output slot, so the numeric scatter
+    is a sorted segment reduction.  The pair list is the JAX analogue of the
+    spgemm symbolic buffer whose bs^2-inflated scalar version OOMs the GPU in
+    paper Sec. 4.5 — ``plan_bytes``/``scalar_plan_bytes`` quantify that.
+
+numeric (device, jitted)
+    gather -> batched rectangular block GEMM -> sorted segment-sum.  The
+    batched GEMM is the MXU hot spot and has a Pallas kernel
+    (``repro.kernels.block_pair_gemm``); the segment-sum has
+    ``repro.kernels.block_seg_sum``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.block_csr import BlockCSR
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SpGEMMPlan:
+    """Cached symbolic phase of C = A @ B (structure-only function)."""
+
+    indptr: np.ndarray       # C structure
+    indices: np.ndarray
+    nbr: int                 # C block rows
+    nbc: int                 # C block cols
+    br: int                  # C block shape
+    bc: int
+    nnzb: int
+    pair_a: np.ndarray       # (npairs,) indices into A.data
+    pair_b: np.ndarray       # (npairs,) indices into B.data
+    out_idx: np.ndarray      # (npairs,) sorted output slot per pair
+    a_state: int             # state tokens of the operands the plan matches
+    b_state: int
+
+    @property
+    def npairs(self) -> int:
+        return int(self.pair_a.shape[0])
+
+    @property
+    def plan_bytes(self) -> int:
+        return (self.indptr.nbytes + self.indices.nbytes + self.pair_a.nbytes
+                + self.pair_b.nbytes + self.out_idx.nbytes)
+
+    def scalar_plan_bytes(self, bk: int) -> int:
+        """Pair-list bytes if the same product ran in scalar CSR.
+
+        Each block pair (br x bk)·(bk x bc) expands to br*bc output scalars
+        times bk scalar multiply pairs — the bs^2/bs^3 growth behind the
+        cuSPARSE symbolic-buffer OOM of paper Sec. 4.5.
+        """
+        scalar_pairs = self.npairs * self.br * self.bc * bk
+        scalar_nnz = self.nnzb * self.br * self.bc
+        return (8 * (self.nbr * self.br + 1) + 4 * scalar_nnz
+                + (4 + 4 + 4) * scalar_pairs)
+
+
+def spgemm_symbolic(A: BlockCSR, B: BlockCSR) -> SpGEMMPlan:
+    """Host symbolic phase: C structure + flat pair lists."""
+    assert A.nbc == B.nbr, (A.nbc, B.nbr)
+    assert A.bc == B.br, ("inner block size mismatch", A.bc, B.br)
+    nbr, nbc = A.nbr, B.nbc
+    a_counts = np.diff(A.indptr)
+    a_rows = np.repeat(np.arange(nbr, dtype=np.int64), a_counts)
+    j = A.indices.astype(np.int64)                    # mid index per A nnz
+    b_counts = np.diff(B.indptr)
+    per_a = b_counts[j]                               # B-row length per A nnz
+    total = int(per_a.sum())
+    pair_a = np.repeat(np.arange(A.nnzb, dtype=np.int64), per_a)
+    starts = np.repeat(B.indptr[j], per_a)
+    csum = np.zeros(A.nnzb + 1, dtype=np.int64)
+    np.cumsum(per_a, out=csum[1:])
+    within = np.arange(total, dtype=np.int64) - np.repeat(csum[:-1], per_a)
+    pair_b = starts + within
+    pair_row = np.repeat(a_rows, per_a)
+    pair_col = B.indices[pair_b].astype(np.int64)
+    # unique (row, col) -> C structure; sort pairs by output slot
+    key = pair_row * nbc + pair_col
+    order = np.argsort(key, kind="stable")
+    skey = key[order]
+    uniq, inv = np.unique(skey, return_inverse=True)
+    u_rows = uniq // nbc
+    u_cols = (uniq % nbc).astype(np.int32)
+    indptr = np.zeros(nbr + 1, dtype=np.int64)
+    np.add.at(indptr, u_rows + 1, 1)
+    indptr = np.cumsum(indptr)
+    return SpGEMMPlan(indptr=indptr, indices=u_cols, nbr=nbr, nbc=nbc,
+                      br=A.br, bc=B.bc, nnzb=len(uniq),
+                      pair_a=pair_a[order], pair_b=pair_b[order],
+                      out_idx=inv.astype(np.int32),
+                      a_state=A.state_token, b_state=B.state_token)
+
+
+def spgemm_numeric_data(plan: SpGEMMPlan, a_data: Array, b_data: Array, *,
+                        use_kernel: bool = False, interpret: bool = True
+                        ) -> Array:
+    """Device numeric phase -> C.data.  Pure function of the plan + values."""
+    pa = jnp.asarray(plan.pair_a)
+    pb = jnp.asarray(plan.pair_b)
+    seg = jnp.asarray(plan.out_idx)
+    lhs = a_data[pa]                     # (npairs, br, bk)
+    rhs = b_data[pb]                     # (npairs, bk, bc)
+    if use_kernel:
+        from repro.kernels.block_pair_gemm import ops as _kg
+        prod = _kg.block_pair_gemm(lhs, rhs, interpret=interpret)
+        from repro.kernels.block_seg_sum import ops as _ks
+        return _ks.block_seg_sum(prod, seg, plan.nnzb, interpret=interpret)
+    prod = jnp.einsum("pij,pjk->pik", lhs, rhs,
+                      preferred_element_type=a_data.dtype)
+    return jax.ops.segment_sum(prod, seg, num_segments=plan.nnzb,
+                               indices_are_sorted=True)
+
+
+def spgemm_numeric(plan: SpGEMMPlan, A: BlockCSR, B: BlockCSR, **kw
+                   ) -> BlockCSR:
+    data = spgemm_numeric_data(plan, A.data, B.data, **kw)
+    return BlockCSR.from_arrays(plan.indptr, plan.indices, data, plan.nbc)
+
+
+def spgemm(A: BlockCSR, B: BlockCSR, **kw) -> BlockCSR:
+    """One-shot product (symbolic + numeric).  Hot paths cache the plan."""
+    return spgemm_numeric(spgemm_symbolic(A, B), A, B, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Native block AXPY (paper Sec. 4.9 future work — implemented here).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockAXPYPlan:
+    """Union-sparsity plan for C = alpha*X + Y with different patterns.
+
+    PETSc's MatAXPY falls back to a scalar conversion when the operands do
+    not share a sparsity pattern — the one residual conversion in the
+    paper's cold path.  This plan makes it native: a one-time symbolic union
+    plus numeric scatter of both operands.
+    """
+    indptr: np.ndarray
+    indices: np.ndarray
+    nbr: int
+    nbc: int
+    x_slot: np.ndarray     # output slot of every X block
+    y_slot: np.ndarray     # output slot of every Y block
+    nnzb: int
+    x_state: int
+    y_state: int
+
+
+def block_axpy_symbolic(X: BlockCSR, Y: BlockCSR) -> BlockAXPYPlan:
+    assert X.nbr == Y.nbr and X.nbc == Y.nbc
+    assert X.block_shape == Y.block_shape
+    nbr, nbc = X.nbr, X.nbc
+    xr = np.repeat(np.arange(nbr, dtype=np.int64), np.diff(X.indptr))
+    yr = np.repeat(np.arange(nbr, dtype=np.int64), np.diff(Y.indptr))
+    keys = np.concatenate([xr * nbc + X.indices, yr * nbc + Y.indices])
+    uniq, inv = np.unique(keys, return_inverse=True)
+    indptr = np.zeros(nbr + 1, dtype=np.int64)
+    np.add.at(indptr, (uniq // nbc) + 1, 1)
+    return BlockAXPYPlan(indptr=np.cumsum(indptr),
+                         indices=(uniq % nbc).astype(np.int32),
+                         nbr=nbr, nbc=nbc,
+                         x_slot=inv[:X.nnzb].astype(np.int64),
+                         y_slot=inv[X.nnzb:].astype(np.int64),
+                         nnzb=len(uniq),
+                         x_state=X.state_token, y_state=Y.state_token)
+
+
+def block_axpy_numeric_data(plan: BlockAXPYPlan, alpha, x_data: Array,
+                            y_data: Array) -> Array:
+    br, bc = x_data.shape[1], x_data.shape[2]
+    out = jnp.zeros((plan.nnzb, br, bc), x_data.dtype)
+    out = out.at[jnp.asarray(plan.x_slot)].add(alpha * x_data)
+    out = out.at[jnp.asarray(plan.y_slot)].add(y_data)
+    return out
+
+
+def block_axpy(alpha, X: BlockCSR, Y: BlockCSR) -> BlockCSR:
+    """C = alpha*X + Y, natively blocked, no scalar conversion."""
+    plan = block_axpy_symbolic(X, Y)
+    data = block_axpy_numeric_data(plan, alpha, X.data, Y.data)
+    return BlockCSR.from_arrays(plan.indptr, plan.indices, data, plan.nbc)

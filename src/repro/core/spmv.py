@@ -1,0 +1,102 @@
+"""Blocked SpMV / SpMM — the V-cycle's dominant kernel (paper Sec. 4.2).
+
+The blocked SpMV moves one 4-byte column index per ``br x bc`` block instead
+of ``br*bc`` indexed scalars; for bs=3/fp64 that is 76 B per block vs 108 B
+scalar — the paper's 1.42x traffic ceiling.  ``benchmarks/table5_traffic.py``
+re-derives that accounting from these containers.
+
+Two execution paths:
+
+* ``spmv_ref`` — pure-jnp oracle over the ELL layout (always available).
+* ``spmv`` — dispatches to the Pallas TPU kernel (``repro.kernels.block_spmv``)
+  when ``use_kernel=True`` (validated in interpret mode on CPU), else the ref.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.block_csr import BlockCSR, BlockELL
+
+Array = jax.Array
+
+
+@jax.jit
+def spmv_ell(ell: BlockELL, x: Array) -> Array:
+    """y = A @ x on the padded ELL layout.  x: (nbc*bc,) -> y: (nbr*br,)."""
+    nbc, bc, br = ell.nbc, ell.bc, ell.br
+    xb = x.reshape(nbc, bc)
+    gathered = xb[ell.indices]  # (nbr, kmax, bc); padded rows hit col 0,
+    # but padded data blocks are exactly zero so they contribute nothing.
+    y = jnp.einsum("rkab,rkb->ra", ell.data, gathered,
+                   preferred_element_type=ell.data.dtype)
+    return y.reshape(ell.nbr * br)
+
+
+@jax.jit
+def spmm_ell(ell: BlockELL, X: Array) -> Array:
+    """Y = A @ X for multiple right-hand sides. X: (nbc*bc, m)."""
+    nbc, bc, br = ell.nbc, ell.bc, ell.br
+    m = X.shape[1]
+    xb = X.reshape(nbc, bc, m)
+    gathered = xb[ell.indices]  # (nbr, kmax, bc, m)
+    y = jnp.einsum("rkab,rkbm->ram", ell.data, gathered,
+                   preferred_element_type=ell.data.dtype)
+    return y.reshape(ell.nbr * br, m)
+
+
+def spmv_bcsr_ref(A: BlockCSR, x: Array) -> Array:
+    """Reference SpMV straight off BCSR (gather + segment-sum).
+
+    Used as the oracle for property tests; the production path is the ELL
+    kernel (regular layout — the TPU adaptation of the paper's BSR kernel).
+    """
+    rows = np.repeat(np.arange(A.nbr), np.diff(A.indptr))
+    xb = x.reshape(A.nbc, A.bc)
+    contrib = jnp.einsum("nab,nb->na", A.data, xb[A.indices])
+    y = jax.ops.segment_sum(contrib, jnp.asarray(rows), num_segments=A.nbr,
+                            indices_are_sorted=True)
+    return y.reshape(A.nbr * A.br)
+
+
+def spmv(A, x: Array, *, use_kernel: bool = False, interpret: bool = True
+         ) -> Array:
+    """Front door: accepts BlockCSR (converts) or BlockELL."""
+    ell = A.to_ell() if isinstance(A, BlockCSR) else A
+    if use_kernel:
+        from repro.kernels.block_spmv import ops as _k
+        return _k.block_spmv(ell, x, interpret=interpret)
+    return spmv_ell(ell, x)
+
+
+# ---------------------------------------------------------------------------
+# Scalar-CSR baseline SpMV (the format the paper compares against).
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("nrows",))
+def spmv_csr_ref(indices: Array, data: Array, row_of_nnz: Array, nrows: int,
+                 x: Array) -> Array:
+    """Scalar CSR SpMV via gather + sorted segment-sum (AIJ baseline)."""
+    contrib = data * x[indices]
+    return jax.ops.segment_sum(contrib, row_of_nnz, num_segments=nrows,
+                               indices_are_sorted=True)
+
+
+def residual(A, x: Array, b: Array, **kw) -> Array:
+    return b - spmv(A, x, **kw)
+
+
+@partial(jax.jit, static_argnames=("transpose_blocks",))
+def block_diag_apply(diag_inv: Array, x: Array,
+                     transpose_blocks: bool = False) -> Array:
+    """y_i = D_i^{-1} x_i given pre-inverted (nbr, bs, bs) diagonal blocks.
+
+    This is the point-block Jacobi application (paper's pbjacobi smoother).
+    """
+    nbr, bs = diag_inv.shape[0], diag_inv.shape[1]
+    xb = x.reshape(nbr, bs)
+    eq = "nba,nb->na" if transpose_blocks else "nab,nb->na"
+    return jnp.einsum(eq, diag_inv, xb).reshape(-1)

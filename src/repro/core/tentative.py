@@ -1,0 +1,74 @@
+"""Tentative prolongator from the near-null space (paper Sec. 2.2).
+
+Each aggregate contributes ``nns`` coarse degrees of freedom (six rigid-body
+modes for 3D elasticity), so the tentative prolongator P~ has rectangular
+``bs_f x nns`` blocks — the shape square-BSR vendor formats cannot store and
+the reason this framework exists.
+
+Construction: stack the near-null-space rows of every aggregate, batched
+(reduced) QR on device, Q gives the prolongator blocks and R the coarse
+near-null space.  Aggregates are padded to the maximum size with zero rows;
+because R is invertible (the aggregator guarantees >= nns rows per
+aggregate), padded rows of Q are exactly zero and are simply not stored.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import Aggregation
+from repro.core.block_csr import BlockCSR
+
+Array = jnp.ndarray
+
+
+def tentative_prolongator(aggr: Aggregation, B: Array, bs_f: int
+                          ) -> Tuple[BlockCSR, Array]:
+    """Build P~ (block rows = fine nodes, block cols = aggregates) and B_c.
+
+    B: (n_nodes * bs_f, nns) fine near-null space.
+    Returns (P~ as BlockCSR with (bs_f x nns) blocks, B_c (n_agg*nns, nns)).
+    """
+    n_nodes = len(aggr.node_to_agg)
+    nns = B.shape[1]
+    assert B.shape[0] == n_nodes * bs_f, (B.shape, n_nodes, bs_f)
+    sizes = aggr.sizes()
+    max_sz = int(sizes.max())
+    assert (sizes * bs_f >= nns).all(), (
+        "aggregate too small for full-rank tentative prolongator; "
+        "the aggregator's min_size repair should prevent this")
+    # order nodes by aggregate; position of each node within its aggregate
+    order = np.argsort(aggr.node_to_agg, kind="stable")
+    agg_sorted = aggr.node_to_agg[order]
+    starts = np.zeros(aggr.n_agg + 1, dtype=np.int64)
+    np.add.at(starts, agg_sorted + 1, 1)
+    starts = np.cumsum(starts)
+    pos_in_agg = np.arange(n_nodes) - starts[agg_sorted]
+
+    # padded per-aggregate near-null blocks: (n_agg, max_sz, bs_f, nns)
+    Bn = B.reshape(n_nodes, bs_f, nns)
+    padded = jnp.zeros((aggr.n_agg, max_sz, bs_f, nns), B.dtype)
+    padded = padded.at[agg_sorted, pos_in_agg].set(Bn[order])
+    stacked = padded.reshape(aggr.n_agg, max_sz * bs_f, nns)
+
+    Q, R = jnp.linalg.qr(stacked)            # (n_agg, max_sz*bs_f, nns)
+    # sign-fix for determinism: positive R diagonal
+    sgn = jnp.sign(jnp.diagonal(R, axis1=1, axis2=2))
+    sgn = jnp.where(sgn == 0, 1.0, sgn)
+    Q = Q * sgn[:, None, :]
+    R = R * sgn[:, :, None]
+
+    # extract each node's (bs_f x nns) slice of its aggregate's Q
+    Qb = Q.reshape(aggr.n_agg, max_sz, bs_f, nns)
+    p_data = Qb[agg_sorted, pos_in_agg]      # (n_nodes, bs_f, nns) sorted
+    # back to node order; one block per node row, column = aggregate
+    inv = np.empty(n_nodes, dtype=np.int64)
+    inv[order] = np.arange(n_nodes)
+    p_data = p_data[inv]
+    indptr = np.arange(n_nodes + 1, dtype=np.int64)
+    indices = aggr.node_to_agg.astype(np.int32)
+    P = BlockCSR.from_arrays(indptr, indices, p_data, aggr.n_agg)
+    B_c = R.reshape(aggr.n_agg * nns, nns)
+    return P, B_c

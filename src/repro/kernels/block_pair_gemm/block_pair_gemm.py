@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: batched rectangular block GEMM (SpGEMM numeric hot
+spot, paper Secs. 3.4/4.4).
+
+The numeric Galerkin phase is a stream of tiny rectangular products
+``(br x bk) @ (bk x bc)`` — the <3,3,6> shapes of the paper's
+``RunNumericAB_SeqBAIJKokkos<3,3,6>`` kernel (Table 5).  On the GPU these are
+one-warp-per-pair; on TPU the right shape is *batched VPU work*: a tile of
+``TP`` pairs is one ``(TP, br, bk) x (TP, bk, bc)`` contraction, unrolled
+over the tiny ``bk`` dimension so it maps onto 8x128 vector registers with
+the pair dimension on the lanes.
+
+The arithmetic-intensity argument (paper Sec. 4.7) carries over: a pair
+moves O(bs^2) bytes and performs O(bs^3) flops plus one amortized index; at
+bs=3..6 and fp64 this stays far below the TPU ridge, so the kernel is
+bandwidth-bound and the win is moving bs^2x fewer index bytes.
+
+Layout / tiling
+  grid     = (ceil(npairs / TP),)
+  lhs tile = (TP, br, bk)  VMEM
+  rhs tile = (TP, bk, bc)  VMEM
+  out tile = (TP, br, bc)  VMEM
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pair_gemm_kernel(lhs_ref, rhs_ref, o_ref):
+    lhs = lhs_ref[...]          # (TP, br, bk)
+    rhs = rhs_ref[...]          # (TP, bk, bc)
+    # unroll the tiny contraction dim: TP stays on lanes, no transposes
+    acc = jnp.zeros(o_ref.shape, o_ref.dtype)
+    for k in range(lhs.shape[2]):
+        acc = acc + lhs[:, :, k][:, :, None] * rhs[:, k, :][:, None, :]
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("tile_pairs", "interpret"))
+def block_pair_gemm(lhs: jax.Array, rhs: jax.Array, *,
+                    tile_pairs: int = 128, interpret: bool = True
+                    ) -> jax.Array:
+    """(npairs, br, bk) @ (npairs, bk, bc) -> (npairs, br, bc)."""
+    npairs, br, bk = lhs.shape
+    _, bk2, bc = rhs.shape
+    assert bk == bk2, (bk, bk2)
+    tp = min(tile_pairs, max(npairs, 1))
+    pad = (-npairs) % tp
+    if pad:
+        lhs = jnp.pad(lhs, ((0, pad), (0, 0), (0, 0)))
+        rhs = jnp.pad(rhs, ((0, pad), (0, 0), (0, 0)))
+    grid = ((npairs + pad) // tp,)
+    out = pl.pallas_call(
+        _pair_gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tp, br, bk), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tp, bk, bc), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tp, br, bc), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((npairs + pad, br, bc), lhs.dtype),
+        interpret=interpret,
+    )(lhs, rhs)
+    return out[:npairs]

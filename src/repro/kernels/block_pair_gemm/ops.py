@@ -1,0 +1,4 @@
+"""Jit'd wrapper for the batched block GEMM kernel."""
+from repro.kernels.block_pair_gemm.block_pair_gemm import block_pair_gemm
+
+__all__ = ["block_pair_gemm"]

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the batched rectangular block GEMM kernel."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def block_pair_gemm_ref(lhs: jax.Array, rhs: jax.Array) -> jax.Array:
+    return jnp.einsum("pij,pjk->pik", lhs, rhs,
+                      preferred_element_type=lhs.dtype)

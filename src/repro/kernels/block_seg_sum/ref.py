@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the blocked segment reduction."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments",))
+def block_seg_sum_ref(vals: jax.Array, seg_ids: jax.Array,
+                      num_segments: int) -> jax.Array:
+    return jax.ops.segment_sum(vals, seg_ids, num_segments=num_segments,
+                               indices_are_sorted=True)

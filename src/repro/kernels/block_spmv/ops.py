@@ -1,0 +1,16 @@
+"""Jit'd wrapper dispatching the blocked SpMV kernel on a BlockELL."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.block_csr import BlockELL
+from repro.kernels.block_spmv.block_spmv import block_spmv_ell
+
+
+def block_spmv(ell: BlockELL, x: jax.Array, *, interpret: bool = True,
+               tile_rows: int = 8) -> jax.Array:
+    """y = A @ x, flat vectors in/out (matches repro.core.spmv.spmv_ell)."""
+    xb = x.reshape(ell.nbc, ell.bc)
+    y = block_spmv_ell(ell.indices, ell.data, xb, tile_rows=tile_rows,
+                       interpret=interpret)
+    return y.reshape(ell.nbr * ell.br)

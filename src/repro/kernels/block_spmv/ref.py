@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the blocked ELL SpMV kernel."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def block_spmv_ell_ref(indices: jax.Array, data: jax.Array,
+                       x_blocks: jax.Array) -> jax.Array:
+    """Same contract as the kernel: (nbr, kmax) x (nbr,kmax,br,bc) -> y."""
+    xg = x_blocks[indices]  # (nbr, kmax, bc)
+    return jnp.einsum("rkab,rkb->ra", data, xg,
+                      preferred_element_type=data.dtype)

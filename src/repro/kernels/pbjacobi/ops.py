@@ -1,0 +1,15 @@
+"""Jit'd wrapper for the pbjacobi smoother update on flat vectors."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.pbjacobi.pbjacobi import pbjacobi_update
+
+
+def pbjacobi_apply(dinv: jax.Array, r: jax.Array, x: jax.Array, omega,
+                   *, interpret: bool = True) -> jax.Array:
+    """Flat-vector front door: x, r are (nbr*bs,)."""
+    nbr, bs, _ = dinv.shape
+    out = pbjacobi_update(dinv, r.reshape(nbr, bs), x.reshape(nbr, bs),
+                          omega, interpret=interpret)
+    return out.reshape(-1)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the fused pbjacobi update."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def pbjacobi_update_ref(dinv: jax.Array, r: jax.Array, x: jax.Array,
+                        omega) -> jax.Array:
+    return x + omega * jnp.einsum("nab,nb->na", dinv, r,
+                                  preferred_element_type=dinv.dtype)

@@ -1,0 +1,247 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  This module is the ONLY place the 512 placeholder
+# devices exist; tests and benches see 1 device.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell: build ShapeDtypeStruct inputs + NamedShardings, ``.lower()``
++ ``.compile()`` on the single-pod (16,16) and multi-pod (2,16,16) meshes,
+record ``memory_analysis()`` (fits-per-device proof), ``cost_analysis()``
+(FLOPs/bytes for the roofline) and the collective-op byte census parsed from
+the compiled HLO.  Results append incrementally to
+``launch_artifacts/dryrun_results.json`` so interrupted sweeps resume.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun             # full sweep
+  ... dryrun --arch qwen2-0.5b --shape train_4k --mesh single
+  ... dryrun --amg                                         # AMG solver rows
+"""
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch import specs as S                 # noqa: E402
+from repro.models.config import (                   # noqa: E402
+    LM_SHAPES,
+    cell_applicable,
+    shape_by_name,
+)
+from repro.configs.registry import ARCH_IDS, get_config  # noqa: E402
+from repro.models.sharding import axis_env          # noqa: E402
+from repro.train.optimizer import AdamWConfig       # noqa: E402
+from repro.train.steps import (                     # noqa: E402
+    make_prefill,
+    make_serve_step,
+    make_train_step,
+)
+
+RESULTS_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))))),
+    "launch_artifacts", "dryrun_results.json")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\]\S*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def collective_census(hlo_text: str) -> dict:
+    """Sum result bytes of every collective op, by op kind (per device)."""
+    out = {k: {"bytes": 0, "count": 0}
+           for k in ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")}
+    seen_done = set()
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes_blob, kind = m.group(1), m.group(2)
+        # async pairs appear as -start/-done; count each channel once
+        span_line = hlo_text[:m.start()].rfind("\n")
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(shapes_blob):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        key = (kind, m.start())
+        if "-done" in hlo_text[m.start():m.end()]:
+            continue  # counted at -start
+        out[kind]["bytes"] += nbytes
+        out[kind]["count"] += 1
+    out["total_bytes"] = sum(v["bytes"] for v in out.values()
+                             if isinstance(v, dict))
+    return out
+
+
+def _load_results() -> dict:
+    if os.path.exists(RESULTS_PATH):
+        with open(RESULTS_PATH) as f:
+            return json.load(f)
+    return {}
+
+
+def _save_results(res: dict) -> None:
+    os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
+    tmp = RESULTS_PATH + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(res, f, indent=1, sort_keys=True)
+    os.replace(tmp, RESULTS_PATH)
+
+
+def _probe_config(cfg, depth: int):
+    """Same model at scan depth ``depth`` (for loop-cost decomposition).
+
+    XLA's cost_analysis counts a while-loop body ONCE regardless of trip
+    count (verified empirically), so the roofline derives per-layer costs
+    from two shallow probes: body = cost(d=2) - cost(d=1), outside =
+    cost(d=1) - body, total = outside + n_units * body.
+    """
+    import dataclasses
+    per_unit = 2 if (cfg.moe and cfg.moe.moe_every == 2) else 1
+    kw = {"n_layers": depth * per_unit}
+    if cfg.encdec is not None:
+        kw["encdec"] = dataclasses.replace(cfg.encdec,
+                                           n_encoder_layers=depth)
+    return dataclasses.replace(cfg, **kw)
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             variant: str = "base", depth_override: int | None = None
+             ) -> dict:
+    """Lower+compile one cell; returns the recorded analysis dict."""
+    from repro.models import transformer as _T
+    cfg = get_config(arch)
+    _T.UNROLL_LAYERS = depth_override is not None
+    if depth_override is not None:
+        cfg = _probe_config(cfg, depth_override)
+    shape = shape_by_name(shape_name)
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        return {"status": "SKIP", "reason": why}
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    da = ("pod", "data") if mesh_name == "multi" else ("data",)
+    t0 = time.time()
+    cell = S.build_cell(cfg, shape, mesh)
+    if cell.kind == "train":
+        fn = make_train_step(cfg, AdamWConfig())
+    elif cell.kind == "prefill":
+        fn = make_prefill(cfg)
+    else:
+        fn = make_serve_step(cfg)
+    donate = (1,) if cell.kind == "decode" else ()  # cache aliases in place
+    with mesh, axis_env(da, "model", dict(mesh.shape)):
+        jitted = jax.jit(fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    census = collective_census(compiled.as_text())
+    rec = {
+        "status": "OK",
+        "kind": cell.kind,
+        "mesh": list(mesh.devices.shape),
+        "n_devices": mesh.devices.size,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "peak_bytes": int(getattr(ma, "peak_memory_in_bytes", 0)),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+        },
+        "cost": {
+            "flops_per_device": float(ca.get("flops", -1.0)),
+            "bytes_accessed_per_device": float(ca.get("bytes accessed",
+                                                      -1.0)),
+        },
+        "collectives": census,
+    }
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=[None, "single",
+                                                     "multi"])
+    ap.add_argument("--variant", default="base",
+                    help="perf-iteration tag recorded alongside results")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--amg", action="store_true",
+                    help="run the distributed-AMG dry-run rows instead")
+    ap.add_argument("--probe", action="store_true",
+                    help="lower depth-1/2 probes (loop-cost decomposition)")
+    args = ap.parse_args()
+
+    if args.amg:
+        from repro.launch.dryrun_amg import run_amg_dryrun
+        return run_amg_dryrun(force=args.force)
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else [s.name for s in LM_SHAPES]
+    meshes = [args.mesh] if args.mesh else ["single", "multi"]
+    depths = [1, 2] if args.probe else [None]
+    results = _load_results()
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+              for depth in depths:
+                if depth is None:
+                    variant = args.variant
+                elif args.variant == "base":
+                    variant = f"probe-d{depth}"
+                else:
+                    variant = f"{args.variant}-probe-d{depth}"
+                key = f"{arch}|{shape}|{mesh_name}|{variant}"
+                if key in results and not args.force \
+                        and results[key].get("status") in ("OK", "SKIP"):
+                    print(f"[cached] {key}: {results[key]['status']}")
+                    continue
+                print(f"[run]    {key} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape, mesh_name, variant,
+                                   depth_override=depth)
+                except Exception as e:  # record failures: they are bugs
+                    rec = {"status": "FAIL", "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                    failures += 1
+                results[key] = rec
+                _save_results(results)
+                if rec["status"] == "OK":
+                    mb = rec["memory"]["peak_bytes"] / 2**20
+                    print(f"         OK kind={rec['kind']} "
+                          f"compile={rec['compile_s']}s "
+                          f"peak/dev={mb:.0f}MiB "
+                          f"coll={rec['collectives']['total_bytes']/2**20:.1f}"
+                          f"MiB", flush=True)
+                else:
+                    print(f"         {rec['status']}: "
+                          f"{rec.get('reason', rec.get('error'))}",
+                          flush=True)
+    print(f"done; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,251 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, from the compiled dry-run:
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / link_bw
+
+(cost_analysis on the SPMD-partitioned module is already per-device, so no
+division by chip count is needed — verified against a hand-counted matmul.)
+
+Also reports MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per device,
+the MODEL_FLOPS/HLO ratio (useful-compute fraction; catches remat and
+dispatch waste), the dominant term, and the roofline fraction
+T_ideal / T_bound where T_ideal = MODEL_FLOPS/peak and T_bound = max(terms).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (one direction)
+
+RESULTS_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))))),
+    "launch_artifacts", "dryrun_results.json")
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS: 6*N*D training, 2*N*D per generated token for decode
+# ---------------------------------------------------------------------------
+
+def model_params(arch: str) -> Dict[str, float]:
+    """Total and active parameter counts from the abstract param tree."""
+    from repro.configs.registry import get_config
+    from repro.launch.specs import abstract_params
+    import jax
+    import numpy as np
+    cfg = get_config(arch)
+    params = abstract_params(cfg)
+    total = 0
+    active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        n = int(np.prod(leaf.shape))
+        total += n
+        if "we_" in name and cfg.moe:                 # routed experts
+            frac = min(1.0, cfg.moe.top_k / cfg.moe.n_experts)
+            active += n * frac
+        elif name.endswith("embed") or "lm_head" in name:
+            active += 0      # embedding lookups are not matmul FLOPs
+        else:
+            active += n
+    return {"total": total, "active": active}
+
+
+def model_flops(arch: str, shape_kind: str, seq_len: int, global_batch: int,
+                n_devices: int) -> float:
+    """Useful model FLOPs per device for one step."""
+    mp = model_params(arch)
+    if shape_kind == "train":
+        tokens = seq_len * global_batch
+        return 6.0 * mp["active"] * tokens / n_devices
+    if shape_kind == "prefill":
+        tokens = seq_len * global_batch
+        return 2.0 * mp["active"] * tokens / n_devices
+    # decode: one token per sequence
+    return 2.0 * mp["active"] * global_batch / n_devices
+
+
+def _n_units(arch: str) -> int:
+    from repro.configs.registry import get_config
+    cfg = get_config(arch)
+    per = 2 if (cfg.moe and cfg.moe.moe_every == 2) else 1
+    return cfg.n_layers // per
+
+
+def _loop_corrected(base: float, d1: float, d2: float, units: int) -> float:
+    """outside + units*body, from depth-1/2 probes (XLA counts a while-loop
+    body once, so body = d2-d1, outside = d1-body)."""
+    body = max(d2 - d1, 0.0)
+    outside = max(d1 - body, 0.0)
+    return outside + units * body
+
+
+def _ssm_scan_terms(arch: str, kind: str, seq_len: int, global_batch: int,
+                    ndev: int):
+    """Analytic flops/bytes of the chunked selective scan.
+
+    The inner chunk loop is opaque to both cost_analysis and the depth
+    probes (nested while body counted once); its matmul-free elementwise
+    traffic is significant for SSM archs, so it is added analytically:
+    ~6 array passes over (B, S, Din, N) fp32, ~10 flops/element.
+    """
+    from repro.configs.registry import get_config
+    cfg = get_config(arch)
+    if cfg.ssm is None or kind == "decode":
+        return 0.0, 0.0
+    d_in = cfg.ssm.expand * cfg.d_model
+    n = cfg.ssm.d_state
+    elems = (seq_len * global_batch) * d_in * n / ndev  # per layer
+    return 10.0 * elems * cfg.n_layers, 6.0 * 4.0 * elems * cfg.n_layers
+
+
+def _model_min_bytes(arch: str, kind: str, seq_len: int, global_batch: int,
+                     ndev: int) -> float:
+    """Lower bound on bytes/step/device: touch active params (bf16) once,
+    plus (decode) read the KV/state cache once — the bandwidth floor that
+    makes decode roofline fractions meaningful."""
+    mp = model_params(arch)
+    param_bytes = 2.0 * mp["active"] / ndev
+    if kind != "decode":
+        return param_bytes
+    from repro.configs.registry import get_config
+    from repro.launch.specs import abstract_params  # noqa: F401
+    import jax
+    import numpy as np
+    from repro.models import transformer as T
+    import jax.numpy as jnp
+    cfg = get_config(arch)
+    cache = jax.eval_shape(lambda: T.init_full_cache(
+        cfg, global_batch, seq_len, cdt=jnp.bfloat16))
+    cache_bytes = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                      for l in jax.tree_util.tree_leaves(cache))
+    return param_bytes + cache_bytes / ndev
+
+
+def analyze_cell(key: str, rec: dict, probes: Optional[dict] = None
+                 ) -> Optional[dict]:
+    if rec.get("status") != "OK":
+        return None
+    arch, shape, mesh, variant = key.split("|")
+    from repro.models.config import shape_by_name
+    sh = shape_by_name(shape)
+    ndev = rec["n_devices"]
+    flops_dev = rec["cost"]["flops_per_device"]
+    bytes_dev = rec["cost"]["bytes_accessed_per_device"]
+    coll_dev = rec["collectives"]["total_bytes"]
+    corrected = False
+    if probes:
+        pfx = "probe" if variant == "base" else f"{variant}-probe"
+        d1 = probes.get(f"{arch}|{shape}|single|{pfx}-d1")
+        d2 = probes.get(f"{arch}|{shape}|single|{pfx}-d2")
+        if d1 and d2 and d1.get("status") == "OK" \
+                and d2.get("status") == "OK":
+            units = _n_units(arch)
+            flops_dev = _loop_corrected(
+                flops_dev, d1["cost"]["flops_per_device"],
+                d2["cost"]["flops_per_device"], units)
+            bytes_dev = _loop_corrected(
+                bytes_dev, d1["cost"]["bytes_accessed_per_device"],
+                d2["cost"]["bytes_accessed_per_device"], units)
+            coll_dev = _loop_corrected(
+                coll_dev, d1["collectives"]["total_bytes"],
+                d2["collectives"]["total_bytes"], units)
+            corrected = True
+    sf, sb = _ssm_scan_terms(arch, rec["kind"], sh.seq_len,
+                             sh.global_batch, ndev)
+    flops_dev += sf
+    bytes_dev += sb
+    t_comp = flops_dev / PEAK_FLOPS
+    t_mem = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    mf = model_flops(arch, rec["kind"], sh.seq_len, sh.global_batch, ndev)
+    mb = _model_min_bytes(arch, rec["kind"], sh.seq_len, sh.global_batch,
+                          ndev)
+    t_ideal = max(mf / PEAK_FLOPS, mb / HBM_BW)
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    t_bound = terms[dominant]
+    return {
+        "key": key, "arch": arch, "shape": shape, "mesh": mesh,
+        "variant": variant, "kind": rec["kind"], "n_devices": ndev,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_device": mf,
+        "hlo_flops_per_device": flops_dev,
+        "useful_fraction": mf / flops_dev if flops_dev > 0 else 0.0,
+        "roofline_fraction": t_ideal / t_bound if t_bound > 0 else 0.0,
+        "peak_bytes_per_device": rec["memory"]["peak_bytes"],
+        "fits_16g": rec["memory"]["peak_bytes"] < 16e9,
+        "loop_corrected": corrected,
+    }
+
+
+def analyze_all(variant: str = "base") -> list:
+    with open(RESULTS_PATH) as f:
+        results = json.load(f)
+    probes = {k: v for k, v in results.items() if "|probe-" in k}
+    rows = []
+    for key, rec in sorted(results.items()):
+        if not key.endswith("|" + variant) or key.startswith("amg-"):
+            continue
+        row = analyze_cell(key, rec, probes)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def markdown_table(rows: list) -> str:
+    hdr = ("| arch | shape | mesh | kind | compute s | memory s | coll s | "
+           "dominant | useful | roofline | peak GiB | fits 16G |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['kind']} | "
+            f"{r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} | "
+            f"{r['t_collective_s']:.2e} | **{r['dominant']}** | "
+            f"{r['useful_fraction']:.2f} | {r['roofline_fraction']:.3f} | "
+            f"{r['peak_bytes_per_device']/2**30:.1f} | "
+            f"{'Y' if r['fits_16g'] else 'N'} |\n")
+    return "".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    rows = analyze_all(args.variant)
+    if args.json:
+        print(json.dumps(rows, indent=1))
+    else:
+        print(markdown_table(rows))
+        worst = sorted((r for r in rows if r["mesh"] == "single"),
+                       key=lambda r: r["roofline_fraction"])
+        if worst:
+            print("\nworst roofline fraction (single-pod):")
+            for r in worst[:5]:
+                print(f"  {r['arch']} {r['shape']}: "
+                      f"{r['roofline_fraction']:.3f} ({r['dominant']})")
+            coll = sorted((r for r in rows if r["mesh"] == "single"),
+                          key=lambda r: -r["t_collective_s"])
+            print("most collective-bound (single-pod):")
+            for r in coll[:5]:
+                print(f"  {r['arch']} {r['shape']}: "
+                      f"coll={r['t_collective_s']:.2e}s "
+                      f"({r['dominant']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,188 @@
+"""input_specs + sharding construction for every (arch x shape x mesh) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every input of the
+lowered step (params, optimizer state, batch / cache) — weak-type-correct,
+shardable, no device allocation.  ``cell_shardings`` pairs them with
+NamedShardings: FSDP x TP for parameters (divisibility-sanitized per mesh),
+batch over the data axes, decode caches sequence-sharded over "model".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import axis_size, data_axes
+from repro.models import transformer as T
+from repro.models.config import ModelConfig, ShapeSpec
+from repro.models.sharding import tree_partition_specs
+from repro.train.optimizer import init_opt_state
+from repro.train.steps import make_init
+
+Array = jax.Array
+
+
+def _sds(tree):
+    """Pytree -> ShapeDtypeStruct pytree (no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs via eval_shape (never materialized)."""
+    return jax.eval_shape(make_init(cfg), jax.random.key(0))
+
+
+def abstract_opt_state(params):
+    return jax.eval_shape(init_opt_state, params)
+
+
+def sanitize_spec(spec: P, shape: Tuple[int, ...], mesh) -> P:
+    """Drop mesh axes that do not divide the corresponding dim."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, part in zip(shape, parts):
+        if part is None:
+            out.append(None)
+            continue
+        if dim % axis_size(mesh, part) != 0:
+            out.append(None)
+        else:
+            out.append(part)
+    return P(*out)
+
+
+def tree_shardings(tree, specs, mesh):
+    return jax.tree_util.tree_map(
+        lambda leaf, spec: NamedSharding(
+            mesh, sanitize_spec(spec, leaf.shape, mesh)),
+        tree, specs)
+
+
+def param_shardings(cfg: ModelConfig, mesh):
+    params = abstract_params(cfg)
+    specs = tree_partition_specs(params, data_axes=data_axes(mesh),
+                                 model_axis="model")
+    return params, tree_shardings(params, specs, mesh)
+
+
+def _batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    da = data_axes(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    specs = {"tokens": P(da, None), "labels": P(da, None)}
+    if cfg.encdec is not None:
+        e = cfg.encdec
+        batch["enc_feats"] = jax.ShapeDtypeStruct(
+            (B, e.encoder_frames, cfg.d_model), jnp.float32)
+        specs["enc_feats"] = P(da, None, None)
+    return batch, specs
+
+
+def _cache_spec_tree(cfg: ModelConfig, cache, mesh):
+    """Decode-cache PartitionSpecs: batch over data, long dims over model.
+
+    K/V caches shard over *kv heads* when the TP degree divides them, else
+    over sequence — matching the in-kernel attention strategy.  A mismatch
+    makes XLA re-shard the full cache every layer every step (measured 30x
+    the cache-read floor on gemma-7b decode_32k — §Perf iteration 6).
+    """
+    ms = axis_size(mesh, "model")
+
+    def spec_of(path, leaf):
+        name = str(path[-1].key)
+        nd = leaf.ndim
+        if name in ("k", "v"):          # (L, B, S, Hkv, hd)
+            if cfg.n_kv_heads % ms == 0:
+                return P(None, "data", None, "model", None)
+            return P(None, "data", "model", None, None)
+        if name == "c_kv" or name == "k_rope":   # (L, B, S, r)
+            return P(None, "data", "model", None)
+        if name == "conv":              # (L, B, K, Din)
+            return P(None, "data", None, "model")
+        if name == "ssm":               # (L, B, Din, N)
+            return P(None, "data", "model", None)
+        return P(*([None] * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_of(p, l) for p, l in flat])
+
+
+@dataclasses.dataclass
+class CellSpec:
+    """Everything needed to lower one (arch x shape x mesh) cell."""
+    kind: str                  # train|prefill|decode
+    args: tuple                # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh) -> CellSpec:
+    da = data_axes(mesh)
+    params, p_shard = param_shardings(cfg, mesh)
+    if shape.kind == "train":
+        opt = abstract_opt_state(params)
+        # optimizer moments shard exactly like their parameters (ZeRO)
+        o_shard = {"mu": p_shard, "nu": p_shard,
+                   "step": NamedSharding(mesh, P())}
+        batch, b_specs = _batch_specs(cfg, shape, mesh)
+        b_shard = jax.tree_util.tree_map(
+            lambda l, s: NamedSharding(mesh, sanitize_spec(s, l.shape,
+                                                           mesh)),
+            batch, b_specs)
+        return CellSpec(
+            kind="train",
+            args=(params, opt, batch),
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard,
+                           {"loss": NamedSharding(mesh, P()),
+                            "grad_norm": NamedSharding(mesh, P())}))
+    if shape.kind == "prefill":
+        batch, b_specs = _batch_specs(cfg, shape, mesh)
+        logits_shard = NamedSharding(mesh, sanitize_spec(
+            P(da, None, "model"),
+            (shape.global_batch, shape.seq_len, cfg.vocab_size), mesh))
+        args = [params, batch["tokens"]]
+        shards = [p_shard, b_shard_one(batch["tokens"], b_specs["tokens"],
+                                       mesh)]
+        if cfg.encdec is not None:
+            args.append(batch["enc_feats"])
+            shards.append(b_shard_one(batch["enc_feats"],
+                                      b_specs["enc_feats"], mesh))
+        return CellSpec(kind="prefill", args=tuple(args),
+                        in_shardings=tuple(shards),
+                        out_shardings=logits_shard)
+    # decode: one new token against a seq_len cache
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(
+        lambda: T.init_full_cache(cfg, B, S, cdt=jnp.bfloat16))
+    c_specs = _cache_spec_tree(cfg, cache, mesh)
+    c_shard = tree_shardings(cache, c_specs, mesh)
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_shard = NamedSharding(mesh, sanitize_spec(P(da, None),
+                                                  (B, 1), mesh))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_shard = NamedSharding(mesh, P())
+    args = [params, cache, token, pos]
+    shards = [p_shard, c_shard, tok_shard, pos_shard]
+    if cfg.encdec is not None:
+        enc_out = jax.ShapeDtypeStruct(
+            (B, cfg.encdec.encoder_frames, cfg.d_model), jnp.bfloat16)
+        args.append(enc_out)
+        shards.append(NamedSharding(
+            mesh, sanitize_spec(P(da, None, None), enc_out.shape, mesh)))
+    logits_shard = NamedSharding(mesh, sanitize_spec(
+        P(da, None, "model"), (B, 1, cfg.vocab_size), mesh))
+    return CellSpec(kind="decode", args=tuple(args),
+                    in_shardings=tuple(shards),
+                    out_shardings=(logits_shard, c_shard))
+
+
+def b_shard_one(leaf, spec, mesh):
+    return NamedSharding(mesh, sanitize_spec(spec, leaf.shape, mesh))

@@ -1,0 +1,557 @@
+"""Model layers: norms, RoPE, GQA/MLA attention, GLU FFN, MoE, Mamba.
+
+Pure-functional JAX (param pytrees + apply functions), no framework.
+Conventions:
+
+* params are kept fp32 (master copies); compute casts to ``cdt`` (bf16 on
+  TPU) at use sites; softmax/scan accumulations run fp32.
+* activation tensors are (B, S, D); attention internals (B, S, H, hd).
+* every layer has a paired decode form operating on one new token + cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import MLAConfig, ModelConfig, MoEConfig, SSMConfig
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, scale_dim=None):
+    scale = 1.0 / np.sqrt(scale_dim if scale_dim else shape[0])
+    return (jax.random.normal(key, shape, jnp.float32) * scale)
+
+
+def rms_norm(x: Array, w: Array, eps: float = 1e-6) -> Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions: Array, dim: int, theta: float
+                 ) -> Tuple[Array, Array]:
+    """positions (...,) -> cos/sin tables (..., dim/2) in fp32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x (B, S, H, hd); cos/sin (B?, S, hd/2) broadcast over heads."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c],
+                           axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, cfg.n_heads * hd)),
+        "wk": _dense_init(ks[1], (d, cfg.n_kv_heads * hd)),
+        "wv": _dense_init(ks[2], (d, cfg.n_kv_heads * hd)),
+        "wo": _dense_init(ks[3], (cfg.n_heads * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.float32)
+    return p
+
+
+def _qkv(p: Params, x: Array, cfg: ModelConfig, cdt) -> Tuple[Array, ...]:
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"].astype(cdt)
+    k = x @ p["wk"].astype(cdt)
+    v = x @ p["wv"].astype(cdt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cdt)
+        k = k + p["bk"].astype(cdt)
+        v = v + p["bv"].astype(cdt)
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def _sdpa(q: Array, k: Array, v: Array, mask: Optional[Array],
+          n_kv_heads: int) -> Array:
+    """Grouped scaled-dot-product attention; softmax in fp32.
+
+    q (B,Sq,H,hd), k/v (B,Sk,Hkv,hd); H = G*Hkv.  Attention internals are
+    sharded over kv-heads when the TP degree divides them, else over the
+    query sequence (sequence parallelism) — see sharding.constrain_heads.
+    """
+    from repro.models.sharding import attn_strategy, constrain_heads
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    G = H // n_kv_heads
+    strategy = attn_strategy(H, n_kv_heads)
+    if strategy == "repeat":
+        # materialize repeated K/V so every attention tensor carries the
+        # TP-divisible H axis (see sharding.attn_strategy docstring)
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        q = constrain_heads(q, head_axis=2)
+        k = constrain_heads(k, head_axis=2)
+        v = constrain_heads(v, head_axis=2)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                            preferred_element_type=jnp.float32)
+        scores = constrain_heads(scores, head_axis=1) / np.sqrt(hd)
+        if mask is not None:
+            scores = jnp.where(mask[:, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        probs = constrain_heads(probs, head_axis=1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", probs, v,
+                         preferred_element_type=jnp.float32).astype(q.dtype)
+        return constrain_heads(ctx, head_axis=2)
+    qg = q.reshape(B, Sq, n_kv_heads, G, hd)
+    if Sq == 1 and strategy != "kv":
+        # decode with TP-indivisible heads: keep the cache key-sequence
+        # sharded (matches the cache layout; softmax partials combine via
+        # psum) instead of moving the whole cache every layer
+        qg = constrain_heads(qg, head_axis=2)
+        k = constrain_heads(k, head_axis=2, seq_axis=1)
+        v = constrain_heads(v, head_axis=2, seq_axis=1)
+    else:
+        qg = constrain_heads(qg, head_axis=2, seq_axis=1)
+        k = constrain_heads(k, head_axis=2)   # training: K/V stay whole
+        v = constrain_heads(v, head_axis=2)
+    score_seq_axis = 4 if (Sq == 1 and strategy != "kv") else 3
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = constrain_heads(scores, head_axis=1, seq_axis=score_seq_axis)
+    scores = scores / np.sqrt(hd)
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    probs = constrain_heads(probs, head_axis=1, seq_axis=score_seq_axis)
+    ctx = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v,
+                     preferred_element_type=jnp.float32).astype(q.dtype)
+    # pin ctx to the same heads-or-seq layout so forward and transpose
+    # (backward) agree — otherwise XLA re-shards the remat'd probs tensor
+    ctx = constrain_heads(ctx, head_axis=2, seq_axis=1)
+    return ctx.reshape(B, Sq, H, hd)
+
+
+def causal_mask(Sq: int, Sk: int, window: Optional[int] = None,
+                offset: int = 0) -> Array:
+    """(1, Sq, Sk) boolean keep-mask: causal + optional sliding window.
+
+    ``offset`` = absolute position of query 0 minus key 0.
+    """
+    qpos = jnp.arange(Sq)[:, None] + offset
+    kpos = jnp.arange(Sk)[None, :]
+    keep = kpos <= qpos
+    if window is not None:
+        keep &= kpos > qpos - window
+    return keep[None]
+
+
+def attention_gqa(p: Params, x: Array, cfg: ModelConfig, cdt,
+                  positions: Optional[Array] = None) -> Array:
+    """Training/prefill attention (causal, optional sliding window)."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q, k, v = _qkv(p, x, cfg, cdt)
+    pos = positions if positions is not None else \
+        jnp.arange(S)[None].astype(jnp.int32)
+    cos, sin = rope_cos_sin(pos, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    mask = causal_mask(S, S, cfg.sliding_window)
+    ctx = _sdpa(q, k, v, mask, cfg.n_kv_heads)
+    return ctx.reshape(B, S, -1) @ p["wo"].astype(cdt)
+
+
+def attention_gqa_decode(p: Params, x: Array, cfg: ModelConfig, cdt,
+                         cache: Dict[str, Array], pos: Array
+                         ) -> Tuple[Array, Dict[str, Array]]:
+    """One-token decode with a (possibly ring/sliding) KV cache.
+
+    cache: {"k","v": (B, Scache, Hkv, hd)}; pos: () absolute position.
+    For sliding-window configs the cache length is the window and writes
+    wrap modulo the window (ring buffer).
+    """
+    B, S1, _ = x.shape
+    assert S1 == 1
+    hd = cfg.resolved_head_dim
+    q, k, v = _qkv(p, x, cfg, cdt)
+    cos, sin = rope_cos_sin(pos[None, None], hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    Sc = cache["k"].shape[1]
+    slot = jnp.where(cfg.sliding_window is None, pos,
+                     pos % Sc).astype(jnp.int32)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    kpos = jnp.arange(Sc)
+    if cfg.sliding_window is None:
+        keep = kpos <= pos
+    else:  # ring buffer: everything in the cache is within the window
+        keep = (kpos <= pos) | (pos >= Sc)
+    mask = jnp.broadcast_to(keep[None, None], (B, 1, Sc))
+    ctx = _sdpa(q, ck, cv, mask, cfg.n_kv_heads)
+    y = ctx.reshape(B, 1, -1) @ p["wo"].astype(cdt)
+    return y, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig) -> Params:
+    m: MLAConfig = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "wq_a": _dense_init(ks[0], (d, m.q_lora_rank)),
+        "q_norm": jnp.zeros((m.q_lora_rank,), jnp.float32),
+        "wq_b": _dense_init(ks[1], (m.q_lora_rank, H * qk)),
+        "wkv_a": _dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_dim)),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), jnp.float32),
+        "wk_b": _dense_init(ks[3], (m.kv_lora_rank, H * m.qk_nope_dim)),
+        "wv_b": _dense_init(ks[4], (m.kv_lora_rank, H * m.v_head_dim)),
+        "wo": _dense_init(ks[5], (H * m.v_head_dim, d)),
+    }
+
+
+def attention_mla(p: Params, x: Array, cfg: ModelConfig, cdt,
+                  positions: Optional[Array] = None) -> Array:
+    """Training/prefill MLA: latent-compressed KV, decoupled RoPE keys."""
+    m: MLAConfig = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q = rms_norm(x @ p["wq_a"].astype(cdt), p["q_norm"], cfg.norm_eps)
+    q = (q @ p["wq_b"].astype(cdt)).reshape(
+        B, S, H, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    kv = x @ p["wkv_a"].astype(cdt)
+    c_kv, k_rope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_nope = (c_kv @ p["wk_b"].astype(cdt)).reshape(B, S, H, m.qk_nope_dim)
+    v = (c_kv @ p["wv_b"].astype(cdt)).reshape(B, S, H, m.v_head_dim)
+    pos = positions if positions is not None else \
+        jnp.arange(S)[None].astype(jnp.int32)
+    cos, sin = rope_cos_sin(pos, m.qk_rope_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)  # shared head
+    from repro.models.sharding import constrain_heads
+    scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    scores = (jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhd,bkod->bhqk", q_rope, k_rope,
+                           preferred_element_type=jnp.float32)) * scale
+    scores = constrain_heads(scores, head_axis=1, seq_axis=2)
+    mask = causal_mask(S, S)
+    scores = jnp.where(mask[:, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cdt)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", probs, v,
+                     preferred_element_type=jnp.float32).astype(cdt)
+    return ctx.reshape(B, S, -1) @ p["wo"].astype(cdt)
+
+
+def attention_mla_decode(p: Params, x: Array, cfg: ModelConfig, cdt,
+                         cache: Dict[str, Array], pos: Array
+                         ) -> Tuple[Array, Dict[str, Array]]:
+    """Absorbed-matrix MLA decode over the *compressed* cache.
+
+    cache: {"c_kv": (B, Sc, kv_lora), "k_rope": (B, Sc, rope_dim)} — the
+    latent cache that makes MLA decoding cheap; per-head K/V are never
+    materialized (the W_uk/W_uv absorption of arXiv:2405.04434 Sec. 2.1).
+    """
+    m: MLAConfig = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    q = rms_norm(x @ p["wq_a"].astype(cdt), p["q_norm"], cfg.norm_eps)
+    q = (q @ p["wq_b"].astype(cdt)).reshape(
+        B, 1, H, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    kv = x @ p["wkv_a"].astype(cdt)
+    c_new, kr_new = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    c_new = rms_norm(c_new, p["kv_norm"], cfg.norm_eps)
+    cos, sin = rope_cos_sin(pos[None, None], m.qk_rope_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    kr_new = apply_rope(kr_new[:, :, None, :], cos, sin)[:, :, 0]
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new, pos.astype(jnp.int32), axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new, pos.astype(jnp.int32), axis=1)
+    # absorb W_uk into the query: q_eff (B,1,H,kv_lora)
+    wk_b = p["wk_b"].astype(cdt).reshape(m.kv_lora_rank, H, m.qk_nope_dim)
+    q_eff = jnp.einsum("bqhd,chd->bqhc", q_nope, wk_b,
+                       preferred_element_type=jnp.float32).astype(cdt)
+    scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    scores = (jnp.einsum("bqhc,bkc->bhqk", q_eff, c_kv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope,
+                           preferred_element_type=jnp.float32)) * scale
+    Sc = c_kv.shape[1]
+    keep = jnp.arange(Sc)[None, None, None] <= pos
+    scores = jnp.where(keep, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cdt)
+    ctx_c = jnp.einsum("bhqk,bkc->bqhc", probs, c_kv,
+                       preferred_element_type=jnp.float32).astype(cdt)
+    wv_b = p["wv_b"].astype(cdt).reshape(m.kv_lora_rank, H, m.v_head_dim)
+    ctx = jnp.einsum("bqhc,chd->bqhd", ctx_c, wv_b,
+                     preferred_element_type=jnp.float32).astype(cdt)
+    y = ctx.reshape(B, 1, -1) @ p["wo"].astype(cdt)
+    return y, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+# ---------------------------------------------------------------------------
+# GLU FFN
+# ---------------------------------------------------------------------------
+
+def init_ffn(key, d_model: int, d_ff: int) -> Params:
+    ks = jax.random.split(key, 3)
+    return {"w_gate": _dense_init(ks[0], (d_model, d_ff)),
+            "w_up": _dense_init(ks[1], (d_model, d_ff)),
+            "w_down": _dense_init(ks[2], (d_ff, d_model))}
+
+
+def glu_ffn(p: Params, x: Array, activation: str, cdt) -> Array:
+    g = x @ p["w_gate"].astype(cdt)
+    u = x @ p["w_up"].astype(cdt)
+    if activation == "swiglu":
+        h = jax.nn.silu(g) * u
+    elif activation == "geglu":
+        h = jax.nn.gelu(g, approximate=True) * u
+    else:
+        h = jax.nn.gelu(g, approximate=True)   # plain GELU: ignore gate mul
+    return h @ p["w_down"].astype(cdt)
+
+
+# ---------------------------------------------------------------------------
+# MoE (sort-based, capacity-bounded dispatch — MegaBlocks-style on TPU)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    mc: MoEConfig = cfg.moe
+    d, dff = cfg.d_model, mc.d_ff_expert or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {"router": _dense_init(ks[0], (d, mc.n_experts)),
+         "we_gate": _dense_init(ks[1], (mc.n_experts, d, dff), scale_dim=d),
+         "we_up": _dense_init(ks[2], (mc.n_experts, d, dff), scale_dim=d),
+         "we_down": _dense_init(ks[3], (mc.n_experts, dff, d),
+                                scale_dim=dff)}
+    if mc.n_shared:
+        p["shared"] = init_ffn(ks[4], d, cfg.d_ff)
+    return p
+
+
+def moe_ffn(p: Params, x: Array, cfg: ModelConfig, cdt) -> Array:
+    """Grouped token-choice top-k with capacity (GShard/MegaBlocks shape).
+
+    Tokens are split into G groups (one per data shard, from the active
+    axis env) and each group sorts/dispatches *locally* into its
+    (E, C_g, d) slice; the only cross-device movement is the single
+    (G, E, C_g, d) re-shard from group-major to expert-major — the MoE
+    all-to-all.  A global sort instead makes every scatter/gather span
+    shards and SPMD replicates the full token payload (measured 6x20 GiB
+    per step on llama4 train_4k — EXPERIMENTS.md §Perf iteration 2).
+    Dropped (over-capacity) assignments pass through; compiled FLOPs scale
+    with capacity, not with E.
+    """
+    from repro.models.sharding import constrain, moe_groups
+    mc: MoEConfig = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    k, E = mc.top_k, mc.n_experts
+    G = moe_groups(T)
+    Tg = T // G
+    Cg = max(1, int(mc.capacity_factor * Tg * k / E))
+    xf = x.reshape(T, d)
+    xg = constrain(x.reshape(G, Tg, d), "btd")           # group == batch dim
+    logits = (xg @ p["router"].astype(cdt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)                # (G, Tg, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    flat_e = eidx.reshape(G, Tg * k)
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    tok_of = order // k                                   # (G, Tg*k)
+    starts = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(E)))(
+        sorted_e)
+    pos_in_e = (jnp.arange(Tg * k)[None]
+                - jnp.take_along_axis(starts, sorted_e, axis=1))
+    payload = jnp.take_along_axis(xg, tok_of[..., None], axis=1)
+
+    def scatter_group(e, pos, v):
+        return jnp.zeros((E, Cg, d), cdt).at[e, pos].set(v, mode="drop")
+
+    buf = jax.vmap(scatter_group)(sorted_e, pos_in_e, payload)
+    h = constrain(buf, "gecd")         # group-major -> expert-major a2a
+    g = jnp.einsum("gecd,edf->gecf", h, p["we_gate"].astype(cdt),
+                   preferred_element_type=jnp.float32).astype(cdt)
+    u = jnp.einsum("gecd,edf->gecf", h, p["we_up"].astype(cdt),
+                   preferred_element_type=jnp.float32).astype(cdt)
+    o = jnp.einsum("gecf,efd->gecd", jax.nn.silu(g) * u,
+                   p["we_down"].astype(cdt),
+                   preferred_element_type=jnp.float32).astype(cdt)
+    o = constrain(o, "gecd_back")      # expert-major -> group-major a2a
+
+    def gather_group(ob, e, pos):
+        return ob.at[e, pos].get(mode="fill", fill_value=0)
+
+    per_assign = jax.vmap(gather_group)(o, sorted_e, pos_in_e)  # (G,Tgk,d)
+    gate_sorted = jnp.take_along_axis(gates.reshape(G, Tg * k), order,
+                                      axis=1).astype(cdt)
+    contrib = per_assign * gate_sorted[..., None]
+
+    def combine_group(c, t):
+        return jnp.zeros((Tg, d), cdt).at[t].add(c)
+
+    out = jax.vmap(combine_group)(contrib, tok_of)        # (G, Tg, d)
+    out = constrain(out, "btd").reshape(T, d)
+    if mc.n_shared:
+        out = out + glu_ffn(p["shared"], xf, cfg.activation, cdt)
+    return out.reshape(B, S, d)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 selective SSM
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    sc: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    d_in = sc.expand * d
+    dtr = sc.resolved_dt_rank(d)
+    ks = jax.random.split(key, 6)
+    A = jnp.broadcast_to(jnp.arange(1, sc.d_state + 1, dtype=jnp.float32),
+                         (d_in, sc.d_state))
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * d_in)),
+        "conv_w": _dense_init(ks[1], (sc.d_conv, d_in), scale_dim=sc.d_conv),
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "x_proj": _dense_init(ks[2], (d_in, dtr + 2 * sc.d_state)),
+        "dt_proj": _dense_init(ks[3], (dtr, d_in)),
+        "dt_bias": jnp.full((d_in,), -4.6, jnp.float32),  # softplus≈0.01
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": _dense_init(ks[4], (d_in, d)),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array, cdt,
+                 state: Optional[Array] = None) -> Array:
+    """Depthwise causal conv along S.  x (B,S,Din); w (K,Din)."""
+    K = w.shape[0]
+    if state is not None:                       # decode: x is (B,1,Din)
+        window = jnp.concatenate([state, x], axis=1)    # (B,K,Din)
+        y = jnp.einsum("bkd,kd->bd", window, w.astype(cdt)) + b.astype(cdt)
+        return y[:, None], window[:, 1:]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(pad[:, i:i + x.shape[1]] * w[i].astype(cdt)
+            for i in range(K))
+    return y + b.astype(cdt), None
+
+
+def _selective_scan(dA: Array, dBx: Array, C: Array,
+                    h0: Optional[Array] = None,
+                    chunk: int = 64) -> Tuple[Array, Array]:
+    """h_t = dA_t * h_{t-1} + dBx_t ;  y_t = <h_t, C_t>.
+
+    dA, dBx: (B, S, Din, N); C: (B, S, N).  Chunked: sequential lax.scan
+    over S/chunk chunks, parallel associative scan inside each chunk —
+    the TPU-friendly compromise between a length-S while loop (opaque to
+    cost analysis) and a full-length associative scan (memory).
+    """
+    B, S, Din, N = dA.shape
+    if S % chunk:
+        pad = chunk - S % chunk
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                     constant_values=1.0)
+        dBx = jnp.pad(dBx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    Sp = dA.shape[1]
+    nchunk = Sp // chunk
+    dA_c = dA.reshape(B, nchunk, chunk, Din, N).transpose(1, 0, 2, 3, 4)
+    dBx_c = dBx.reshape(B, nchunk, chunk, Din, N).transpose(1, 0, 2, 3, 4)
+    C_c = C.reshape(B, nchunk, chunk, N).transpose(1, 0, 2, 3)
+    h_init = (jnp.zeros((B, Din, N), dA.dtype) if h0 is None else h0)
+
+    def combine(a, b):
+        (a1, b1), (a2, b2) = a, b
+        return a1 * a2, b1 * a2 + b2
+
+    def chunk_step(h, inp):
+        da, dbx, c = inp                    # (B, chunk, Din, N), (B,chunk,N)
+        aa, bb = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+        h_t = aa * h[:, None] + bb          # (B, chunk, Din, N)
+        y = jnp.einsum("bsdn,bsn->bsd", h_t, c)
+        return h_t[:, -1], y
+
+    h_last, ys = jax.lax.scan(chunk_step, h_init, (dA_c, dBx_c, C_c))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, Sp, Din)[:, :S]
+    return y, h_last
+
+
+def mamba_block(p: Params, x: Array, cfg: ModelConfig, cdt,
+                state: Optional[Dict[str, Array]] = None
+                ) -> Tuple[Array, Optional[Dict[str, Array]]]:
+    """Mamba-1 block.  Training (state=None) or single-token decode."""
+    sc: SSMConfig = cfg.ssm
+    B, S, d = x.shape
+    d_in = sc.expand * d
+    dtr = sc.resolved_dt_rank(d)
+    xz = x @ p["in_proj"].astype(cdt)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    if state is None:
+        xi, _ = _causal_conv(xi, p["conv_w"], p["conv_b"], cdt)
+        conv_state = None
+    else:
+        xi, conv_state = _causal_conv(xi, p["conv_w"], p["conv_b"], cdt,
+                                      state["conv"])
+    xi = jax.nn.silu(xi)
+    proj = xi @ p["x_proj"].astype(cdt)
+    dt, Bc, Cc = jnp.split(proj, [dtr, dtr + sc.d_state], axis=-1)
+    dt = jax.nn.softplus((dt @ p["dt_proj"].astype(cdt)).astype(jnp.float32)
+                         + p["dt_bias"])                  # (B,S,Din) fp32
+    A = -jnp.exp(p["A_log"])                              # (Din,N)
+    dA = jnp.exp(dt[..., None] * A)                       # (B,S,Din,N)
+    dBx = (dt * xi.astype(jnp.float32))[..., None] \
+        * Bc.astype(jnp.float32)[:, :, None, :]           # (B,S,Din,N)
+    if state is None:
+        y, h_last = _selective_scan(dA, dBx, Cc.astype(jnp.float32))
+        new_state = None
+    else:
+        h = state["ssm"] * dA[:, 0] + dBx[:, 0]
+        y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0].astype(jnp.float32))[:, None]
+        h_last = h
+        new_state = {"conv": conv_state, "ssm": h_last}
+    y = (y + xi.astype(jnp.float32) * p["D"]).astype(cdt)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(cdt), new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, cdt) -> Dict[str, Array]:
+    sc: SSMConfig = cfg.ssm
+    d_in = sc.expand * cfg.d_model
+    return {"conv": jnp.zeros((batch, sc.d_conv - 1, d_in), cdt),
+            "ssm": jnp.zeros((batch, d_in, sc.d_state), jnp.float32)}

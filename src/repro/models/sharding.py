@@ -1,0 +1,198 @@
+"""Activation-sharding hooks + parameter partition specs.
+
+The launch layer activates a mesh context (axis names for batch/model
+parallel dims); model code calls ``constrain`` at strategic points and the
+hooks become ``with_sharding_constraint`` under that context, or no-ops on a
+single device (smoke tests).  Parameter specs implement FSDP (shard the
+d_model-ish dim over "data") x TP (shard heads/ffn/experts/vocab over
+"model"), with the pod axis folded into data parallelism.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+from typing import Optional  # noqa: F401
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_ACTIVE: dict = {"batch_axes": None, "model_axis": None, "sizes": {}}
+
+
+@contextlib.contextmanager
+def axis_env(batch_axes, model_axis, sizes: Optional[dict] = None):
+    """Activate activation-constraint axes (e.g. (("pod","data"),"model")).
+
+    ``sizes``: mesh axis name -> size, for divisibility-aware specs.
+    """
+    old = dict(_ACTIVE)
+    _ACTIVE["batch_axes"] = batch_axes
+    _ACTIVE["model_axis"] = model_axis
+    _ACTIVE["sizes"] = sizes or {}
+    try:
+        yield
+    finally:
+        _ACTIVE.update(old)
+
+
+def _msize() -> int:
+    m = _ACTIVE["model_axis"]
+    return _ACTIVE["sizes"].get(m, 0) or 1
+
+
+def _bsize() -> int:
+    b = _ACTIVE["batch_axes"]
+    n = 1
+    for a in (b if isinstance(b, tuple) else (b,)):
+        n *= _ACTIVE["sizes"].get(a, 1)
+    return n
+
+
+def constrain(x, kind: str):
+    """Annotate an activation: kind in {btd, btf, bthd, ecd, logits}."""
+    b, m = _ACTIVE["batch_axes"], _ACTIVE["model_axis"]
+    if b is None:
+        return x
+    spec = {
+        "btd": P(b, None, None),              # (B,S,D) batch-sharded
+        "btf": P(b, None, m),                 # (B,S,F) ffn hidden TP
+        "bthd": P(b, None, m, None),          # (B,S,H,hd) heads TP
+        "ecd": P(m, None, None),              # (E,C,D) expert-parallel
+        # (G,E,C,D) expert-major: E over the data axes, matching the
+        # expert-weight placement (_expert) so expert matmuls are local
+        "gecd": P(None, b, None, None),
+        "gecd_back": P(b, None, None, None),  # (G,E,C,D) group-major
+        "logits": P(b, None, m),              # (B,S,V) vocab TP
+    }[kind]
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def attn_strategy(n_heads: int, n_kv_heads: int) -> str:
+    """How to shard attention internals over the TP axis.
+
+    "kv"      kv-head count divides TP: shard the kv axis (no data motion).
+    "repeat"  total heads divide TP but kv does not: materialize repeated
+              K/V to H heads and shard H — trades ~2*S*H*hd bf16 of HBM
+              traffic per layer for the multi-GiB reshard/all-gather XLA
+              otherwise inserts around the grouped einsums (measured
+              ~53 GiB/layer on mistral-large train_4k — §Perf iteration 4).
+    "seq"     neither divides: sequence-parallel attention internals.
+    """
+    if _ACTIVE["batch_axes"] is None:
+        return "kv"
+    ms = _msize()
+    if n_kv_heads % ms == 0:
+        return "kv"
+    if n_heads % ms == 0:
+        return "repeat"
+    return "seq"
+
+
+def moe_groups(n_tokens: int) -> int:
+    """MoE dispatch groups = data shards (1 when no mesh is active)."""
+    if _ACTIVE["batch_axes"] is None:
+        return 1
+    g = _bsize()
+    return g if n_tokens % g == 0 else 1
+
+
+def constrain_heads(x, head_axis: int, seq_axis: Optional[int] = None):
+    """Shard an attention tensor over heads if divisible, else sequence.
+
+    Models whose head counts do not divide the TP degree (qwen2 14H/2kv,
+    hymba 25H/5kv, whisper 12H) fall back to *sequence parallelism* for the
+    attention internals; without this XLA resolves the mismatched operand
+    shardings by all-reducing the full scores tensor (measured 3x7 GiB per
+    layer on qwen2 train_4k — EXPERIMENTS.md §Perf iteration 1).
+    """
+    b, m = _ACTIVE["batch_axes"], _ACTIVE["model_axis"]
+    if b is None:
+        return x
+    ms = _msize()
+    parts = [None] * x.ndim
+    parts[0] = b
+    if x.shape[head_axis] % ms == 0:
+        parts[head_axis] = m
+    elif seq_axis is not None and x.shape[seq_axis] % ms == 0:
+        parts[seq_axis] = m
+    return jax.lax.with_sharding_constraint(x, P(*parts))
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition specs (path-pattern -> PartitionSpec)
+# ---------------------------------------------------------------------------
+
+_RULES = [
+    # pattern on the param path (joined with /), spec builder given ndim.
+    # Stacked layer params have a leading L dim (never sharded).
+    (r"embed", lambda nd, d, m: P(m, None)),
+    (r"pos_embed", lambda nd, d, m: P(None, None)),
+    (r"lm_head", lambda nd, d, m: P(None, m)),
+    (r"(wq|wk|wv|wq_b|wk_b|wv_b|wq_a|wkv_a)$",
+     lambda nd, d, m: _lastdims(nd, d, m)),
+    (r"wo$", lambda nd, d, m: _lastdims(nd, m, d)),
+    (r"(w_gate|w_up)$", lambda nd, d, m: _lastdims(nd, d, m)),
+    (r"w_down$", lambda nd, d, m: _lastdims(nd, m, d)),
+    (r"router$", lambda nd, d, m: _lastdims(nd, d, None)),
+    (r"(we_gate|we_up)$",
+     lambda nd, d, m: _expert(nd, d, m)),
+    (r"we_down$",
+     lambda nd, d, m: _expert_down(nd, d, m)),
+    (r"(in_proj|x_proj)$", lambda nd, d, m: _lastdims(nd, d, m)),
+    (r"out_proj$", lambda nd, d, m: _lastdims(nd, m, d)),
+    (r"dt_proj$", lambda nd, d, m: _lastdims(nd, None, m)),
+    (r"(A_log|conv_w)$", lambda nd, d, m: _lastdims(nd, None, m)),
+]
+
+
+def _lastdims(nd, a, b):
+    """Spec sharding the last two dims as (a, b), leading dims replicated."""
+    return P(*([None] * (nd - 2) + [a, b]))
+
+
+def _expert(nd, d, m):
+    """(..., E, din, dout) expert weights: EP over the data axis, TP over
+    the last (ff-sided for gate/up, model-sided for down) dim.
+
+    §Perf iteration 5: sharding experts' d_model dim over "data" (ZeRO
+    style) forces a 2.5 GiB-per-MoE-layer weight all-gather in forward AND
+    rematerialized backward (llama4 train_4k baseline: collective-bound).
+    E over "data" + inner dim over "model" keeps every expert weight fully
+    resident; the only MoE collectives left are the token dispatch
+    all-to-alls and one output reduce per layer.
+    """
+    return P(*([None] * (nd - 3) + [d, None, m]))
+
+
+def _expert_down(nd, d, m):
+    """(..., E, ff, d_model): E over data, contraction dim ff over model —
+    pairs with the model-sharded gate/up outputs so the down matmul is a
+    local partial sum (one output reduce instead of an operand gather)."""
+    return P(*([None] * (nd - 3) + [d, m, None]))
+
+
+def param_partition_spec(path: str, ndim: int, data_axes="data",
+                         model_axis="model"):
+    for pat, fn in _RULES:
+        if re.search(pat, path):
+            spec = fn(ndim, data_axes, model_axis)
+            # trim/pad spec to ndim
+            parts = list(spec)
+            if len(parts) > ndim:
+                parts = parts[len(parts) - ndim:]
+            while len(parts) < ndim:
+                parts.insert(0, None)
+            return P(*parts)
+    return P(*([None] * ndim))   # biases, norms, scalars: replicated
+
+
+def tree_partition_specs(params, data_axes="data", model_axis="model"):
+    """PartitionSpec pytree matching a param pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        specs.append(param_partition_spec(name, leaf.ndim, data_axes,
+                                          model_axis))
+    return jax.tree_util.tree_unflatten(treedef, specs)

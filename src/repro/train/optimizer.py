@@ -1,0 +1,131 @@
+"""AdamW with global-norm clipping + optional int8 gradient compression.
+
+Optimizer state is fp32 (m, v) regardless of param dtype; the update is a
+pure function suitable for jit/SPMD — state shards inherit the parameter
+sharding, giving ZeRO-style partitioning for free under FSDP specs.
+
+Gradient compression (``compress_grads``) implements chunked int8
+quantization with error feedback for the data-parallel all-reduce: at 1000+
+node scale the DP gradient reduce-scatter is the dominant collective for
+small models, and 4x shrink on the wire is the standard mitigation.  It is
+exercised by tests and off by default.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    import copy
+    return {"mu": zeros,
+            "nu": jax.tree_util.tree_map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _schedule(cfg: AdamWConfig, step: Array) -> Array:
+    warm = jnp.minimum(1.0, (step + 1) / cfg.warmup_steps)
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree_util.tree_leaves(tree)))
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig
+                  ) -> Tuple[Any, Dict[str, Any], Array]:
+    """Returns (new_params, new_state, grad_norm)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    step = state["step"] + 1
+    lr = _schedule(cfg, state["step"])
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+        mh = m / b1c
+        vh = v / b2c
+        step_dir = mh / (jnp.sqrt(vh) + cfg.eps)
+        new_p = (p.astype(jnp.float32)
+                 - lr * (step_dir + cfg.weight_decay * p.astype(jnp.float32)))
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state["mu"])
+    flat_v = jax.tree_util.tree_leaves(state["nu"])
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_mu = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_nu = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}, gnorm
+
+
+# ---------------------------------------------------------------------------
+# int8 chunked gradient compression with error feedback
+# ---------------------------------------------------------------------------
+
+def compress_grads(grads, err, chunk: int = 1024):
+    """Quantize each leaf to int8 with per-chunk scales; carry residual.
+
+    Returns (q_tree {q, scale}, new_err).  Decompress with
+    ``decompress_grads``.  Error feedback makes the scheme unbiased over
+    steps (Seide et al.; 1-bit Adam lineage).
+    """
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        n = g32.size
+        pad = (-n) % chunk
+        flat = jnp.pad(g32.reshape(-1), (0, pad)).reshape(-1, chunk)
+        scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
+        scale = jnp.maximum(scale, 1e-12)
+        q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+        deq = (q.astype(jnp.float32) * scale).reshape(-1)[:n].reshape(g.shape)
+        return {"q": q, "scale": scale, "shape": g.shape}, g32 - deq
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(err)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs]),
+            jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs]))
+
+
+def decompress_grads(qtree):
+    def one(d):
+        n = 1
+        for s in d["shape"]:
+            n *= s
+        flat = (d["q"].astype(jnp.float32) * d["scale"]).reshape(-1)[:n]
+        return flat.reshape(d["shape"])
+
+    return jax.tree_util.tree_map(one, qtree,
+                                  is_leaf=lambda x: isinstance(x, dict)
+                                  and "q" in x)
+
+
+def init_error_feedback(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,93 @@
+"""train_step / serve_step builders — the functions the dry-run lowers.
+
+``make_train_step``   forward (scan + per-layer remat) -> fp32 token-mean
+                      cross-entropy -> backward -> AdamW update.  One jit.
+
+``make_prefill``      causal forward producing logits for a prompt batch
+                      (the prefill_32k cells).
+
+``make_serve_step``   one-token decode against a seq_len KV cache — the
+                      decode_32k / long_500k cells.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import transformer as T
+from repro.train.optimizer import AdamWConfig, apply_updates
+
+Array = jax.Array
+
+
+def cross_entropy(logits: Array, labels: Array) -> Array:
+    """Token-mean xent in fp32; labels < 0 are masked.
+
+    The label log-prob is a one-hot *contraction*, not a gather: with the
+    vocab dim sharded over "model", a take_along_axis gather forces XLA to
+    all-gather the full (B,S,V) logits (measured: 24.7 GiB/device/step on
+    qwen2 train_4k — EXPERIMENTS.md §Perf iteration 1); the contraction
+    stays shard-local and reduces with one scalar-per-token psum.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(jnp.maximum(labels, 0), logits.shape[-1],
+                            dtype=logits.dtype)
+    ll = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((logz - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(params, batch: Dict[str, Array], cfg: ModelConfig,
+            cdt=jnp.bfloat16) -> Array:
+    logits = T.forward_train(params, batch["tokens"], cfg, cdt,
+                             enc_feats=batch.get("enc_feats"))
+    return cross_entropy(logits, batch["labels"])
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    cdt=jnp.bfloat16):
+    """Returns train_step(params, opt_state, batch) -> (p, s, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch, cfg, cdt)
+        params, opt_state, gnorm = apply_updates(params, grads, opt_state,
+                                                 opt_cfg)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill(cfg: ModelConfig, cdt=jnp.bfloat16):
+    """prefill(params, tokens[, enc_feats]) -> logits (B, S, V)."""
+
+    def prefill(params, tokens, enc_feats=None):
+        return T.forward_train(params, tokens, cfg, cdt, remat=False,
+                               enc_feats=enc_feats)
+
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig, cdt=jnp.bfloat16):
+    """serve_step(params, cache, token, pos[, enc_out]) -> (logits, cache).
+
+    ``cache`` is the stacked (L, ...) decode cache of ``init_full_cache``
+    with capacity seq_len; ``pos`` the absolute position of the new token.
+    """
+
+    def serve_step(params, cache, token, pos, enc_out=None):
+        return T.decode_step(params, token, pos, cache, cfg, cdt,
+                             enc_out=enc_out)
+
+    return serve_step
+
+
+def make_init(cfg: ModelConfig):
+    def init(key):
+        return T.init_lm(cfg, key)
+
+    return init

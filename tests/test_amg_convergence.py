@@ -1,0 +1,136 @@
+"""Integration tests: GAMG on 3D elasticity (the paper's model problem).
+
+Covers: FEM sanity (RBM null space), AMG convergence + rough mesh
+independence, blocked/scalar iteration parity (paper Sec. 4.1), hot
+recompute state-gating (Sec. 3.5), and the device MIS coarsener (Sec. 6).
+"""
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401
+import jax.numpy as jnp
+
+from repro.core import gamg
+from repro.core.scalar_path import recompute_scalar
+from repro.core.krylov import pcg
+from repro.core.spmv import spmv_ell
+from repro.core.vcycle import vcycle
+from repro.fem.assemble import assemble_elasticity
+from repro.fem.hex_elasticity import element_stiffness, rigid_body_modes
+
+
+def test_element_stiffness_rbm_null():
+    """Ke must annihilate rigid-body modes (zero-energy modes)."""
+    Ke = element_stiffness(1, 0.5)
+    coords = np.array([[x, y, z] for z in (0, .5) for y in (0, .5)
+                       for x in (0, .5)])
+    B = rigid_body_modes(coords)
+    assert Ke.shape == (24, 24)
+    np.testing.assert_allclose(Ke @ B, 0.0, atol=1e-12)
+    w = np.linalg.eigvalsh(Ke)
+    assert (w > -1e-12).all(), "element stiffness must be PSD"
+    assert (np.abs(w) < 1e-10).sum() == 6, "exactly 6 zero-energy modes"
+
+
+def test_q2_element_stiffness_rbm_null():
+    Ke = element_stiffness(2, 1.0)
+    pts = np.linspace(0, 1.0, 3)
+    coords = np.array([[x, y, z] for z in pts for y in pts for x in pts])
+    B = rigid_body_modes(coords)
+    assert Ke.shape == (81, 81)
+    np.testing.assert_allclose(Ke @ B, 0.0, atol=1e-11)
+
+
+def test_assembled_operator_spd_and_rbm():
+    # without BCs the assembled operator annihilates the RBMs exactly
+    prob = assemble_elasticity(4, fix_face=False)
+    D = np.asarray(prob.A.to_dense())
+    np.testing.assert_allclose(D, D.T, atol=1e-12)
+    np.testing.assert_allclose(D @ np.asarray(prob.B), 0.0, atol=1e-10)
+    # with BCs the reduced operator is SPD
+    prob = assemble_elasticity(4, fix_face=True)
+    D = np.asarray(prob.A.to_dense())
+    w = np.linalg.eigvalsh(0.5 * (D + D.T))
+    assert w.min() > 0, f"reduced elasticity operator not SPD: {w.min()}"
+
+
+@pytest.mark.parametrize("m", [5, 7])
+def test_gamg_converges_elasticity(m):
+    prob = assemble_elasticity(m)
+    solver = gamg.GAMGSolver(prob.A, prob.B, coarse_size=30, rtol=1e-8,
+                             maxiter=100)
+    res = solver.solve(prob.b)
+    assert bool(res.converged), f"no convergence: relres={res.relres}"
+    assert int(res.iters) < 40
+    # true residual check
+    r = prob.b - spmv_ell(solver.hierarchy.levels[0].a_ell, res.x)
+    assert float(jnp.linalg.norm(r) / jnp.linalg.norm(prob.b)) < 1e-7
+
+
+def test_gamg_mesh_independence_trend():
+    """Iterations must not blow up with resolution (multigrid scalability)."""
+    iters = []
+    for m in (5, 7, 9):
+        prob = assemble_elasticity(m)
+        solver = gamg.GAMGSolver(prob.A, prob.B, coarse_size=30, rtol=1e-8,
+                                 maxiter=100)
+        iters.append(int(solver.solve(prob.b).iters))
+    assert iters[-1] <= 2 * iters[0] + 5, f"not mesh independent: {iters}"
+
+
+def test_blocked_scalar_iteration_parity():
+    """Paper Sec. 4.1: both formats converge in the same iteration count to
+    the same true residual (same algorithm, different storage)."""
+    prob = assemble_elasticity(6)
+    setupd = gamg.setup(prob.A, prob.B, coarse_size=30)
+    hier_b = gamg.recompute(setupd, prob.A.data)
+    hier_s = recompute_scalar(setupd, prob.A.data)
+
+    def solve(hier):
+        return pcg(lambda x: spmv_ell(hier.levels[0].a_ell, x),
+                   lambda r: vcycle(hier, r), prob.b, rtol=1e-8, maxiter=100)
+
+    rb, rs = solve(hier_b), solve(hier_s)
+    assert int(rb.iters) == int(rs.iters), (int(rb.iters), int(rs.iters))
+    np.testing.assert_allclose(np.asarray(rb.x), np.asarray(rs.x),
+                               rtol=1e-6, atol=1e-10)
+
+
+def test_hot_recompute_scaled_operator():
+    """State-gated hot recompute: new values, same structure (Sec. 3.5)."""
+    prob = assemble_elasticity(5)
+    solver = gamg.GAMGSolver(prob.A, prob.B, coarse_size=30, rtol=1e-8,
+                             maxiter=100)
+    x1 = solver.solve(prob.b).x
+    solver.update_operator(prob.A.data * 2.0)   # "Newton step": A -> 2A
+    res2 = solver.solve(prob.b)
+    assert bool(res2.converged)
+    np.testing.assert_allclose(np.asarray(res2.x), np.asarray(x1) / 2.0,
+                               rtol=1e-5, atol=1e-12)
+    # reassembly through the cached COO plan gives the same operator
+    A2 = prob.reassemble(2.0)
+    np.testing.assert_allclose(np.asarray(A2.data),
+                               np.asarray(prob.A.data) * 2.0, rtol=1e-13)
+
+
+def test_mis_coarsener_device():
+    """Paper Sec. 6 future work: device Luby-MIS coarsener end-to-end."""
+    prob = assemble_elasticity(5)
+    solver = gamg.GAMGSolver(prob.A, prob.B, coarse_size=30,
+                             coarsener="mis", rtol=1e-8, maxiter=120)
+    res = solver.solve(prob.b)
+    assert bool(res.converged), f"MIS coarsener: relres={res.relres}"
+
+
+def test_coarsening_reduces_and_block_sizes():
+    """bs: 3 -> 6 across the first transition (paper Sec. 2.3)."""
+    prob = assemble_elasticity(7)
+    setupd = gamg.setup(prob.A, prob.B, coarse_size=30)
+    assert len(setupd.levels) >= 1
+    assert setupd.levels[0].A0.br == 3
+    assert setupd.levels[0].P.block_shape == (3, 6)
+    if len(setupd.levels) > 1:
+        assert setupd.levels[1].A0.br == 6
+        assert setupd.levels[1].P.block_shape == (6, 6)
+    rows = setupd.stats["level_rows"]
+    assert all(rows[i + 1] < rows[i] for i in range(len(rows) - 1)), rows

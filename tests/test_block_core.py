@@ -1,0 +1,168 @@
+"""Unit tests for the blocked sparse containers and two-phase products."""
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401
+import jax.numpy as jnp
+
+from repro.core.block_coo import (
+    preallocate_coo,
+    scalar_coo_plan_bytes,
+    set_values_coo,
+)
+from repro.core.block_csr import BlockCSR, identity_bcsr, transpose_bcsr
+from repro.core.scalar_csr import (
+    bcsr_matrix_bytes,
+    csr_matrix_bytes,
+    expand_bcsr,
+)
+from repro.core.spgemm import (
+    block_axpy,
+    spgemm,
+    spgemm_numeric,
+    spgemm_symbolic,
+)
+from repro.core.spmv import spmv, spmv_bcsr_ref, spmv_ell
+from repro.core.ptap import ptap, ptap_numeric, ptap_symbolic
+
+from helpers import random_bcsr
+
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("br,bc", [(1, 1), (3, 3), (3, 6), (6, 3), (2, 5)])
+def test_to_dense_roundtrip(br, bc):
+    A = random_bcsr(RNG, 7, 5, br, bc)
+    D = np.asarray(A.to_dense())
+    assert D.shape == (7 * br, 5 * bc)
+    # every stored block appears at the right slab
+    rows = np.repeat(np.arange(A.nbr), np.diff(A.indptr))
+    for k in range(A.nnzb):
+        I, J = rows[k], A.indices[k]
+        np.testing.assert_allclose(D[I*br:(I+1)*br, J*bc:(J+1)*bc],
+                                   np.asarray(A.data[k]))
+
+
+@pytest.mark.parametrize("br,bc", [(3, 3), (3, 6), (1, 1), (4, 2)])
+def test_spmv_matches_dense(br, bc):
+    A = random_bcsr(RNG, 9, 6, br, bc)
+    x = RNG.standard_normal(6 * bc)
+    y = np.asarray(spmv(A, jnp.asarray(x)))
+    np.testing.assert_allclose(y, np.asarray(A.to_dense()) @ x, rtol=1e-12)
+
+
+def test_spmv_ell_equals_bcsr_ref():
+    A = random_bcsr(RNG, 12, 12, 3, 3, density=0.2)
+    x = jnp.asarray(RNG.standard_normal(36))
+    np.testing.assert_allclose(np.asarray(spmv_ell(A.to_ell(), x)),
+                               np.asarray(spmv_bcsr_ref(A, x)), rtol=1e-13)
+
+
+@pytest.mark.parametrize("bk", [3, 6])
+def test_spgemm_matches_dense(bk):
+    A = random_bcsr(RNG, 8, 6, 3, bk)
+    B = random_bcsr(RNG, 6, 5, bk, 6)
+    C = spgemm(A, B)
+    np.testing.assert_allclose(np.asarray(C.to_dense()),
+                               np.asarray(A.to_dense()) @
+                               np.asarray(B.to_dense()),
+                               rtol=1e-12, atol=1e-12)
+
+
+def test_spgemm_plan_reuse_new_values():
+    A = random_bcsr(RNG, 8, 8, 3, 3, ensure_diag=True)
+    B = random_bcsr(RNG, 8, 4, 3, 6)
+    plan = spgemm_symbolic(A, B)
+    A2 = A.with_data(A.data * 2.0)
+    C2 = spgemm_numeric(plan, A2, B)
+    np.testing.assert_allclose(np.asarray(C2.to_dense()),
+                               2 * np.asarray(A.to_dense()) @
+                               np.asarray(B.to_dense()), rtol=1e-12,
+                               atol=1e-12)
+
+
+def test_transpose():
+    A = random_bcsr(RNG, 6, 9, 3, 6)
+    np.testing.assert_allclose(np.asarray(transpose_bcsr(A).to_dense()),
+                               np.asarray(A.to_dense()).T)
+
+
+def test_ptap_matches_dense_and_state_gate():
+    A = random_bcsr(RNG, 10, 10, 3, 3, ensure_diag=True)
+    P = random_bcsr(RNG, 10, 4, 3, 6)
+    Ac, cache = ptap(A, P)
+    Ad, Pd = np.asarray(A.to_dense()), np.asarray(P.to_dense())
+    np.testing.assert_allclose(np.asarray(Ac.to_dense()), Pd.T @ Ad @ Pd,
+                               rtol=1e-11, atol=1e-11)
+    # hot recompute: new A values, same structures -> gate holds, same cache
+    A2 = A.with_data(A.data * -3.0)
+    Ac2, cache2 = ptap(A2, P, cache)
+    assert cache2 is cache, "state gate must reuse the cache"
+    np.testing.assert_allclose(np.asarray(Ac2.to_dense()),
+                               Pd.T @ (-3 * Ad) @ Pd, rtol=1e-11, atol=1e-11)
+    # structural change (new P object) -> gate trips
+    P2 = BlockCSR.from_arrays(P.indptr, P.indices, P.data, P.nbc)
+    _, cache3 = ptap(A, P2, cache)
+    assert cache3 is not cache
+
+
+def test_block_coo_assembly_sums_duplicates_and_ignores_negative():
+    br, bc = 3, 6
+    rows = np.array([0, 1, 1, -1, 2, 0])
+    cols = np.array([0, 1, 1, 2, 0, -3])
+    vals = jnp.asarray(RNG.standard_normal((6, br, bc)))
+    plan = preallocate_coo(rows, cols, nbr=3, nbc=3, br=br, bc=bc)
+    A = set_values_coo(plan, vals)
+    D = np.asarray(A.to_dense())
+    expect = np.zeros((9, 18))
+    for k, (i, j) in enumerate(zip(rows, cols)):
+        if i >= 0 and j >= 0:
+            expect[i*br:(i+1)*br, j*bc:(j+1)*bc] += np.asarray(vals[k])
+    np.testing.assert_allclose(D, expect, rtol=1e-13)
+    # numeric re-assembly with the cached plan (hot path)
+    A2 = set_values_coo(plan, 2.0 * vals)
+    np.testing.assert_allclose(np.asarray(A2.to_dense()), 2 * expect,
+                               rtol=1e-13)
+    assert plan.plan_bytes < scalar_coo_plan_bytes(plan)
+
+
+def test_scalar_expansion_matches_and_costs_more():
+    A = random_bcsr(RNG, 6, 6, 3, 3, ensure_diag=True)
+    S = expand_bcsr(A)
+    assert S.block_shape == (1, 1)
+    np.testing.assert_allclose(np.asarray(S.to_dense()),
+                               np.asarray(A.to_dense()))
+    # paper Sec. 4.2: 108 B vs 76 B per 3x3 block => exact per-nnz bytes
+    nnz_scalar = A.nnzb * 9
+    assert csr_matrix_bytes(S) - 8 * (S.nbr + 1) == nnz_scalar * 12
+    assert bcsr_matrix_bytes(A) - 8 * (A.nbr + 1) == A.nnzb * 76
+
+
+def test_block_axpy_union_pattern():
+    X = random_bcsr(RNG, 6, 6, 3, 3, density=0.2)
+    Y = random_bcsr(RNG, 6, 6, 3, 3, density=0.2)
+    C = block_axpy(-0.5, X, Y)
+    np.testing.assert_allclose(np.asarray(C.to_dense()),
+                               -0.5 * np.asarray(X.to_dense())
+                               + np.asarray(Y.to_dense()), rtol=1e-13)
+
+
+def test_identity():
+    Ib = identity_bcsr(5, 3)
+    np.testing.assert_allclose(np.asarray(Ib.to_dense()), np.eye(15))
+
+
+def test_spmv_rectangular_prolongator_shapes():
+    # P: fine nodes x aggregates with 3x6 blocks; P^T x maps fine->coarse
+    P = random_bcsr(RNG, 12, 3, 3, 6)
+    x_c = jnp.asarray(RNG.standard_normal(18))
+    y_f = spmv(P, x_c)
+    assert y_f.shape == (36,)
+    R = transpose_bcsr(P)
+    x_f = jnp.asarray(RNG.standard_normal(36))
+    y_c = spmv(R, x_f)
+    assert y_c.shape == (18,)
+    np.testing.assert_allclose(np.asarray(y_c),
+                               np.asarray(P.to_dense()).T @ np.asarray(x_f),
+                               rtol=1e-12)

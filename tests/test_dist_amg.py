@@ -1,0 +1,39 @@
+"""Distributed-AMG integration tests.
+
+Run in subprocesses so the placeholder-device XLA flag never leaks into this
+process (smoke tests and benches must see exactly 1 device — see dryrun
+spec).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_selftest(ndev: int, m: int) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["REPRO_SELFTEST_NDEV"] = str(ndev)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.dist.selftest", str(m)],
+        capture_output=True, text=True, timeout=520, env=env)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.mark.parametrize("ndev,m", [(4, 5), (8, 6)])
+def test_dist_amg_parity(ndev, m):
+    """Distributed == single-device: same iterations, same solution,
+    for both the state-gated and ungated-P_oth paths (paper Table 3)."""
+    stdout = _run_selftest(ndev, m)
+    assert "OK" in stdout
+    assert "halo=ppermute" in stdout, stdout  # slab halos -> neighbor path
+
+
+def test_main_process_sees_one_device():
+    import jax
+    assert len(jax.devices()) == 1, jax.devices()

@@ -1,0 +1,22 @@
+"""The paper's own config module builds and solves end to end."""
+import dataclasses
+
+import repro.core  # noqa: F401
+from repro.configs.elasticity import CPU_LADDER, PAPER_LADDER, CONFIG
+
+
+def test_paper_ladder_is_weak_scaling():
+    # 98 304 unknowns per device on every rung (paper Sec. 4.1)
+    for m, ndev in PAPER_LADDER:
+        assert 3 * m ** 3 // ndev == 98304
+
+
+def test_config_builds_and_solves():
+    cfg = dataclasses.replace(CONFIG, m=CPU_LADDER[0], coarse_size=30,
+                              maxiter=100)
+    prob, solver = cfg.build()
+    res = solver.solve(prob.b)
+    assert bool(res.converged)
+    # reuse model: hierarchy survives an operator refresh
+    solver.update_operator(prob.A.data * 1.3)
+    assert bool(solver.solve(prob.b).converged)

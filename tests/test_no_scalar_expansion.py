@@ -1,0 +1,44 @@
+"""The paper's first invariant: no scalar AIJ expansion on the coarsening
+path.  Enforced two ways: (a) the coarsening modules never import the
+scalar-expansion module; (b) a full GAMG setup + hot recompute runs with
+the expansion function instrumented to fail."""
+import sys
+
+import pytest
+
+import repro.core  # noqa: F401
+from repro.fem.assemble import assemble_elasticity
+
+
+COARSENING_MODULES = [
+    "repro.core.strength", "repro.core.aggregation", "repro.core.tentative",
+    "repro.core.smooth", "repro.core.gamg", "repro.core.ptap",
+    "repro.core.spgemm", "repro.core.block_coo", "repro.core.vcycle",
+    "repro.core.krylov", "repro.dist.pamg", "repro.dist.solver",
+]
+
+
+def test_no_import_of_scalar_module():
+    import importlib
+    for name in COARSENING_MODULES:
+        mod = importlib.import_module(name)
+        src = open(mod.__file__).read()
+        assert "scalar_csr" not in src.replace(
+            "scalar_csr is quarantined", ""), \
+            f"{name} references the scalar expansion module"
+
+
+def test_setup_and_recompute_never_expand(monkeypatch):
+    from repro.core import scalar_csr
+
+    def boom(*a, **k):
+        raise AssertionError("scalar expansion reached from blocked path")
+
+    monkeypatch.setattr(scalar_csr, "expand_bcsr", boom)
+    from repro.core import gamg
+    prob = assemble_elasticity(5)
+    solver = gamg.GAMGSolver(prob.A, prob.B, coarse_size=30, rtol=1e-8,
+                             maxiter=50)
+    solver.update_operator(prob.A.data * 1.5)     # hot recompute
+    res = solver.solve(prob.b)
+    assert bool(res.converged)

@@ -1,0 +1,136 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import repro.core  # noqa: F401,E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.block_coo import preallocate_coo, set_values_coo  # noqa
+from repro.core.block_csr import transpose_bcsr  # noqa: E402
+from repro.core.spgemm import block_axpy, spgemm  # noqa: E402
+from repro.core.spmv import spmv  # noqa: E402
+from repro.core.aggregation import (  # noqa: E402
+    graph_to_ell,
+    luby_mis_device,
+)
+from repro.core.strength import StrengthGraph  # noqa: E402
+from repro.dist.partition import partition_rows  # noqa: E402
+
+from helpers import random_bcsr  # noqa: E402
+
+
+@st.composite
+def bcsr_strategy(draw, max_n=6, square=False):
+    seed = draw(st.integers(0, 2**31 - 1))
+    nbr = draw(st.integers(1, max_n))
+    nbc = nbr if square else draw(st.integers(1, max_n))
+    br = draw(st.sampled_from([1, 2, 3, 6]))
+    bc = br if square else draw(st.sampled_from([1, 2, 3, 6]))
+    dens = draw(st.floats(0.1, 0.9))
+    return random_bcsr(np.random.default_rng(seed), nbr, nbc, br, bc, dens)
+
+
+@given(bcsr_strategy())
+@settings(max_examples=25, deadline=None)
+def test_spmv_linearity(A):
+    """SpMV is linear: A(ax + by) == a*Ax + b*Ay."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(A.shape[1]))
+    y = jnp.asarray(rng.standard_normal(A.shape[1]))
+    lhs = spmv(A, 2.5 * x - 1.5 * y)
+    rhs = 2.5 * spmv(A, x) - 1.5 * spmv(A, y)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-10, atol=1e-10)
+
+
+@given(bcsr_strategy())
+@settings(max_examples=25, deadline=None)
+def test_transpose_involution_and_adjoint(A):
+    """(A^T)^T == A and <Ax, y> == <x, A^T y>."""
+    T2 = transpose_bcsr(transpose_bcsr(A))
+    np.testing.assert_allclose(np.asarray(T2.to_dense()),
+                               np.asarray(A.to_dense()), rtol=1e-13)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal(A.shape[1]))
+    y = jnp.asarray(rng.standard_normal(A.shape[0]))
+    lhs = float(jnp.vdot(spmv(A, x), y))
+    rhs = float(jnp.vdot(x, spmv(transpose_bcsr(A), y)))
+    assert abs(lhs - rhs) < 1e-9 * (1 + abs(lhs))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 5), st.integers(1, 5))
+@settings(max_examples=25, deadline=None)
+def test_spgemm_associativity_with_dense(seed, n1, n2):
+    rng = np.random.default_rng(seed)
+    A = random_bcsr(rng, n1, n2, 3, 3)
+    B = random_bcsr(rng, n2, n1, 3, 6)
+    C = spgemm(A, B)
+    np.testing.assert_allclose(
+        np.asarray(C.to_dense()),
+        np.asarray(A.to_dense()) @ np.asarray(B.to_dense()),
+        rtol=1e-10, atol=1e-10)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 40))
+@settings(max_examples=25, deadline=None)
+def test_coo_assembly_permutation_invariant(seed, n_contrib):
+    """COO assembly must not depend on contribution order."""
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, 4, n_contrib)
+    cols = rng.integers(0, 4, n_contrib)
+    vals = rng.standard_normal((n_contrib, 3, 3))
+    perm = rng.permutation(n_contrib)
+    p1 = preallocate_coo(rows, cols, 4, 4, 3, 3)
+    p2 = preallocate_coo(rows[perm], cols[perm], 4, 4, 3, 3)
+    A1 = set_values_coo(p1, jnp.asarray(vals))
+    A2 = set_values_coo(p2, jnp.asarray(vals[perm]))
+    np.testing.assert_allclose(np.asarray(A1.to_dense()),
+                               np.asarray(A2.to_dense()), rtol=1e-12)
+
+
+@given(bcsr_strategy(square=True))
+@settings(max_examples=20, deadline=None)
+def test_block_axpy_commutes_with_dense(A):
+    rng = np.random.default_rng(2)
+    B = random_bcsr(rng, A.nbr, A.nbc, A.br, A.bc, 0.3)
+    C = block_axpy(0.7, A, B)
+    np.testing.assert_allclose(
+        np.asarray(C.to_dense()),
+        0.7 * np.asarray(A.to_dense()) + np.asarray(B.to_dense()),
+        rtol=1e-12, atol=1e-12)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 40),
+       st.floats(0.05, 0.5))
+@settings(max_examples=20, deadline=None)
+def test_luby_mis_independent_and_maximal(seed, n, dens):
+    """Device MIS: no two adjacent members; every non-member has one."""
+    rng = np.random.default_rng(seed)
+    mask = np.triu(rng.random((n, n)) < dens, 1)
+    adj = mask | mask.T
+    rows, cols = np.nonzero(adj)
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.add.at(indptr, rows + 1, 1)
+    g = StrengthGraph(indptr=np.cumsum(indptr),
+                      indices=cols.astype(np.int32),
+                      weights=np.ones(len(cols)), n=n)
+    idx, m = graph_to_ell(g)
+    in_mis = np.asarray(luby_mis_device(idx, m)).astype(bool)
+    assert not (adj & np.outer(in_mis, in_mis)).any(), "not independent"
+    uncovered = ~in_mis & ~(adj @ in_mis.astype(int) > 0)
+    assert not uncovered.any(), "not maximal"
+
+
+@given(st.integers(1, 1000), st.integers(1, 64))
+@settings(max_examples=50, deadline=None)
+def test_partition_covers_and_balances(nbr, ndev):
+    p = partition_rows(nbr, ndev)
+    counts = p.counts
+    assert counts.sum() == nbr
+    assert counts.max() - counts.min() <= 1, "imbalance > 1 row"
+    rows = np.arange(nbr)
+    own = p.owner_of(rows)
+    assert ((rows >= p.starts[own]) & (rows < p.starts[own + 1])).all()

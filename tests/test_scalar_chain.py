@@ -1,0 +1,27 @@
+"""Scalar hot-PtAP chain == expansion of the blocked chain (per level)."""
+import numpy as np
+
+import repro.core  # noqa: F401
+from repro.core import gamg
+from repro.core.ptap import ptap_numeric_data
+from repro.core.scalar_csr import expand_bcsr
+from repro.core.scalar_path import build_scalar_ptap_chain
+from repro.fem.assemble import assemble_elasticity
+
+
+def test_scalar_chain_matches_blocked():
+    prob = assemble_elasticity(5)
+    setupd = gamg.setup(prob.A, prob.B, coarse_size=30)
+    assert len(setupd.levels) >= 1
+    sc_chain = build_scalar_ptap_chain(setupd)
+    scalar_outs = sc_chain(prob.A.data)
+    a_data = prob.A.data
+    for ls, s_out in zip(setupd.levels, scalar_outs):
+        a_data = ptap_numeric_data(ls.ptap_cache, a_data, ls.P.data)
+        Ac = ls.ptap_cache  # blocked coarse payloads in a_data
+        blocked = type(prob.A)(Ac.ac_plan.indptr, Ac.ac_plan.indices,
+                               a_data, Ac.n_coarse)
+        expanded = expand_bcsr(blocked)
+        np.testing.assert_allclose(np.asarray(s_out).reshape(-1),
+                                   np.asarray(expanded.data).reshape(-1),
+                                   rtol=1e-11, atol=1e-12)
