@@ -34,12 +34,40 @@ def run(m: int = 10) -> None:
     def gated(a_data):
         outs = []
         for ls in setupd.levels:
-            a_data = ptap_numeric_data(ls.ptap_cache, a_data, ls.P.data)
+            a_data = ptap_numeric_data(ls.ptap_cache, a_data, ls.P.data,
+                                       path="reference")
             outs.append(a_data)
         return outs
 
     gated_j = jax.jit(gated)
     us_gated = time_fn(gated_j, prob.A.data)
+
+    # fused vs unfused numeric phase: wall time + peak HBM intermediates.
+    # The unfused path materializes the (npairs, br, bc) pair products; the
+    # fused tiled kernel reduces them in VMEM (plan.numeric_intermediate
+    # accounting is exact, not sampled).
+    def fused(a_data):
+        outs = []
+        for ls in setupd.levels:
+            a_data = ptap_numeric_data(ls.ptap_cache, a_data, ls.P.data,
+                                       path="fused", interpret=True)
+            outs.append(a_data)
+        return outs
+
+    us_fused = time_fn(jax.jit(fused), prob.A.data)
+    plans = [p for ls in setupd.levels
+             for p in (ls.ptap_cache.ap_plan, ls.ptap_cache.ac_plan)]
+    peak_unfused = max(p.numeric_intermediate_bytes("reference")
+                       for p in plans)
+    peak_fused = max(p.numeric_intermediate_bytes("fused") for p in plans)
+    fill = min(p.tile_fill for p in plans)
+    emit(f"t3.ptap.numeric_unfused.m{m}", us_gated,
+         f"peak_intermediate_bytes={peak_unfused}")
+    emit(f"t3.ptap.numeric_fused.m{m}", us_fused,
+         f"peak_intermediate_bytes={peak_fused};"
+         f"bytes_ratio={peak_unfused/max(peak_fused,1):.2f}x;"
+         f"min_tile_fill={fill:.2f};"
+         f"note=fused_runs_interpret_on_cpu")
 
     # ungated: rebuild the prolongator-side cache every recompute
     def ungated(a_data):

@@ -41,6 +41,13 @@ def run(ladder=(6, 8, 10)) -> None:
         plan_s = spgemm_symbolic(expand_bcsr(ls.A0), expand_bcsr(ls.P))
         s_bytes = plan_s.plan_bytes
         emit(f"t5.spgemm_plan.block.m{m}", 0.0, f"bytes={b_bytes};n={n}")
+        # the fused path's tiled (ELL-of-pairs) layout pays padding to the
+        # histogram width; keep the traffic model honest by reporting it
+        # next to the flat pair-list bytes.
+        emit(f"t5.spgemm_plan.tiled.m{m}", 0.0,
+             f"bytes={plan_b.plan_tiled_bytes};"
+             f"vs_flat={plan_b.plan_tiled_bytes/b_bytes:.2f}x;"
+             f"kmax={plan_b.pair_kmax};fill={plan_b.tile_fill:.2f}")
         emit(f"t5.spgemm_plan.scalar.m{m}", 0.0,
              f"bytes={s_bytes};ratio={s_bytes/b_bytes:.1f}x;"
              f"model_ratio={s_bytes_model/b_bytes:.1f}x")

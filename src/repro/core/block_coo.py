@@ -84,19 +84,24 @@ def preallocate_coo(rows, cols, nbr: int, nbc: int, br: int, bc: int
 
 
 def set_values_coo(plan: BlockCOOPlan, values: Array, *,
-                   use_kernel: bool = False, interpret: bool = True
-                   ) -> BlockCSR:
+                   use_kernel: bool | None = None,
+                   interpret: bool | None = None) -> BlockCSR:
     """Numeric phase: one device scatter-sum of dense block payloads.
 
     ``values``: (n_input, br, bc) dense blocks, one per declared coordinate,
     in declaration order — exactly PETSc's MatSetValuesCOO value stream.
+    ``use_kernel``/``interpret`` default per backend (Pallas streaming
+    segment-sum on TPU, jnp ``segment_sum`` elsewhere).
     """
+    from repro.kernels import backend as _backend
     assert values.shape == (plan.n_input, plan.br, plan.bc), values.shape
     vals = values[jnp.asarray(plan.keep)][jnp.asarray(plan.order)]
     seg = jnp.asarray(plan.out_idx_sorted)
-    if use_kernel:
+    if _backend.resolve_use_kernel(use_kernel):
         from repro.kernels.block_seg_sum import ops as _k
-        data = _k.block_seg_sum(vals, seg, plan.nnzb, interpret=interpret)
+        data = _k.block_seg_sum(
+            vals, seg, plan.nnzb,
+            interpret=_backend.resolve_interpret(interpret))
     else:
         data = jax.ops.segment_sum(vals, seg, num_segments=plan.nnzb,
                                    indices_are_sorted=True)

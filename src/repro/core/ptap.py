@@ -14,8 +14,9 @@ jitted function — the hot PtAP.  ``ptap()`` front door checks the state gate
 exactly like PetscObjectState: if the caller passes a cache built for this
 (P structure, A structure), zero symbolic work happens.
 
-The distributed version (halo gather of P_oth over the mesh) lives in
-``repro.dist.pamg``; this module is the single-device core it shares.
+The distributed version (slab halo of the off-process operands over the rank
+mesh, with the off-process prolongator rows P_oth cached device-side) lives
+in ``repro.dist.pamg``; this module is the single-device core it shares.
 """
 from __future__ import annotations
 
@@ -82,15 +83,17 @@ def ptap_symbolic(A: BlockCSR, P: BlockCSR) -> PtAPCache:
                      n_coarse=P.nbc, bs_c=P.bc)
 
 
-def ptap_numeric_data(cache: PtAPCache, a_data: Array, p_data: Array, *,
-                      use_kernel: bool = False, interpret: bool = True
-                      ) -> Array:
-    """Hot PtAP: pure device function (local blocked triple product)."""
+def ptap_numeric_data(cache: PtAPCache, a_data: Array, p_data: Array,
+                      **kw) -> Array:
+    """Hot PtAP: pure device function (local blocked triple product).
+
+    Both Galerkin products (A @ P and R @ (A P)) share the SpGEMM numeric
+    machinery; ``path=`` / ``interpret=`` flow through, so the backend
+    default dispatches the fused tiled kernel on accelerators.
+    """
     r_data = p_data[jnp.asarray(cache.r_perm)].transpose(0, 2, 1)
-    ap_data = spgemm_numeric_data(cache.ap_plan, a_data, p_data,
-                                  use_kernel=use_kernel, interpret=interpret)
-    return spgemm_numeric_data(cache.ac_plan, r_data, ap_data,
-                               use_kernel=use_kernel, interpret=interpret)
+    ap_data = spgemm_numeric_data(cache.ap_plan, a_data, p_data, **kw)
+    return spgemm_numeric_data(cache.ac_plan, r_data, ap_data, **kw)
 
 
 def ptap_numeric(cache: PtAPCache, A: BlockCSR, P: BlockCSR, **kw

@@ -15,10 +15,23 @@ symbolic (host, cached)
     paper Sec. 4.5 — ``plan_bytes``/``scalar_plan_bytes`` quantify that.
 
 numeric (device, jitted)
-    gather -> batched rectangular block GEMM -> sorted segment-sum.  The
-    batched GEMM is the MXU hot spot and has a Pallas kernel
-    (``repro.kernels.block_pair_gemm``); the segment-sum has
-    ``repro.kernels.block_seg_sum``.
+    Three paths, selected by ``path=`` (``None`` -> backend default, see
+    ``repro.kernels.backend``):
+
+    "fused"      the hot path.  The symbolic phase additionally re-packs the
+                 sorted pair list into a *tiled* fixed-width layout (one row
+                 of ``pair_kmax`` zero-padded pair slots per output block,
+                 ELL-of-pairs), and ``repro.kernels.fused_pair_gemm`` runs
+                 gather -> rectangular block GEMM -> segment reduce as one
+                 ``pallas_call`` that accumulates each output block in VMEM.
+                 The ``(npairs, br, bc)`` pair-product array never touches
+                 HBM.
+    "pairs"      the unfused kernel chain: gather -> batched block GEMM
+                 (``repro.kernels.block_pair_gemm``) -> streaming segment
+                 sum (``repro.kernels.block_seg_sum``); materializes the
+                 pair products.
+    "reference"  einsum + sorted ``segment_sum`` — the always-available
+                 oracle the fused path is validated against.
 """
 from __future__ import annotations
 
@@ -43,21 +56,77 @@ class SpGEMMPlan:
     nbc: int                 # C block cols
     br: int                  # C block shape
     bc: int
+    bk: int                  # inner (contracted) block dim: A.bc == B.br
     nnzb: int
     pair_a: np.ndarray       # (npairs,) indices into A.data
     pair_b: np.ndarray       # (npairs,) indices into B.data
     out_idx: np.ndarray      # (npairs,) sorted output slot per pair
     a_state: int             # state tokens of the operands the plan matches
     b_state: int
+    # Tiled (ELL-of-pairs) layout for the fused one-pass numeric kernel:
+    # each tile row holds up to ``pair_kmax`` zero-padded pair slots of ONE
+    # output block, so each kernel grid step owns a contiguous run of rows
+    # and reduces them entirely in VMEM.  ``pair_kmax`` is chosen from the
+    # pair histogram to minimize modeled traffic; output blocks with more
+    # pairs span several consecutive rows (``tile_seg`` maps row -> output
+    # slot) and their partials are combined by an O(nnzb)-sized sorted
+    # segment-sum — never an O(npairs) one.  When no slot overflows
+    # (``tile_identity``) the kernel's output IS C.data: a true single pass.
+    tile_pair_a: np.ndarray  # (tile_rows, pair_kmax) int32 into A.data
+    tile_pair_b: np.ndarray  # (tile_rows, pair_kmax) int32 into B.data
+    tile_mask: np.ndarray    # (tile_rows, pair_kmax) bool, False on padding
+    tile_seg: np.ndarray     # (tile_rows,) int32 sorted output slot per row
+    tile_identity: bool      # tile_seg == arange(nnzb): no combine needed
 
     @property
     def npairs(self) -> int:
         return int(self.pair_a.shape[0])
 
     @property
+    def pair_kmax(self) -> int:
+        """Tile width: pair slots per tile row (histogram-chosen)."""
+        return int(self.tile_pair_a.shape[1])
+
+    @property
+    def tile_rows(self) -> int:
+        return int(self.tile_pair_a.shape[0])
+
+    @property
+    def tile_fill(self) -> float:
+        """Occupancy of the tiled layout (1.0 = no padding waste)."""
+        cells = self.tile_pair_a.size
+        return self.npairs / cells if cells else 1.0
+
+    @property
     def plan_bytes(self) -> int:
         return (self.indptr.nbytes + self.indices.nbytes + self.pair_a.nbytes
                 + self.pair_b.nbytes + self.out_idx.nbytes)
+
+    @property
+    def plan_tiled_bytes(self) -> int:
+        """Index bytes of the tiled layout (the fused path's whole plan)."""
+        return (self.indptr.nbytes + self.indices.nbytes
+                + self.tile_pair_a.nbytes + self.tile_pair_b.nbytes
+                + self.tile_mask.nbytes + self.tile_seg.nbytes)
+
+    def numeric_intermediate_bytes(self, path: str = "fused",
+                                   itemsize: int = 8) -> int:
+        """Peak HBM bytes of numeric-phase intermediates.
+
+        The unfused paths materialize the gathered operands *and* the
+        ``(npairs, br, bc)`` pair-product array; the fused path streams the
+        gathered tiled operands and reduces in VMEM — at worst it adds the
+        O(nnzb)-sized row partials when the histogram forced row splits.
+        """
+        br, bk, bc = self.br, self.bk, self.bc
+        if path == "fused":
+            operands = self.tile_pair_a.size * (br * bk + bk * bc) * itemsize
+            partials = (0 if self.tile_identity
+                        else self.tile_rows * br * bc * itemsize)
+            return operands + partials
+        lhs_rhs = self.npairs * (br * bk + bk * bc) * itemsize
+        prod = self.npairs * br * bc * itemsize
+        return lhs_rhs + prod
 
     def scalar_plan_bytes(self, bk: int) -> int:
         """Pair-list bytes if the same product ran in scalar CSR.
@@ -101,23 +170,119 @@ def spgemm_symbolic(A: BlockCSR, B: BlockCSR) -> SpGEMMPlan:
     indptr = np.zeros(nbr + 1, dtype=np.int64)
     np.add.at(indptr, u_rows + 1, 1)
     indptr = np.cumsum(indptr)
+    pair_a_s = pair_a[order]
+    pair_b_s = pair_b[order]
+    out_idx = inv.astype(np.int32)
+    tile_a, tile_b, tile_mask, tile_seg, ident = _tile_pairs(
+        pair_a_s, pair_b_s, out_idx, len(uniq), A.br, A.bc, B.bc)
     return SpGEMMPlan(indptr=indptr, indices=u_cols, nbr=nbr, nbc=nbc,
-                      br=A.br, bc=B.bc, nnzb=len(uniq),
-                      pair_a=pair_a[order], pair_b=pair_b[order],
-                      out_idx=inv.astype(np.int32),
-                      a_state=A.state_token, b_state=B.state_token)
+                      br=A.br, bc=B.bc, bk=A.bc, nnzb=len(uniq),
+                      pair_a=pair_a_s, pair_b=pair_b_s, out_idx=out_idx,
+                      a_state=A.state_token, b_state=B.state_token,
+                      tile_pair_a=tile_a, tile_pair_b=tile_b,
+                      tile_mask=tile_mask, tile_seg=tile_seg,
+                      tile_identity=ident)
+
+
+def _choose_tile_width(counts: np.ndarray, br: int, bk: int, bc: int) -> int:
+    """Pick the tile width from the pair histogram by modeled traffic.
+
+    Width k costs ``k * sum(ceil(c/k))`` operand cells (each moving one
+    (br, bk) + one (bk, bc) block) plus, whenever any slot splits, a write +
+    read of one (br, bc) partial per tile row.  Minimizing this trades ELL
+    padding against the partial combine; skewed histograms (the R@AP stage)
+    get a small k with row splits, tight ones get kmax and a true single
+    pass.
+    """
+    kmax = int(counts.max())
+    if kmax <= 1:
+        return max(kmax, 1)
+    hist = np.bincount(np.minimum(counts, kmax))
+    vals = np.arange(len(hist), dtype=np.int64)
+    nnzb = int((counts > 0).sum())
+    operand = br * bk + bk * bc
+    partial = 2 * br * bc
+    if kmax <= 512:
+        cands = np.arange(1, kmax + 1)
+    else:  # pathological width: probe the histogram quantiles only
+        qs = np.percentile(counts[counts > 0],
+                           [25, 50, 75, 90, 95, 99]).astype(np.int64)
+        cands = np.unique(np.clip(np.concatenate([qs, [kmax]]), 1, kmax))
+    best_k, best_cost = kmax, None
+    for k in cands:
+        nrows = int((hist * -(-vals // k)).sum())
+        cost = k * nrows * operand + (partial * nrows
+                                      if nrows > nnzb else 0)
+        if best_cost is None or cost < best_cost:
+            best_cost, best_k = cost, int(k)
+    return best_k
+
+
+def _tile_pairs(pair_a: np.ndarray, pair_b: np.ndarray, out_idx: np.ndarray,
+                nnzb: int, br: int, bk: int, bc: int):
+    """Re-pack the sorted pair list into the fixed-width tiled layout.
+
+    Rows of ``pair_kmax`` zero-padded pair slots; an output block with more
+    pairs than the width gets consecutive rows (``tile_seg`` maps row ->
+    slot).  Padded cells gather block 0 and are masked out (the numeric
+    phase zeroes the gathered lhs, so padding contributes exactly 0.0).
+    """
+    npairs = len(out_idx)
+    if not npairs or not nnzb:
+        return (np.zeros((nnzb, 0), np.int32), np.zeros((nnzb, 0), np.int32),
+                np.zeros((nnzb, 0), bool),
+                np.arange(nnzb, dtype=np.int32), True)
+    counts = np.bincount(out_idx, minlength=nnzb).astype(np.int64)
+    width = _choose_tile_width(counts, br, bk, bc)
+    rows_per_slot = -(-counts // width)          # ceil; 0 for empty slots
+    nrows = int(rows_per_slot.sum())
+    row_start = np.zeros(nnzb + 1, dtype=np.int64)
+    np.cumsum(rows_per_slot, out=row_start[1:])
+    seg = np.repeat(np.arange(nnzb, dtype=np.int32), rows_per_slot)
+    starts = np.zeros(nnzb + 1, dtype=np.int64)
+    np.cumsum(counts, out=starts[1:])
+    within = np.arange(npairs, dtype=np.int64) - starts[out_idx]
+    r_idx = row_start[out_idx] + within // width
+    c_idx = within % width
+    tile_a = np.zeros((nrows, width), dtype=np.int32)
+    tile_b = np.zeros((nrows, width), dtype=np.int32)
+    mask = np.zeros((nrows, width), dtype=bool)
+    tile_a[r_idx, c_idx] = pair_a
+    tile_b[r_idx, c_idx] = pair_b
+    mask[r_idx, c_idx] = True
+    ident = nrows == nnzb and bool(np.array_equal(
+        seg, np.arange(nnzb, dtype=np.int32)))
+    return tile_a, tile_b, mask, seg, ident
 
 
 def spgemm_numeric_data(plan: SpGEMMPlan, a_data: Array, b_data: Array, *,
-                        use_kernel: bool = False, interpret: bool = True
-                        ) -> Array:
-    """Device numeric phase -> C.data.  Pure function of the plan + values."""
+                        path: str | None = None,
+                        use_kernel: bool | None = None,
+                        interpret: bool | None = None,
+                        tile_slots: int | None = None) -> Array:
+    """Device numeric phase -> C.data.  Pure function of the plan + values.
+
+    ``path`` selects the execution strategy ("fused" | "pairs" |
+    "reference"); ``None`` resolves the backend default — fused on TPU,
+    reference on CPU *and* GPU (Pallas does not lower these block shapes
+    via Triton yet; see ``repro.kernels.backend``).  The
+    legacy knob maps ``use_kernel=True`` to ``path="pairs"`` and an
+    explicit ``use_kernel=False`` to ``path="reference"``.
+    """
+    from repro.kernels import backend as _backend
+    if path is None and use_kernel is not None:
+        path = "pairs" if use_kernel else "reference"
+    path = _backend.resolve_spgemm_path(path)
+    interpret = _backend.resolve_interpret(interpret)
+    if path == "fused":
+        return _fused_numeric(plan, a_data, b_data, interpret=interpret,
+                              tile_slots=tile_slots)
     pa = jnp.asarray(plan.pair_a)
     pb = jnp.asarray(plan.pair_b)
     seg = jnp.asarray(plan.out_idx)
     lhs = a_data[pa]                     # (npairs, br, bk)
     rhs = b_data[pb]                     # (npairs, bk, bc)
-    if use_kernel:
+    if path == "pairs":
         from repro.kernels.block_pair_gemm import ops as _kg
         prod = _kg.block_pair_gemm(lhs, rhs, interpret=interpret)
         from repro.kernels.block_seg_sum import ops as _ks
@@ -125,6 +290,32 @@ def spgemm_numeric_data(plan: SpGEMMPlan, a_data: Array, b_data: Array, *,
     prod = jnp.einsum("pij,pjk->pik", lhs, rhs,
                       preferred_element_type=a_data.dtype)
     return jax.ops.segment_sum(prod, seg, num_segments=plan.nnzb,
+                               indices_are_sorted=True)
+
+
+def _fused_numeric(plan: SpGEMMPlan, a_data: Array, b_data: Array, *,
+                   interpret: bool, tile_slots: int | None = None) -> Array:
+    """One-pass numeric phase over the tiled plan layout.
+
+    Gathers the A/B blocks into the fixed-width ELL-of-pairs operand stream
+    (padded lhs slots zeroed, so padding contributes exactly 0.0) and hands
+    it to the fused Pallas kernel, which contracts and reduces each output
+    block in VMEM.  No array of shape ``(npairs, br, bc)`` is ever built.
+    """
+    from repro.kernels.fused_pair_gemm import ops as _kf
+    ta = jnp.asarray(plan.tile_pair_a)
+    tb = jnp.asarray(plan.tile_pair_b)
+    mask = jnp.asarray(plan.tile_mask)
+    lhs = jnp.where(mask[..., None, None], a_data[ta], 0)
+    rhs = b_data[tb]                     # (tile_rows, kmax, bk, bc)
+    out = _kf.fused_pair_gemm(lhs, rhs, interpret=interpret,
+                              tile_slots=tile_slots)
+    if plan.tile_identity:
+        return out
+    # histogram-forced row splits: combine the O(nnzb)-sized row partials
+    # (never the O(npairs) pair products)
+    return jax.ops.segment_sum(out, jnp.asarray(plan.tile_seg),
+                               num_segments=plan.nnzb,
                                indices_are_sorted=True)
 
 

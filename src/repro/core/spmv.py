@@ -62,13 +62,20 @@ def spmv_bcsr_ref(A: BlockCSR, x: Array) -> Array:
     return y.reshape(A.nbr * A.br)
 
 
-def spmv(A, x: Array, *, use_kernel: bool = False, interpret: bool = True
-         ) -> Array:
-    """Front door: accepts BlockCSR (converts) or BlockELL."""
+def spmv(A, x: Array, *, use_kernel: bool | None = None,
+         interpret: bool | None = None) -> Array:
+    """Front door: accepts BlockCSR (converts) or BlockELL.
+
+    ``use_kernel=None`` / ``interpret=None`` resolve per backend: the Pallas
+    kernel compiled natively on TPU, the jnp reference elsewhere (see
+    ``repro.kernels.backend``).
+    """
+    from repro.kernels import backend as _backend
     ell = A.to_ell() if isinstance(A, BlockCSR) else A
-    if use_kernel:
+    if _backend.resolve_use_kernel(use_kernel):
         from repro.kernels.block_spmv import ops as _k
-        return _k.block_spmv(ell, x, interpret=interpret)
+        return _k.block_spmv(ell, x,
+                             interpret=_backend.resolve_interpret(interpret))
     return spmv_ell(ell, x)
 
 

@@ -62,41 +62,61 @@ def pbjacobi_apply(dinv: Array, r: Array) -> Array:
                       preferred_element_type=dinv.dtype).reshape(-1)
 
 
-def chebyshev_smooth(lv: LevelState, b: Array, x: Array,
-                     degree: int = 2, lo_frac: float = 0.1,
-                     hi_frac: float = 1.05) -> Array:
+def chebyshev_recurrence(spmv, pbj, lam_max: Array, b: Array, x: Array,
+                         degree: int = 2, lo_frac: float = 0.1,
+                         hi_frac: float = 1.05) -> Array:
     """pbjacobi-preconditioned Chebyshev on [lo_frac, hi_frac]*lam_max.
 
-    GAMG's default smoother; degree 2 matches the paper's production setup
-    of cheap, SpMV-dominated smoothing (Sec. 4.2: the V-cycle is SpMV-bound).
+    Shape-agnostic and closure-parameterized so the single-device path and
+    the distributed path (``repro.dist.solver``) run the *same* recurrence
+    with the same constants — the iteration-parity invariant the dist
+    selftest asserts depends on this being the single source of truth.
     """
-    lo = lo_frac * lv.lam_max
-    hi = hi_frac * lv.lam_max
+    lo = lo_frac * lam_max
+    hi = hi_frac * lam_max
     theta = 0.5 * (hi + lo)
     delta = 0.5 * (hi - lo)
     sigma = theta / delta
     rho = 1.0 / sigma
-    r = b - spmv_ell(lv.a_ell, x)
-    z = pbjacobi_apply(lv.dinv, r)
+    r = b - spmv(x)
+    z = pbj(r)
     d = z / theta
     x = x + d
     for _ in range(degree - 1):
         rho_new = 1.0 / (2.0 * sigma - rho)
-        r = r - spmv_ell(lv.a_ell, d)
-        z = pbjacobi_apply(lv.dinv, r)
+        r = r - spmv(d)
+        z = pbj(r)
         d = (rho_new * rho) * d + (2.0 * rho_new / delta) * z
         x = x + d
         rho = rho_new
     return x
 
 
+def pbjacobi_recurrence(spmv, pbj, b: Array, x: Array, its: int = 2,
+                        omega: float = 0.6) -> Array:
+    """Damped point-block Jacobi, closure-parameterized like Chebyshev."""
+    for _ in range(its):
+        r = b - spmv(x)
+        x = x + omega * pbj(r)
+    return x
+
+
+def chebyshev_smooth(lv: LevelState, b: Array, x: Array,
+                     degree: int = 2, lo_frac: float = 0.1,
+                     hi_frac: float = 1.05) -> Array:
+    """GAMG's default smoother; degree 2 matches the paper's production
+    setup of cheap, SpMV-dominated smoothing (Sec. 4.2)."""
+    return chebyshev_recurrence(lambda v: spmv_ell(lv.a_ell, v),
+                                lambda r: pbjacobi_apply(lv.dinv, r),
+                                lv.lam_max, b, x, degree, lo_frac, hi_frac)
+
+
 def pbjacobi_smooth(lv: LevelState, b: Array, x: Array,
                     omega: float = 0.6, its: int = 2) -> Array:
     """Plain damped point-block Jacobi (the paper's pbjacobi option)."""
-    for _ in range(its):
-        r = b - spmv_ell(lv.a_ell, x)
-        x = x + omega * pbjacobi_apply(lv.dinv, r)
-    return x
+    return pbjacobi_recurrence(lambda v: spmv_ell(lv.a_ell, v),
+                               lambda r: pbjacobi_apply(lv.dinv, r),
+                               b, x, its, omega)
 
 
 def _smooth(lv, b, x, smoother: str, degree: int):

@@ -1,0 +1,13 @@
+"""Distributed (multi-device) AMG path — PETSc-style row-slab decomposition.
+
+``partition``   balanced contiguous block-row slabs (the rank layout).
+``pamg``        distributed blocked operators: slab halo exchange
+                (neighbor ``ppermute`` windows), distributed ELL SpMV, and
+                the distributed PtAP stages with the off-process
+                prolongator operand (P_oth) cached device-side.
+``solver``      ``build_dist_gamg`` / ``make_dist_solver`` — the full
+                device-resident hot path (numeric hierarchy recompute +
+                AMG-preconditioned CG) as one ``shard_map`` program.
+``selftest``    subprocess entry point asserting distributed == single
+                device parity (``python -m repro.dist.selftest <m>``).
+"""

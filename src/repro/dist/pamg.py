@@ -1,0 +1,351 @@
+"""Distributed blocked operators over row slabs — halos, SpMV, and PtAP.
+
+The paper's distributed hot path keeps every operand device-resident and
+pre-stages the *communication plan* on the host, once, gated on object
+state.  The JAX rendering here follows the same split:
+
+host (cold, this module's ``build_*``)
+    Remap every global index into (owner rank, slab-local) coordinates,
+    decide the halo pattern, and stack the per-rank plans into
+    ``(ndev, ...)`` arrays that ``shard_map`` splits over the rank axis.
+    Constant operands — the prolongator payloads, including the off-process
+    rows **P_oth** — are pre-gathered per rank at build time (the paper's
+    cached stacked operand), so the hot PtAP does *zero* communication for
+    P.
+
+device (hot, the ``*_apply`` / ``halo_window`` functions)
+    Pure per-rank functions used inside ``shard_map``.  The only
+    communication is (a) vector halo windows for SpMV and (b) the
+    off-process reduction window over the A·P payload slabs in the second
+    Galerkin stage — both neighbor ``lax.ppermute`` slab exchanges on
+    mesh-ordered problems (``Halo.strategy == "ppermute"``), with an
+    ``all_gather`` fallback when a plan's reach exceeds the neighbor
+    window.
+
+Padding discipline (what keeps the padded lanes exact):
+    every payload slab is padded to ``max_count + 1`` so its last slot is
+    guaranteed zero; padded plan entries either gather that zero slot or
+    carry a zero *constant* operand, so they contribute exactly ``0.0``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.block_csr import BlockCSR
+from repro.core.spgemm import SpGEMMPlan
+from repro.dist.partition import RowPartition
+
+Array = jax.Array
+
+AXIS = "rank"
+
+
+# ---------------------------------------------------------------------------
+# Halo windows
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Halo:
+    """Exchange pattern for one sharded operand axis."""
+
+    width: int       # neighbor hops each side (0 = purely local)
+    strategy: str    # "local" | "ppermute" | "allgather"
+    cpad: int        # padded slab length of the exchanged axis
+    ndev: int
+
+    @property
+    def window_len(self) -> int:
+        if self.strategy == "allgather":
+            return self.cpad * self.ndev
+        return self.cpad * (2 * self.width + 1)
+
+    @property
+    def exchanged_slabs(self) -> int:
+        """Slabs moved per rank per exchange (the halo traffic unit)."""
+        return 0 if self.strategy == "local" else (
+            self.ndev - 1 if self.strategy == "allgather" else 2 * self.width)
+
+
+def make_halo(width: int, cpad: int, ndev: int) -> Halo:
+    if width == 0 or ndev == 1:
+        return Halo(0, "local", cpad, ndev)
+    # neighbor windows beat allgather strictly below (ndev-1)/2 hops: at
+    # 2w == ndev the (2w+1)-slab window already exceeds the ndev-slab one
+    if width <= max(1, (ndev - 1) // 2):
+        return Halo(width, "ppermute", cpad, ndev)
+    return Halo(width, "allgather", cpad, ndev)
+
+
+def window_coords(halo: Halo, owner: np.ndarray, local: np.ndarray,
+                  rank: int) -> np.ndarray:
+    """Host: window coordinate of (owner, slab-local) seen from ``rank``."""
+    if halo.strategy == "allgather":
+        return owner * halo.cpad + local
+    return (owner - rank + halo.width) * halo.cpad + local
+
+
+def center_coord(halo: Halo, rank: int) -> int:
+    """A always-valid in-window coordinate for padded plan entries."""
+    if halo.strategy == "allgather":
+        return rank * halo.cpad
+    return halo.width * halo.cpad
+
+
+def halo_window(x: Array, halo: Halo) -> Array:
+    """Device (inside shard_map): build the halo window of a sharded slab.
+
+    ``x`` is this rank's padded slab ``(cpad, ...)``; the result stacks the
+    neighbor slabs ``[-w..w]`` (ppermute), everything (allgather), or is
+    ``x`` itself (local).  Edge ranks receive zero slabs, which padded plan
+    entries never address.
+    """
+    if halo.strategy == "local":
+        return x
+    if halo.strategy == "allgather":
+        return lax.all_gather(x, AXIS, axis=0, tiled=True)
+    parts = []
+    for d in range(-halo.width, halo.width + 1):
+        if d == 0:
+            parts.append(x)
+            continue
+        # rank r receives slab r + d  <=>  src i sends to dst i - d
+        perm = [(i, i - d) for i in range(halo.ndev)
+                if 0 <= i - d < halo.ndev]
+        parts.append(lax.ppermute(x, AXIS, perm))
+    return jnp.concatenate(parts, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Distributed padded-ELL operator (SpMV over slabs)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DistEll:
+    """Per-rank stacked ELL operator: rows sharded, x gathered via halo.
+
+    ``indices`` address the *halo window* of the input vector.  Values come
+    either from a constant payload baked at build time (``data``; P and R
+    under the reuse model) or are gathered from the rank's runtime payload
+    slab (``gather`` into A values).
+    """
+
+    halo: Halo
+    indices: np.ndarray                 # (ndev, rpad, kmax) int32 window ids
+    gather: Optional[np.ndarray]        # (ndev, rpad, kmax) into payload slab
+    data: Optional[np.ndarray]          # (ndev, rpad, kmax, br, bc) constant
+    rpad: int
+    kmax: int
+    br: int
+    bc: int
+
+
+def build_dist_ell(A: BlockCSR, row_part: RowPartition,
+                   col_part: RowPartition, *,
+                   payload_pad: Optional[int] = None,
+                   const_data: Optional[np.ndarray] = None) -> DistEll:
+    """Host: shard a BlockCSR's padded-ELL form over row slabs.
+
+    Exactly one of ``payload_pad`` (runtime values, gather map into the
+    rank's padded nnz slab whose last slot is zero) or ``const_data``
+    (global (nnzb, br, bc) numpy payloads baked per rank) must be given.
+    """
+    assert (payload_pad is None) != (const_data is None)
+    ndev = row_part.ndev
+    plan = A.ell_plan()
+    nbr, kmax = plan.indices.shape
+    kmax = max(kmax, 1)
+    idx = np.zeros((nbr, kmax), np.int64)
+    msk = np.zeros((nbr, kmax), bool)
+    gat = np.zeros((nbr, kmax), np.int64)
+    idx[:, :plan.indices.shape[1]] = plan.indices
+    msk[:, :plan.mask.shape[1]] = plan.mask
+    gat[:, :plan.gather.shape[1]] = plan.gather
+    rank_of_row = row_part.owner_of(np.arange(nbr))
+    owner = col_part.owner_of(idx)
+    dist = np.abs(np.where(msk, owner - rank_of_row[:, None], 0))
+    width = int(dist.max()) if dist.size else 0
+    halo = make_halo(width, col_part.max_count, ndev)
+    rpad = max(row_part.max_count, 1)
+    col_local = idx - col_part.starts[owner]
+
+    indices = np.zeros((ndev, rpad, kmax), np.int32)
+    gather = np.zeros((ndev, rpad, kmax), np.int64)
+    data = (np.zeros((ndev, rpad, kmax) + const_data.shape[1:],
+                     const_data.dtype) if const_data is not None else None)
+    nnz_starts = A.indptr[row_part.starts]
+    for r in range(ndev):
+        sl = row_part.slab(r)
+        cnt = sl.stop - sl.start
+        coords = window_coords(halo, owner[sl], col_local[sl], r)
+        coords = np.where(msk[sl], coords, center_coord(halo, r))
+        indices[r, :cnt] = coords
+        indices[r, cnt:] = center_coord(halo, r)
+        if const_data is not None:
+            blocks = const_data[gat[sl]] * msk[sl, :, None, None]
+            data[r, :cnt] = blocks
+        else:
+            loc = np.where(msk[sl], gat[sl] - nnz_starts[r], payload_pad - 1)
+            gather[r, :cnt] = loc
+            gather[r, cnt:] = payload_pad - 1
+    return DistEll(halo=halo, indices=indices,
+                   gather=gather if const_data is None else None,
+                   data=data, rpad=rpad, kmax=kmax, br=A.br, bc=A.bc)
+
+
+def dist_ell_apply(indices: Array, data: Array, x_win: Array) -> Array:
+    """Device per-rank SpMV: (rpad, kmax, br, bc) x window -> (rpad, br)."""
+    g = x_win[indices]                       # (rpad, kmax, bc)
+    return jnp.einsum("rkab,rkb->ra", data, g,
+                      preferred_element_type=data.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Distributed SpGEMM pair stages (the two Galerkin products)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DistPairStage:
+    """One rank-sharded numeric SpGEMM stage (pairs -> segment-sum).
+
+    Mirrors ``SpGEMMPlan``'s sorted pair list, restricted to the pairs whose
+    output block this rank owns (a contiguous range, since pairs are sorted
+    by output slot and slots by row).  The lhs operand is always local —
+    A payloads for A@P, the constant R blocks for R@(AP); the rhs is either
+    the build-time-cached P_oth blocks (A@P: zero hot communication) or a
+    halo window over the AP payload slabs (the off-process reduction).
+    """
+
+    halo: Optional[Halo]                # over rhs payload slabs (None=const)
+    lhs_gather: Optional[np.ndarray]    # (ndev, ppad) into lhs payload slab
+    lhs_data: Optional[np.ndarray]      # (ndev, ppad, br, bk) constant
+    rhs_gather: Optional[np.ndarray]    # (ndev, ppad) into rhs window
+    rhs_data: Optional[np.ndarray]      # (ndev, ppad, bk, bc) constant
+    seg: np.ndarray                     # (ndev, ppad) int32 sorted out slots
+    out_pad: int                        # output slab length (max nnz + 1)
+    ppad: int
+
+
+def _pair_ranges(plan: SpGEMMPlan, out_part: RowPartition):
+    """Per-rank contiguous [lo, hi) into the sorted pair list + slot base."""
+    slot_rows = np.repeat(np.arange(plan.nbr), np.diff(plan.indptr))
+    pair_rows = slot_rows[plan.out_idx]
+    pair_lo = np.searchsorted(pair_rows, out_part.starts[:-1], side="left")
+    pair_hi = np.searchsorted(pair_rows, out_part.starts[1:] - 1,
+                              side="right")
+    slot_base = plan.indptr[out_part.starts]
+    return pair_lo, pair_hi, slot_base
+
+
+def build_stage1(ap_plan: SpGEMMPlan, fine_part: RowPartition,
+                 a_indptr: np.ndarray, p_data: np.ndarray) -> DistPairStage:
+    """A @ P with rank-cached P_oth: lhs gathered from the A slab, rhs
+    constant (the stacked P blocks each rank's pairs touch, local or not)."""
+    ndev = fine_part.ndev
+    lo, hi, slot_base = _pair_ranges(ap_plan, fine_part)
+    counts = hi - lo
+    ppad = max(int(counts.max()), 1)
+    a_nnz_starts = a_indptr[fine_part.starts]
+    out_counts = slot_base[1:] - slot_base[:-1]
+    out_pad = int(out_counts.max()) + 1
+    lhs_gather = np.zeros((ndev, ppad), np.int64)
+    rhs_data = np.zeros((ndev, ppad) + p_data.shape[1:], p_data.dtype)
+    seg = np.full((ndev, ppad), out_pad - 1, np.int32)
+    for r in range(ndev):
+        s = slice(int(lo[r]), int(hi[r]))
+        cnt = s.stop - s.start
+        lhs_gather[r, :cnt] = ap_plan.pair_a[s] - a_nnz_starts[r]
+        rhs_data[r, :cnt] = p_data[ap_plan.pair_b[s]]
+        seg[r, :cnt] = ap_plan.out_idx[s] - slot_base[r]
+    return DistPairStage(halo=None, lhs_gather=lhs_gather, lhs_data=None,
+                         rhs_gather=None, rhs_data=rhs_data, seg=seg,
+                         out_pad=out_pad, ppad=ppad)
+
+
+def build_stage2(ac_plan: SpGEMMPlan, coarse_part: RowPartition,
+                 fine_part: RowPartition, ap_indptr: np.ndarray,
+                 ap_pad: int, p_data: np.ndarray, r_perm: np.ndarray
+                 ) -> DistPairStage:
+    """R @ (A P): lhs constant (R blocks from the fixed prolongator), rhs
+    gathered from the halo window over the AP payload slabs — the
+    off-process reduction of the distributed PtAP."""
+    ndev = coarse_part.ndev
+    r_data = p_data[r_perm].transpose(0, 2, 1)
+    lo, hi, slot_base = _pair_ranges(ac_plan, coarse_part)
+    counts = hi - lo
+    ppad = max(int(counts.max()), 1)
+    out_counts = slot_base[1:] - slot_base[:-1]
+    out_pad = int(out_counts.max()) + 1
+    # AP nnz -> (fine owner, slab-local offset)
+    nbr_f = len(ap_indptr) - 1
+    ap_rows = np.repeat(np.arange(nbr_f), np.diff(ap_indptr))
+    ap_nnz_starts = ap_indptr[fine_part.starts]
+    owner = fine_part.owner_of(ap_rows)
+    local = np.arange(len(ap_rows), dtype=np.int64) - ap_nnz_starts[owner]
+    # the per-rank ranges tile [0, npairs) contiguously, so rank_of_pair
+    # aligns with the sorted pair list as-is
+    rank_of_pair = np.repeat(np.arange(ndev), counts)
+    width = 0
+    if len(rank_of_pair):
+        width = int(np.abs(owner[ac_plan.pair_b] - rank_of_pair).max())
+    halo = make_halo(width, ap_pad, ndev)
+    lhs_data = np.zeros((ndev, ppad) + r_data.shape[1:], r_data.dtype)
+    rhs_gather = np.zeros((ndev, ppad), np.int64)
+    seg = np.full((ndev, ppad), out_pad - 1, np.int32)
+    for r in range(ndev):
+        s = slice(int(lo[r]), int(hi[r]))
+        cnt = s.stop - s.start
+        lhs_data[r, :cnt] = r_data[ac_plan.pair_a[s]]
+        pb = ac_plan.pair_b[s]
+        rhs_gather[r, :cnt] = window_coords(halo, owner[pb], local[pb], r)
+        rhs_gather[r, cnt:] = center_coord(halo, r)
+        seg[r, :cnt] = ac_plan.out_idx[s] - slot_base[r]
+    return DistPairStage(halo=halo, lhs_gather=None, lhs_data=lhs_data,
+                         rhs_gather=rhs_gather, rhs_data=None, seg=seg,
+                         out_pad=out_pad, ppad=ppad)
+
+
+def dist_stage_apply(lhs: Array, rhs: Array, seg: Array, out_pad: int
+                     ) -> Array:
+    """Device per-rank numeric stage: pair products + sorted segment-sum.
+
+    Padded pairs carry a zero operand on one side, so they add exactly 0.0
+    into the (guaranteed-zero) last output slot.
+    """
+    prod = jnp.einsum("pij,pjk->pik", lhs, rhs,
+                      preferred_element_type=lhs.dtype)
+    return jax.ops.segment_sum(prod, seg, num_segments=out_pad,
+                               indices_are_sorted=True)
+
+
+def build_diag_sel(indptr: np.ndarray, indices: np.ndarray,
+                   part: RowPartition, payload_pad: int):
+    """Host: per-rank gather of the diagonal blocks from the payload slab.
+
+    Returns ``(sel, mask)`` stacked ``(ndev, rpad)``; rows without a stored
+    diagonal (or padding rows) select the zero slot and are masked so the
+    smoother substitutes the identity before inversion.
+    """
+    ndev = part.ndev
+    nbr = len(indptr) - 1
+    rows = np.repeat(np.arange(nbr), np.diff(indptr))
+    is_diag = indices == rows
+    sel_global = np.full(nbr, -1, np.int64)
+    sel_global[rows[is_diag]] = np.flatnonzero(is_diag)
+    nnz_starts = indptr[part.starts]
+    rpad = max(part.max_count, 1)
+    sel = np.full((ndev, rpad), payload_pad - 1, np.int64)
+    mask = np.zeros((ndev, rpad), bool)
+    for r in range(ndev):
+        sl = part.slab(r)
+        cnt = sl.stop - sl.start
+        g = sel_global[sl]
+        ok = g >= 0
+        sel[r, :cnt] = np.where(ok, g - nnz_starts[r], payload_pad - 1)
+        mask[r, :cnt] = ok
+    return sel, mask

@@ -1,0 +1,87 @@
+"""Backend detection and kernel-dispatch defaults.
+
+The seed hardcoded ``interpret=True`` on every Pallas entry point, so a run
+on a real TPU would silently execute the kernels through the (slow, jax-level)
+interpreter.  This module centralizes the decision:
+
+* ``backend()``          — the active JAX platform ("tpu", "gpu", "cpu"),
+                           overridable with ``REPRO_BACKEND`` for testing.
+* ``resolve_interpret``  — ``None`` means "interpret only when no accelerator
+                           can compile the kernel" (i.e. CPU).
+* ``resolve_use_kernel`` — ``None`` means "use the Pallas kernels exactly when
+                           they compile natively" (TPU).
+* ``resolve_spgemm_path``— default numeric SpGEMM path: the fused tiled
+                           kernel on TPU, the einsum+segment_sum reference
+                           on CPU and GPU (interpret-mode Pallas is strictly
+                           slower on CPU; Triton rejects these block tiles
+                           on GPU).  ``REPRO_SPGEMM_PATH`` forces a path
+                           globally ("fused" | "pairs" | "reference").
+
+Every front door (``spmv``, ``spgemm_numeric_data``, ``set_values_coo``)
+accepts ``None`` for these knobs and resolves them here, so the same call
+site does the right thing on laptop CI and on a pod slice.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+
+@functools.lru_cache(maxsize=None)
+def _platform() -> str:
+    try:
+        import jax
+        return jax.default_backend()
+    except Exception:  # pragma: no cover - jax init failure
+        return "cpu"
+
+
+def backend() -> str:
+    """Active platform name; honours the REPRO_BACKEND override.
+
+    Only the jax platform probe is cached — the env override is re-read on
+    every call so tests can flip it mid-process.
+    """
+    return os.environ.get("REPRO_BACKEND") or _platform()
+
+
+def on_accelerator() -> bool:
+    """True where the Pallas kernels compile natively.
+
+    Deliberately TPU-only: the kernels' tiny rectangular block shapes
+    violate Triton's power-of-2 tile constraint, so a compiled-by-default
+    dispatch on GPU would crash at lowering.  GPU runs get the jnp
+    reference paths until the Triton lowering is exercised.
+    """
+    return backend() == "tpu"
+
+
+def resolve_interpret(interpret: bool | None = None) -> bool:
+    """None -> interpret Pallas only where it cannot compile natively."""
+    if interpret is None:
+        return not on_accelerator()
+    return interpret
+
+
+def resolve_use_kernel(use_kernel: bool | None = None) -> bool:
+    """None -> dispatch to Pallas kernels exactly where they compile."""
+    if use_kernel is None:
+        return on_accelerator()
+    return use_kernel
+
+
+def resolve_spgemm_path(path: str | None = None) -> str:
+    """Default numeric SpGEMM path for this backend.
+
+    "fused"     — tiled fused pair-GEMM + in-VMEM segment reduce (no
+                  (npairs, br, bc) HBM intermediate); TPU default.
+    "pairs"     — gather -> block_pair_gemm -> block_seg_sum (three
+                  dispatches, materialized pair products).
+    "reference" — einsum + sorted segment_sum oracle; CPU default.
+    """
+    if path is None:
+        path = os.environ.get("REPRO_SPGEMM_PATH")
+    if path is None:
+        path = "fused" if on_accelerator() else "reference"
+    assert path in ("fused", "pairs", "reference"), path
+    return path

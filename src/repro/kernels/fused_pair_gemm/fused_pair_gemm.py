@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: fused pair-GEMM + segment reduce over the tiled
+(ELL-of-pairs) SpGEMM plan layout — the one-pass Galerkin numeric phase.
+
+The unfused numeric SpGEMM runs as three device dispatches
+
+    gather -> batched rectangular block GEMM -> sorted segment-sum
+
+and materializes the full ``(npairs, br, bc)`` pair-product array in HBM
+between the last two.  That intermediate is the JAX-level rendition of the
+cuSPARSE symbolic/numeric buffer blowup the paper escapes (Sec. 4.5): it is
+pure bandwidth with zero arithmetic intensity.
+
+This kernel consumes the *tiled* plan layout instead (``SpGEMMPlan.tile_*``):
+the sorted pair list is re-packed into one fixed-width row per output block
+slot (width ``pair_kmax`` from the pair histogram, zero-padded), so
+
+  * each grid step owns a contiguous run of ``TS`` output slots,
+  * the ``(br, bk) @ (bk, bc)`` contractions of a slot's pairs are unrolled
+    on-register, and
+  * the per-slot reduction accumulates entirely in VMEM — the pair-product
+    array never exists in HBM.
+
+Layout / tiling
+  grid     = (ceil(nslots / TS),)
+  lhs tile = (TS, kmax, br, bk)  VMEM   gathered A blocks (padded slots = 0)
+  rhs tile = (TS, kmax, bk, bc)  VMEM   gathered B blocks
+  out tile = (TS, br, bc)        VMEM   fully reduced output blocks
+
+The contraction keeps the slot dimension on the lanes (VPU-shaped, like
+``block_pair_gemm``) and unrolls the tiny ``kmax``/``bk`` dims; with
+bs = 3..6 the kernel stays bandwidth-bound and the win is the removed
+``npairs * br * bc`` round trip plus the index bytes (paper Sec. 4.7).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget for the two operand tiles of one grid step (bytes).  Half of
+# the ~16 MB/core VMEM, leaving room for the output tile and double
+# buffering.
+_VMEM_TILE_BUDGET = 4 * 2 ** 20
+
+
+def _fused_kernel(lhs_ref, rhs_ref, o_ref):
+    kmax = lhs_ref.shape[1]
+    bk = lhs_ref.shape[3]
+    acc = jnp.zeros(o_ref.shape, o_ref.dtype)
+    for k in range(kmax):           # static unroll over the pair slots
+        lhs = lhs_ref[:, k]         # (TS, br, bk)
+        rhs = rhs_ref[:, k]         # (TS, bk, bc)
+        for j in range(bk):         # unroll the tiny contraction dim
+            acc = acc + lhs[:, :, j][:, :, None] * rhs[:, j, :][:, None, :]
+    o_ref[...] = acc
+
+
+def default_tile_slots(nslots: int, kmax: int, br: int, bk: int, bc: int,
+                       itemsize: int = 8) -> int:
+    """Pick TS so both operand tiles fit the VMEM budget."""
+    per_slot = max(1, kmax * (br * bk + bk * bc) * itemsize)
+    ts = _VMEM_TILE_BUDGET // per_slot
+    return max(1, min(256, ts, max(nslots, 1)))
+
+
+@functools.partial(jax.jit, static_argnames=("tile_slots", "interpret"))
+def fused_pair_gemm(lhs: jax.Array, rhs: jax.Array, *,
+                    tile_slots: int | None = None,
+                    interpret: bool = True) -> jax.Array:
+    """(nslots, kmax, br, bk) @ (nslots, kmax, bk, bc) -> (nslots, br, bc).
+
+    Contracts each slot's ``kmax`` padded block pairs and reduces them into
+    the slot's output block in one pass (padded pairs must be zero blocks on
+    at least one side).
+    """
+    nslots, kmax, br, bk = lhs.shape
+    _, kmax2, bk2, bc = rhs.shape
+    assert kmax == kmax2 and bk == bk2, (lhs.shape, rhs.shape)
+    if nslots == 0 or kmax == 0:
+        return jnp.zeros((nslots, br, bc), lhs.dtype)
+    ts = tile_slots or default_tile_slots(nslots, kmax, br, bk, bc,
+                                          lhs.dtype.itemsize)
+    ts = min(ts, nslots)
+    pad = (-nslots) % ts
+    if pad:
+        lhs = jnp.pad(lhs, ((0, pad), (0, 0), (0, 0), (0, 0)))
+        rhs = jnp.pad(rhs, ((0, pad), (0, 0), (0, 0), (0, 0)))
+    grid = ((nslots + pad) // ts,)
+    out = pl.pallas_call(
+        _fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ts, kmax, br, bk), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((ts, kmax, bk, bc), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ts, br, bc), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nslots + pad, br, bc), lhs.dtype),
+        interpret=interpret,
+    )(lhs, rhs)
+    return out[:nslots]

@@ -1,0 +1,7 @@
+"""Jit'd wrapper for the fused tiled pair-GEMM + segment-reduce kernel."""
+from repro.kernels.fused_pair_gemm.fused_pair_gemm import (
+    default_tile_slots,
+    fused_pair_gemm,
+)
+
+__all__ = ["fused_pair_gemm", "default_tile_slots"]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused tiled pair-GEMM (contract + reduce)."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def fused_pair_gemm_ref(lhs: jax.Array, rhs: jax.Array) -> jax.Array:
+    """(nslots, kmax, br, bk) @ (nslots, kmax, bk, bc) -> (nslots, br, bc)."""
+    if lhs.shape[1] == 0:
+        return jnp.zeros((lhs.shape[0], lhs.shape[2], rhs.shape[3]),
+                         lhs.dtype)
+    return jnp.einsum("skij,skjl->sil", lhs, rhs,
+                      preferred_element_type=lhs.dtype)

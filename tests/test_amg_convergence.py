@@ -54,7 +54,7 @@ def test_assembled_operator_spd_and_rbm():
     assert w.min() > 0, f"reduced elasticity operator not SPD: {w.min()}"
 
 
-@pytest.mark.parametrize("m", [5, 7])
+@pytest.mark.parametrize("m", [5, pytest.param(7, marks=pytest.mark.slow)])
 def test_gamg_converges_elasticity(m):
     prob = assemble_elasticity(m)
     solver = gamg.GAMGSolver(prob.A, prob.B, coarse_size=30, rtol=1e-8,
@@ -67,10 +67,20 @@ def test_gamg_converges_elasticity(m):
     assert float(jnp.linalg.norm(r) / jnp.linalg.norm(prob.b)) < 1e-7
 
 
+@pytest.mark.slow
+def test_gamg_mesh_independence_trend_full_ladder():
+    """The original (5, 7, 9) ladder, kept opt-in for the heavy tail."""
+    _mesh_independence_trend((5, 7, 9))
+
+
 def test_gamg_mesh_independence_trend():
     """Iterations must not blow up with resolution (multigrid scalability)."""
+    _mesh_independence_trend((4, 5, 7))
+
+
+def _mesh_independence_trend(ladder):
     iters = []
-    for m in (5, 7, 9):
+    for m in ladder:
         prob = assemble_elasticity(m)
         solver = gamg.GAMGSolver(prob.A, prob.B, coarse_size=30, rtol=1e-8,
                                  maxiter=100)
@@ -81,7 +91,7 @@ def test_gamg_mesh_independence_trend():
 def test_blocked_scalar_iteration_parity():
     """Paper Sec. 4.1: both formats converge in the same iteration count to
     the same true residual (same algorithm, different storage)."""
-    prob = assemble_elasticity(6)
+    prob = assemble_elasticity(5)
     setupd = gamg.setup(prob.A, prob.B, coarse_size=30)
     hier_b = gamg.recompute(setupd, prob.A.data)
     hier_s = recompute_scalar(setupd, prob.A.data)

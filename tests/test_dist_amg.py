@@ -25,7 +25,10 @@ def _run_selftest(ndev: int, m: int) -> str:
     return out.stdout
 
 
-@pytest.mark.parametrize("ndev,m", [(4, 5), (8, 6)])
+@pytest.mark.parametrize("ndev,m", [
+    (4, 5),
+    pytest.param(8, 6, marks=pytest.mark.slow),   # ~20s: opt-in heavy case
+])
 def test_dist_amg_parity(ndev, m):
     """Distributed == single-device: same iterations, same solution,
     for both the state-gated and ungated-P_oth paths (paper Table 3)."""
