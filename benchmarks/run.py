@@ -15,11 +15,12 @@ def main() -> None:
         table3_ptap_ablation,
         table4_nnz_row,
         table5_traffic,
+        table6_multirhs,
     )
     print("name,us_per_call,derived")
     failures = 0
     for mod in (table1_weak_scaling, table2_backends, table3_ptap_ablation,
-                table4_nnz_row, table5_traffic):
+                table4_nnz_row, table5_traffic, table6_multirhs):
         try:
             mod.run()
         except Exception:

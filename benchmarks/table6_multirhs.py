@@ -1,0 +1,81 @@
+"""Table 6 (new workload): multi-RHS amortization — intensity and
+time-per-RHS vs panel width k.
+
+The blocked SpMV streams A's values once per solve *per vector*; a k-wide
+panel streams them once for k vectors, so the modeled arithmetic intensity
+
+    flops(k) / bytes(k)
+      = 2 * nnzb * br * bc * k
+        / (values + indices + gathered-x(k) + y(k))
+
+rises monotonically with k: the k-independent operator traffic (values +
+one int32 index per block — the paper's Sec. 4.2 accounting) is amortized
+while the per-column traffic (x gather, y write) scales linearly.  The
+gathered-x term uses the no-reuse upper bound (one bc-panel load per ELL
+slot), the conservative end of the paper's traffic model.
+
+Also times the real kernels on CPU at reduced scale: ``spmm_ell`` per-RHS
+latency, and the end-to-end batched AMG-PCG solve (the solve server's hot
+path) per-RHS vs k.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import repro.core  # noqa: F401
+import jax.numpy as jnp
+
+from repro.core import gamg
+from repro.core.spmv import spmm_ell
+from repro.fem.assemble import assemble_elasticity
+
+from benchmarks.common import emit, time_fn
+
+
+def spmm_traffic_model(ell, k: int):
+    """(flops, bytes) of one ELL panel apply at width k (fp64 values)."""
+    nbr, kmax, br, bc = ell.nbr, ell.kmax, ell.br, ell.bc
+    values = nbr * kmax * br * bc * 8
+    indices = nbr * kmax * 4
+    x_gather = nbr * kmax * bc * 8 * k     # no-reuse bound on panel loads
+    y_write = nbr * br * 8 * k
+    flops = 2 * nbr * kmax * br * bc * k
+    return flops, values + indices + x_gather + y_write
+
+
+def run(m: int = 8, ks=(1, 2, 4, 8, 16)) -> None:
+    prob = assemble_elasticity(m)
+    ell = prob.A.to_ell()
+    rng = np.random.default_rng(0)
+
+    intensities = []
+    for k in ks:
+        X = jnp.asarray(rng.standard_normal((prob.n, k)))
+        us = time_fn(spmm_ell, ell, X)
+        flops, nbytes = spmm_traffic_model(ell, k)
+        ai = flops / nbytes
+        intensities.append(ai)
+        emit(f"t6.spmm.m{m}.k{k}", us,
+             f"us_per_rhs={us / k:.1f};flops={flops};bytes={nbytes};"
+             f"intensity={ai:.4f}")
+    assert all(b > a for a, b in zip(intensities, intensities[1:])), \
+        f"modeled intensity must rise monotonically with k: {intensities}"
+    emit(f"t6.intensity_gain.m{m}", 0.0,
+         f"k{ks[-1]}_over_k1={intensities[-1] / intensities[0]:.2f}x")
+
+    # end-to-end: the solve server's hot path — batched AMG-PCG per RHS
+    solver = gamg.GAMGSolver(prob.A, prob.B, coarse_size=40, rtol=1e-8,
+                             maxiter=100)
+    for k in ks:
+        B = jnp.asarray(rng.standard_normal((prob.n, k)))
+        res = solver.solve_many(B)          # warm the k-trace
+        assert bool(np.asarray(res.converged).all())
+        us = time_fn(solver._solve_many, solver.hierarchy, B)
+        emit(f"t6.batched_solve.m{m}.k{k}", us,
+             f"us_per_rhs={us / k:.1f};"
+             f"iters={int(np.asarray(res.iters).max())}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import List, Optional, Tuple
+from typing import List
 
 import jax
 import jax.numpy as jnp
@@ -220,6 +220,8 @@ class GAMGSolver:
         self.setup_data = setup(A, B, **opts)
         self._recompute = make_recompute(self.setup_data)
         self._solve = make_solve(self.setup_data, **solve_opts)
+        self._solve_opts = solve_opts
+        self._solve_many = None
         self.hierarchy = self._recompute(A.data)
         self.n_recomputes = 0
 
@@ -230,3 +232,16 @@ class GAMGSolver:
 
     def solve(self, b: Array) -> CGResult:
         return self._solve(self.hierarchy, b)
+
+    def solve_many(self, B: Array):
+        """Panel solve: ``B (n, k)`` -> ``BlockCGResult`` (per-column
+        masked PCG, one operator stream for all k columns).
+
+        Retraces once per distinct k — stream workloads should go through
+        ``repro.multirhs.AMGSolveServer``, which buckets k statically.
+        """
+        if self._solve_many is None:
+            from repro.multirhs.block_krylov import make_block_solve
+            self._solve_many = make_block_solve(self.setup_data,
+                                                **self._solve_opts)
+        return self._solve_many(self.hierarchy, B)

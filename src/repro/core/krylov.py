@@ -25,8 +25,15 @@ class CGResult(NamedTuple):
 def pcg(apply_a: Callable[[Array], Array],
         apply_m: Callable[[Array], Array],
         b: Array, x0: Array | None = None, rtol: float = 1e-8,
-        maxiter: int = 200) -> CGResult:
-    """Standard PCG; fixed SPD preconditioner (one AMG V-cycle)."""
+        maxiter: int = 200, record_history: bool = False):
+    """Standard PCG; fixed SPD preconditioner (one AMG V-cycle).
+
+    ``record_history=True`` (a static, trace-time switch — the default
+    jitted hot path is unchanged) additionally returns the per-iteration
+    unpreconditioned residual-norm trace as a fixed-size ``(maxiter,)``
+    buffer: slot ``i`` holds ``||r||`` after iteration ``i+1``; slots past
+    ``iters`` stay NaN.  Used by the benchmark/convergence plots.
+    """
     x = jnp.zeros_like(b) if x0 is None else x0
     r = b - apply_a(x)
     z = apply_m(r)
@@ -36,11 +43,11 @@ def pcg(apply_a: Callable[[Array], Array],
     rnorm = jnp.linalg.norm(r)
 
     def cond(state):
-        x, r, z, p, rz, rnorm, k = state
+        x, r, z, p, rz, rnorm, k, hist = state
         return (rnorm > rtol * bnorm) & (k < maxiter)
 
     def body(state):
-        x, r, z, p, rz, rnorm, k = state
+        x, r, z, p, rz, rnorm, k, hist = state
         Ap = apply_a(p)
         alpha = rz / jnp.vdot(p, Ap)
         x = x + alpha * p
@@ -49,9 +56,15 @@ def pcg(apply_a: Callable[[Array], Array],
         rz_new = jnp.vdot(r, z)
         beta = rz_new / rz
         p = z + beta * p
-        return x, r, z, p, rz_new, jnp.linalg.norm(r), k + 1
+        rnorm = jnp.linalg.norm(r)
+        if record_history:
+            hist = hist.at[k].set(rnorm)
+        return x, r, z, p, rz_new, rnorm, k + 1, hist
 
-    state = (x, r, z, p, rz, rnorm, jnp.asarray(0))
-    x, r, z, p, rz, rnorm, k = jax.lax.while_loop(cond, body, state)
-    return CGResult(x=x, iters=k, relres=rnorm / bnorm,
-                    converged=rnorm <= rtol * bnorm)
+    hist0 = (jnp.full((maxiter,), jnp.nan, rnorm.dtype) if record_history
+             else jnp.zeros((0,), rnorm.dtype))
+    state = (x, r, z, p, rz, rnorm, jnp.asarray(0), hist0)
+    x, r, z, p, rz, rnorm, k, hist = jax.lax.while_loop(cond, body, state)
+    res = CGResult(x=x, iters=k, relres=rnorm / bnorm,
+                   converged=rnorm <= rtol * bnorm)
+    return (res, hist) if record_history else res

@@ -38,14 +38,36 @@ def spmv_ell(ell: BlockELL, x: Array) -> Array:
 
 @jax.jit
 def spmm_ell(ell: BlockELL, X: Array) -> Array:
-    """Y = A @ X for multiple right-hand sides. X: (nbc*bc, m)."""
+    """Y = A @ X for multiple right-hand sides. X: (nbc*bc, m).
+
+    ``m == 1`` delegates to ``spmv_ell`` so the single-column panel is
+    *bitwise* the single-RHS result (same reduction graph) — the multi-RHS
+    layer's k=1 exactness contract rests on this.
+    """
     nbc, bc, br = ell.nbc, ell.bc, ell.br
     m = X.shape[1]
+    if m == 1:
+        return spmv_ell(ell, X[:, 0])[:, None]
     xb = X.reshape(nbc, bc, m)
     gathered = xb[ell.indices]  # (nbr, kmax, bc, m)
     y = jnp.einsum("rkab,rkbm->ram", ell.data, gathered,
                    preferred_element_type=ell.data.dtype)
     return y.reshape(ell.nbr * br, m)
+
+
+def apply_ell(ell: BlockELL, x: Array) -> Array:
+    """Shape-polymorphic ELL apply: (n,) -> spmv_ell, (n, k) -> panel SpMM.
+
+    The V-cycle and both Krylov paths route every operator application
+    through this, so the whole solve hierarchy accepts column panels
+    without duplicating the recursion.  The panel branch resolves the
+    backend SpMM path (``repro.kernels.backend.resolve_spmm_path``), so
+    the Pallas ``block_spmm`` kernel engages inside the jitted solves on
+    TPU.  Resolution happens at *trace* time: like the cached
+    ``backend()`` probe, ``REPRO_SPMM_PATH`` must be set before the
+    first solve trace to affect a jitted hot path.
+    """
+    return spmv_ell(ell, x) if x.ndim == 1 else spmm(ell, x)
 
 
 def spmv_bcsr_ref(A: BlockCSR, x: Array) -> Array:
@@ -77,6 +99,24 @@ def spmv(A, x: Array, *, use_kernel: bool | None = None,
         return _k.block_spmv(ell, x,
                              interpret=_backend.resolve_interpret(interpret))
     return spmv_ell(ell, x)
+
+
+def spmm(A, X: Array, *, path: str | None = None,
+         interpret: bool | None = None) -> Array:
+    """Multi-RHS front door: Y = A @ X, X: (n, k), A BlockCSR or BlockELL.
+
+    ``path=None`` resolves per backend (``repro.kernels.backend
+    .resolve_spmm_path``): the Pallas panel kernel where it compiles
+    natively (TPU), the jnp reference elsewhere; ``REPRO_SPMM_PATH``
+    forces it globally.
+    """
+    from repro.kernels import backend as _backend
+    ell = A.to_ell() if isinstance(A, BlockCSR) else A
+    if _backend.resolve_spmm_path(path) == "kernel":
+        from repro.kernels.block_spmm import ops as _k
+        return _k.block_spmm(ell, X,
+                             interpret=_backend.resolve_interpret(interpret))
+    return spmm_ell(ell, X)
 
 
 # ---------------------------------------------------------------------------

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.block_csr import BlockELL
-from repro.core.spmv import spmv_ell
+from repro.core.spmv import apply_ell
 
 Array = jax.Array
 
@@ -57,9 +57,18 @@ class Hierarchy:
 
 
 def pbjacobi_apply(dinv: Array, r: Array) -> Array:
+    """Point-block Jacobi apply; ``r`` is ``(n,)`` or a panel ``(n, k)``.
+
+    The block-diagonal solve is column-independent, so the panel case is
+    the same einsum with the panel axis broadcast along the ellipsis —
+    this (together with ``apply_ell`` and the trailing-dim broadcast of
+    ``cho_solve``) is what makes the whole V-cycle multi-RHS for free.
+    """
     nbr, bs = dinv.shape[0], dinv.shape[1]
-    return jnp.einsum("nab,nb->na", dinv, r.reshape(nbr, bs),
-                      preferred_element_type=dinv.dtype).reshape(-1)
+    rb = r.reshape((nbr, bs) + r.shape[1:])
+    out = jnp.einsum("nab,nb...->na...", dinv, rb,
+                     preferred_element_type=dinv.dtype)
+    return out.reshape((nbr * bs,) + r.shape[1:])
 
 
 def chebyshev_recurrence(spmv, pbj, lam_max: Array, b: Array, x: Array,
@@ -106,7 +115,7 @@ def chebyshev_smooth(lv: LevelState, b: Array, x: Array,
                      hi_frac: float = 1.05) -> Array:
     """GAMG's default smoother; degree 2 matches the paper's production
     setup of cheap, SpMV-dominated smoothing (Sec. 4.2)."""
-    return chebyshev_recurrence(lambda v: spmv_ell(lv.a_ell, v),
+    return chebyshev_recurrence(lambda v: apply_ell(lv.a_ell, v),
                                 lambda r: pbjacobi_apply(lv.dinv, r),
                                 lv.lam_max, b, x, degree, lo_frac, hi_frac)
 
@@ -114,7 +123,7 @@ def chebyshev_smooth(lv: LevelState, b: Array, x: Array,
 def pbjacobi_smooth(lv: LevelState, b: Array, x: Array,
                     omega: float = 0.6, its: int = 2) -> Array:
     """Plain damped point-block Jacobi (the paper's pbjacobi option)."""
-    return pbjacobi_recurrence(lambda v: spmv_ell(lv.a_ell, v),
+    return pbjacobi_recurrence(lambda v: apply_ell(lv.a_ell, v),
                                lambda r: pbjacobi_apply(lv.dinv, r),
                                b, x, its, omega)
 
@@ -130,25 +139,31 @@ def vcycle(hier: Hierarchy, b: Array, smoother: str = "chebyshev",
     """One V(degree,degree) cycle with zero initial guess (preconditioner).
 
     The recursion is a static Python loop over levels — unrolled in the
-    jitted graph, all device-resident.
+    jitted graph, all device-resident.  ``b`` may be a single vector
+    ``(n,)`` or a column panel ``(n, k)``: every stage is column-
+    independent — ELL SpMV/SpMM via ``apply_ell``, the block-diagonal
+    smoother einsums broadcast along the trailing axis, and the coarse
+    ``cho_solve`` natively accepts matrix right-hand sides — so the
+    panel cycle is per-column identical to k single cycles (tested in
+    ``tests/test_multirhs.py``).
     """
     bs_stack = []
     x_stack = []
     rhs = b
     for lv in hier.levels:
         x = _smooth(lv, rhs, jnp.zeros_like(rhs), smoother, degree)
-        r = rhs - spmv_ell(lv.a_ell, x)
+        r = rhs - apply_ell(lv.a_ell, x)
         bs_stack.append(rhs)
         x_stack.append(x)
-        rhs = spmv_ell(lv.r_ell, r)          # restrict
+        rhs = apply_ell(lv.r_ell, r)          # restrict
     xc = jax.scipy.linalg.cho_solve((hier.coarse_chol, True), rhs)
     for lv, rhs_l, x in zip(reversed(hier.levels), reversed(bs_stack),
                             reversed(x_stack)):
-        x = x + spmv_ell(lv.p_ell, xc)        # prolong + correct
+        x = x + apply_ell(lv.p_ell, xc)       # prolong + correct
         xc = _smooth(lv, rhs_l, x, smoother, degree)
     return xc
 
 
 def vcycle_apply_op(hier: Hierarchy, x: Array) -> Array:
     """Finest-level operator application (for the Krylov wrapper)."""
-    return spmv_ell(hier.levels[0].a_ell, x)
+    return apply_ell(hier.levels[0].a_ell, x)

@@ -199,9 +199,13 @@ def build_dist_ell(A: BlockCSR, row_part: RowPartition,
 
 
 def dist_ell_apply(indices: Array, data: Array, x_win: Array) -> Array:
-    """Device per-rank SpMV: (rpad, kmax, br, bc) x window -> (rpad, br)."""
-    g = x_win[indices]                       # (rpad, kmax, bc)
-    return jnp.einsum("rkab,rkb->ra", data, g,
+    """Device per-rank SpMV/SpMM: (rpad, kmax, br, bc) x window -> (rpad, br).
+
+    ``x_win`` may carry a trailing panel axis ``(win, bc, k)`` (multi-RHS
+    slabs); the ellipsis broadcasts it, mirroring ``core.spmv.spmm_ell``.
+    """
+    g = x_win[indices]                       # (rpad, kmax, bc[, k])
+    return jnp.einsum("rkab,rkb...->ra...", data, g,
                       preferred_element_type=data.dtype)
 
 

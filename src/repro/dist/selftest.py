@@ -15,7 +15,11 @@ Checks, on an m^3 Q1 elasticity problem:
     scratch, the paper's Table 3 ablation) produces identical results to
     the gated one;
   * the level-0 halo really is the neighbor slab exchange
-    (``halo=ppermute``) rather than an allgather fallback.
+    (``halo=ppermute``) rather than an allgather fallback;
+  * with ``REPRO_SELFTEST_MRHS=1``: a k-column panel through the *same*
+    shard_map program (scattered ``(n, k)`` payload -> masked multi-RHS
+    PCG) matches the single-device batched solve per column — same
+    iteration counts, allclose solutions.
 
 Prints ``OK`` on success (asserts otherwise).
 """
@@ -98,6 +102,28 @@ def main(m: int) -> int:
     np.testing.assert_allclose(dg.gather_vector(x2),
                                dg.gather_vector(x1), rtol=0, atol=0)
     print("ungated rebuild parity: identical")
+
+    if os.environ.get("REPRO_SELFTEST_MRHS") == "1":
+        # multi-RHS panel through the SAME jitted shard_map program (only
+        # the b payload grows a trailing axis) vs the single-device
+        # batched masked PCG: per-column iteration parity + allclose.
+        rng = np.random.default_rng(0)
+        B3 = np.stack([np.asarray(prob.b),
+                       0.5 * np.asarray(prob.b) + rng.standard_normal(prob.n),
+                       rng.standard_normal(prob.n)], axis=1)
+        ref_mr = solver.solve_many(jax.numpy.asarray(B3))
+        xm, itm, rrm, okm = jax.block_until_ready(
+            run(args, dg.scatter_fine_payloads(a_new),
+                dg.scatter_vector(B3)))
+        assert bool(np.asarray(okm[0]).all()), (itm, rrm)
+        assert np.array_equal(np.asarray(itm[0]), np.asarray(ref_mr.iters)), \
+            f"mrhs iters: dist={np.asarray(itm[0])} " \
+            f"single={np.asarray(ref_mr.iters)}"
+        np.testing.assert_allclose(dg.gather_vector(xm),
+                                   np.asarray(ref_mr.x), rtol=1e-6,
+                                   atol=1e-9)
+        print(f"mrhs (k={B3.shape[1]}) parity: "
+              f"iters={np.asarray(itm[0]).tolist()}")
 
     print("OK")
     return 0

@@ -48,6 +48,7 @@ from repro.dist.pamg import (
     halo_window,
 )
 from repro.dist.partition import RowPartition, partition_rows
+from repro.multirhs.block_krylov import block_pcg
 
 Array = jax.Array
 P = PartitionSpec
@@ -138,21 +139,25 @@ class DistGAMG:
         return jnp.asarray(out)
 
     def scatter_vector(self, b: Array) -> Array:
-        """Global fine vector (n,) -> (ndev, rpad, bs) padded slabs."""
+        """Global fine vector (n,) or panel (n, k) -> (ndev, rpad, bs[, k])
+        padded slabs."""
         lv, part = self.levels[0], self.parts[0]
-        b2 = np.asarray(b).reshape(part.nrows, lv.bs)
-        out = np.zeros((self.ndev, lv.rpad, lv.bs), b2.dtype)
+        b = np.asarray(b)
+        trailing = b.shape[1:]
+        b2 = b.reshape((part.nrows, lv.bs) + trailing)
+        out = np.zeros((self.ndev, lv.rpad, lv.bs) + trailing, b2.dtype)
         for r in range(self.ndev):
             sl = part.slab(r)
             out[r, :sl.stop - sl.start] = b2[sl]
         return jnp.asarray(out)
 
     def gather_vector(self, x: Array) -> np.ndarray:
-        """(ndev, rpad, bs) padded slabs -> global fine vector (n,)."""
+        """(ndev, rpad, bs[, k]) padded slabs -> global (n,) or (n, k)."""
         part = self.parts[0]
         xs = np.asarray(x)
         chunks = [xs[r, :part.counts[r]] for r in range(self.ndev)]
-        return np.concatenate(chunks, axis=0).reshape(-1)
+        cat = np.concatenate(chunks, axis=0)
+        return cat.reshape((-1,) + xs.shape[3:])
 
 
 def build_dist_gamg(setupd: GAMGSetup, ndev: int) -> DistGAMG:
@@ -216,6 +221,15 @@ def _pnorm(a: Array) -> Array:
     return jnp.sqrt(lax.psum(jnp.sum(a * a), AXIS))
 
 
+def _pdot_cols(a: Array, b: Array) -> Array:
+    """Per-column global dot over (rpad, bs, k) slabs -> (k,)."""
+    return lax.psum(jnp.sum(a * b, axis=(0, 1)), AXIS)
+
+
+def _pnorm_cols(a: Array) -> Array:
+    return jnp.sqrt(lax.psum(jnp.sum(a * a, axis=(0, 1)), AXIS))
+
+
 def _rank_lambda_max(lv: DistLevel, a_idx: Array, dinva_data: Array,
                      row_mask: Array, iters: int = 10) -> Array:
     """Distributed power iteration — mirrors ``lambda_max_dinv_a``."""
@@ -275,18 +289,26 @@ def _rank_coarse_chol(dg: DistGAMG, ac_slab: Array) -> Array:
 
 
 def _rank_coarse_solve(dg: DistGAMG, chol: Array, rhs: Array) -> Array:
-    """Replicated coarse solve; every rank slices its own slab back out."""
+    """Replicated coarse solve; every rank slices its own slab back out.
+
+    ``rhs`` is the (rpad, bs) coarse slab or its (rpad, bs, k) panel —
+    ``cho_solve`` broadcasts over matrix right-hand sides natively.
+    """
     c = dg.coarse
-    g = lax.all_gather(rhs, AXIS, axis=0, tiled=True)     # (ndev*rpad, bs)
-    rhs_g = g[jnp.asarray(c.row_sel)]                     # (nbr, bs)
-    xc = jax.scipy.linalg.cho_solve((chol, True), rhs_g.reshape(-1))
-    xcb = jnp.pad(xc.reshape(c.nbr, c.bs), ((0, c.rpad), (0, 0)))
+    trailing = rhs.shape[2:]
+    g = lax.all_gather(rhs, AXIS, axis=0, tiled=True)     # (ndev*rpad, bs..)
+    rhs_g = g[jnp.asarray(c.row_sel)]                     # (nbr, bs[, k])
+    xc = jax.scipy.linalg.cho_solve(
+        (chol, True), rhs_g.reshape((c.nbr * c.bs,) + trailing))
+    xcb = jnp.pad(xc.reshape((c.nbr, c.bs) + trailing),
+                  ((0, c.rpad), (0, 0)) + ((0, 0),) * len(trailing))
     r = lax.axis_index(AXIS)
     start = jnp.asarray(dg.coarse.part.starts)[r]
-    mine = lax.dynamic_slice(xcb, (start, jnp.zeros_like(start)),
-                             (c.rpad, c.bs))
+    zero = jnp.zeros_like(start)
+    mine = lax.dynamic_slice(xcb, (start, zero) + (zero,) * len(trailing),
+                             (c.rpad, c.bs) + trailing)
     mask = jnp.arange(c.rpad) < jnp.asarray(c.part.counts)[r]
-    return mine * mask[:, None]
+    return mine * mask.reshape((c.rpad,) + (1,) * (mine.ndim - 1))
 
 
 def _rank_spmv(op: DistEll, idx: Array, data: Array, x: Array) -> Array:
@@ -298,7 +320,7 @@ def _rank_smooth(dg: DistGAMG, spmv, st, b: Array, x: Array) -> Array:
     truth in ``repro.core.vcycle``) with per-rank spmv/pbjacobi closures —
     iteration parity with the single-device path depends on this."""
     def pbj(r):
-        return jnp.einsum("nab,nb->na", st["dinv"], r,
+        return jnp.einsum("nab,nb...->na...", st["dinv"], r,
                           preferred_element_type=st["dinv"].dtype)
 
     if dg.smoother == "chebyshev":
@@ -377,6 +399,31 @@ def _rank_pcg(dg: DistGAMG, args, states, chol: Array, b: Array,
     return x, k, rnorm / bnorm, rnorm <= rtol * bnorm
 
 
+def _rank_block_pcg(dg: DistGAMG, args, states, chol: Array, b: Array,
+                    rtol: float, maxiter: int):
+    """Distributed masked panel PCG over (rpad, bs, k) slabs.
+
+    The recurrence body is ``repro.multirhs.block_krylov.block_pcg``
+    itself (single source of truth, like the shared smoother
+    recurrences in ``core.vcycle``) with the per-column reductions
+    replaced by psum versions — the per-column iteration parity with the
+    single-device batched path that the selftest's multi-RHS check
+    asserts depends on the two paths sharing this body.
+    """
+    a0 = args["levels"][0]
+    st0 = states[0]
+
+    def apply_a(v):
+        return _rank_spmv(dg.levels[0].a_op, a0["a_idx"], st0["a_data"], v)
+
+    def apply_m(r):
+        return _rank_vcycle(dg, args, states, chol, r)
+
+    res = block_pcg(apply_a, apply_m, b, rtol=rtol, maxiter=maxiter,
+                    col_dot=_pdot_cols, col_norm=_pnorm_cols)
+    return res.x, res.iters, res.relres, res.converged
+
+
 # ---------------------------------------------------------------------------
 # Front door
 # ---------------------------------------------------------------------------
@@ -390,14 +437,20 @@ def make_dist_solver(dg: DistGAMG, setupd: GAMGSetup, mesh, *,
     step), ``b`` from ``dg.scatter_vector``.  One shard_map program:
     recompute the hierarchy, then CG-solve.  Outputs are stacked per rank;
     iters/relres/converged are replicated, take index 0.
+
+    ``b`` may be a single scattered vector (slabs ``(rpad, bs)``) or a
+    scattered panel (``(rpad, bs, k)`` — ``dg.scatter_vector`` on an
+    ``(n, k)`` payload): the panel case runs the masked multi-RHS PCG and
+    iters/relres/converged come back per column (shape ``(k,)``).
     """
     del setupd  # structure is baked into dg; kept for call-site symmetry
 
     def rank_fn(args, a0, b):
         args, a0, b = jax.tree.map(lambda t: t[0], (args, a0, b))
         states, chol = _rank_recompute(dg, args, a0)
-        x, k, relres, ok = _rank_pcg(dg, args, states, chol, b,
-                                     rtol, maxiter)
+        run_pcg = _rank_block_pcg if b.ndim == 3 else _rank_pcg
+        x, k, relres, ok = run_pcg(dg, args, states, chol, b,
+                                   rtol, maxiter)
         return (x[None], k[None], relres[None], ok[None])
 
     sharded = shard_map(rank_fn, mesh, in_specs=(P(AXIS), P(AXIS), P(AXIS)),

@@ -16,6 +16,10 @@ interpreter.  This module centralizes the decision:
                            slower on CPU; Triton rejects these block tiles
                            on GPU).  ``REPRO_SPGEMM_PATH`` forces a path
                            globally ("fused" | "pairs" | "reference").
+* ``resolve_spmm_path``  — multi-RHS block SpMM path: the Pallas panel
+                           kernel on TPU, the jnp reference elsewhere;
+                           forced globally with ``REPRO_SPMM_PATH``
+                           ("kernel" | "reference").
 
 Every front door (``spmv``, ``spgemm_numeric_data``, ``set_values_coo``)
 accepts ``None`` for these knobs and resolves them here, so the same call
@@ -83,5 +87,33 @@ def resolve_spgemm_path(path: str | None = None) -> str:
         path = os.environ.get("REPRO_SPGEMM_PATH")
     if path is None:
         path = "fused" if on_accelerator() else "reference"
-    assert path in ("fused", "pairs", "reference"), path
+    if path not in ("fused", "pairs", "reference"):
+        # ValueError, not assert: the validation must survive `python -O`,
+        # and a typo'd REPRO_SPGEMM_PATH should fail loudly either way.
+        raise ValueError(
+            f"invalid SpGEMM path {path!r}: expected 'fused', 'pairs' or "
+            f"'reference' (from REPRO_SPGEMM_PATH or the path= knob)")
+    return path
+
+
+def resolve_spmm_path(path: str | None = None) -> str:
+    """Default multi-RHS SpMM execution path for this backend.
+
+    "kernel"    — the Pallas ``block_spmm`` panel kernel (compiled on TPU,
+                  interpret-mode elsewhere when forced).
+    "reference" — the jnp ``spmm_ell`` einsum; CPU/GPU default (same Triton
+                  tile-shape exclusion as the other kernels).
+
+    ``REPRO_SPMM_PATH`` forces a path globally, mirroring
+    ``REPRO_SPGEMM_PATH``; re-read per call so tests can flip it
+    mid-process.
+    """
+    if path is None:
+        path = os.environ.get("REPRO_SPMM_PATH")
+    if path is None:
+        path = "kernel" if on_accelerator() else "reference"
+    if path not in ("kernel", "reference"):
+        raise ValueError(
+            f"invalid SpMM path {path!r}: expected 'kernel' or 'reference' "
+            f"(from REPRO_SPMM_PATH or the path= knob)")
     return path

@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: blocked ELL SpMM over column panels (multi-RHS).
+
+The paper's traffic argument (one 4-byte index amortized over a ``br x bc``
+block payload) gets a second lever with multiple right-hand sides: the
+*operator* stream — values AND indices — is amortized over ``k`` columns,
+so arithmetic intensity rises with the panel width while the dominant HBM
+traffic (the A values) stays constant.  ``benchmarks/table6_multirhs.py``
+evaluates that model exactly.
+
+Layout / tiling (extends ``block_spmv`` by one trailing panel axis):
+  grid        = (ceil(nbr / TR),)                 sequential over row tiles
+  data tile   = (TR, kmax, br, bc)   VMEM         streamed per grid step
+  index tile  = (TR, kmax)           VMEM (int32)
+  x panel     = (nbc, bc, kp)        VMEM, whole  (block-panel resident)
+  out tile    = (TR, br, kp)         VMEM
+
+``kp`` is the *padded* panel width: the wrapper pads ``k`` up to a multiple
+of ``pad_k_to`` so the trailing axis — the TPU lane axis — stays aligned;
+on a real TPU wide panels should use lane-width (128) multiples, while the
+small static buckets the solve server uses (k <= 16) round to the sublane
+granule.  Padded columns are zero and are sliced off by the wrapper, so
+they cost only VPU lanes, never correctness.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmm_kernel(idx_ref, data_ref, x_ref, o_ref):
+    """One row-tile: gather x panels, contract against the data tile."""
+    idx = idx_ref[...]                       # (TR, kmax) int32
+    tr, kmax = idx.shape
+    x = x_ref[...]                           # (nbc, bc, kp)
+    # gather whole (bc, kp) panels of x: one index per (row, slot)
+    xg = jnp.take(x, idx.reshape(-1), axis=0).reshape(
+        tr, kmax, x.shape[1], x.shape[2])
+    # padded slots carry exactly-zero data blocks -> contribute 0
+    o_ref[...] = jnp.einsum(
+        "rkab,rkbm->ram", data_ref[...], xg,
+        preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_rows", "interpret"))
+def block_spmm_ell(indices: jax.Array, data: jax.Array, x_panels: jax.Array,
+                   *, tile_rows: int = 8, interpret: bool = True
+                   ) -> jax.Array:
+    """Y = A @ X with A in padded BlockELL form and X a column panel.
+
+    indices:  (nbr, kmax) int32, padded slots point at block-col 0
+    data:     (nbr, kmax, br, bc), padded slots are zero blocks
+    x_panels: (nbc, bc, k)
+    returns   (nbr, br, k)
+    """
+    nbr, kmax, br, bc = data.shape
+    k = x_panels.shape[2]
+    tr = min(tile_rows, nbr)
+    pad = (-nbr) % tr
+    if pad:
+        indices = jnp.pad(indices, ((0, pad), (0, 0)))
+        data = jnp.pad(data, ((0, pad), (0, 0), (0, 0), (0, 0)))
+    grid = ((nbr + pad) // tr,)
+    out = pl.pallas_call(
+        _spmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tr, kmax), lambda i: (i, 0)),
+            pl.BlockSpec((tr, kmax, br, bc), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec(x_panels.shape, lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tr, br, k), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nbr + pad, br, k), data.dtype),
+        interpret=interpret,
+    )(indices, data, x_panels)
+    return out[:nbr]

@@ -1,0 +1,27 @@
+"""Jit'd wrapper dispatching the blocked SpMM kernel on a BlockELL.
+
+Pads the panel width to a ``pad_k_to`` multiple before the ``pallas_call``
+(lane alignment — see the kernel docstring) and slices the padding back
+off, so callers see exactly the ``(n, k)`` contract of
+``repro.core.spmv.spmm_ell``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.block_csr import BlockELL
+from repro.kernels.block_spmm.block_spmm import block_spmm_ell
+
+
+def block_spmm(ell: BlockELL, X: jax.Array, *, interpret: bool = True,
+               tile_rows: int = 8, pad_k_to: int = 8) -> jax.Array:
+    """Y = A @ X, flat (n, k) panels in/out (matches core ``spmm_ell``)."""
+    k = X.shape[1]
+    kp = -(-k // pad_k_to) * pad_k_to if pad_k_to > 1 else k
+    xb = X.reshape(ell.nbc, ell.bc, k)
+    if kp != k:
+        xb = jnp.pad(xb, ((0, 0), (0, 0), (0, kp - k)))
+    y = block_spmm_ell(ell.indices, ell.data, xb, tile_rows=tile_rows,
+                       interpret=interpret)
+    return y.reshape(ell.nbr * ell.br, kp)[:, :k]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the blocked ELL SpMM (column-panel) kernel."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def block_spmm_ell_ref(indices: jax.Array, data: jax.Array,
+                       x_panels: jax.Array) -> jax.Array:
+    """Same contract as the kernel: (nbr,kmax) x (nbr,kmax,br,bc) x
+    (nbc,bc,k) -> (nbr,br,k)."""
+    xg = x_panels[indices]  # (nbr, kmax, bc, k)
+    return jnp.einsum("rkab,rkbm->ram", data, xg,
+                      preferred_element_type=data.dtype)

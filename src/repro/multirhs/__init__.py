@@ -1,0 +1,20 @@
+"""Multi-RHS blocked solve subsystem.
+
+The paper's hierarchy-reuse model (setup once, solve many times) pairs
+naturally with *panel* solves: k right-hand sides against one cached
+hierarchy amortize the operator's value+index HBM traffic over k columns
+— the same arithmetic-intensity lever the blocked storage pulls per
+block, applied along the RHS axis.
+
+* ``block_krylov`` — batched PCG with per-column convergence masking, and
+  the jitted panel-solve builder over a ``GAMGSetup``.
+* ``server``       — a solve server that buckets/pads request streams to a
+  small set of static panel widths (no retracing), runs batched solves on
+  the cached hierarchy, and reports per-request iterations/residuals.
+"""
+from repro.multirhs.block_krylov import (  # noqa: F401
+    BlockCGResult,
+    block_pcg,
+    make_block_solve,
+)
+from repro.multirhs.server import AMGSolveServer, SolveReport  # noqa: F401

@@ -1,0 +1,127 @@
+"""Batched PCG over column panels with per-column convergence masking.
+
+One Krylov iteration on a ``(n, k)`` panel runs the operator and the AMG
+preconditioner as SpMM — streaming A's values+indices once for all k
+columns — while every CG scalar (``alpha``, ``beta``, ``rz``) becomes a
+length-k vector of per-column reductions.  CG columns are mathematically
+independent, so masking converged columns (their updates frozen at zero)
+reproduces the looped single-RHS trajectories column by column: the same
+iteration counts, the same solutions to fp tolerance
+(``tests/test_multirhs.py`` + the property test assert both).
+
+Convergence is monitored on the unpreconditioned residual norm per column,
+matching ``repro.core.krylov.pcg`` — iteration-count parity with the
+single-RHS path depends on the two monitors being identical.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vcycle import Hierarchy, vcycle
+from repro.core.spmv import apply_ell
+
+Array = jax.Array
+
+
+class BlockCGResult(NamedTuple):
+    x: Array          # (n, k) solutions
+    iters: Array      # (k,)   iterations applied to each column
+    relres: Array     # (k,)   final per-column relative residual
+    converged: Array  # (k,)   bool
+
+
+def _col_dot(a: Array, b: Array) -> Array:
+    """Per-column dot: reduce every axis but the trailing panel axis."""
+    return jnp.sum(a * b, axis=tuple(range(a.ndim - 1)))
+
+
+def _col_norm(a: Array) -> Array:
+    return jnp.sqrt(jnp.sum(a * a, axis=tuple(range(a.ndim - 1))))
+
+
+def block_pcg(apply_a: Callable[[Array], Array],
+              apply_m: Callable[[Array], Array],
+              B: Array, x0: Array | None = None, rtol: float = 1e-8,
+              maxiter: int = 200, *,
+              col_dot: Callable[[Array, Array], Array] = _col_dot,
+              col_norm: Callable[[Array], Array] = _col_norm
+              ) -> BlockCGResult:
+    """PCG on a panel ``B: (..., k)`` with per-column masking.
+
+    A column is *active* while its residual exceeds ``rtol * ||b_col||``;
+    frozen columns receive zero updates (``alpha = 0``) and keep their CG
+    state, so the surviving columns' arithmetic is exactly the single-RHS
+    recurrence.  The loop runs until every column converges or ``maxiter``.
+    Zero columns (``||b|| ~ 0``) are inactive from the start (iters 0) —
+    that is what makes the solve server's padding columns free.
+
+    ``col_dot`` / ``col_norm`` are the per-column reductions (everything
+    but the trailing panel axis -> ``(k,)``).  The distributed path
+    injects psum-reducing versions and runs this *same* recurrence over
+    ``(rpad, bs, k)`` slabs inside shard_map — the dist-vs-single
+    iteration-parity invariant depends on this body being the single
+    source of truth (mirroring how ``core.vcycle`` shares the smoother
+    recurrences).
+    """
+    x = jnp.zeros_like(B) if x0 is None else x0
+    r = B - apply_a(x)
+    z = apply_m(r)
+    p = z
+    rz = col_dot(r, z)
+    bnorm = jnp.maximum(col_norm(B), 1e-300)
+    rnorm = col_norm(r)
+
+    def cond(state):
+        x, r, z, p, rz, rnorm, iters, k = state
+        return jnp.any(rnorm > rtol * bnorm) & (k < maxiter)
+
+    def body(state):
+        x, r, z, p, rz, rnorm, iters, k = state
+        active = rnorm > rtol * bnorm
+        Ap = apply_a(p)
+        pAp = col_dot(p, Ap)
+        # frozen columns: guard the denominators, zero the step
+        alpha = jnp.where(active, rz / jnp.where(active, pAp, 1.0), 0.0)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        z = apply_m(r)
+        rz_new = col_dot(r, z)
+        beta = jnp.where(active, rz_new / jnp.where(active, rz, 1.0), 0.0)
+        p = jnp.where(active, z + beta * p, p)
+        rz = jnp.where(active, rz_new, rz)
+        rnorm = col_norm(r)       # frozen columns: r unchanged -> unchanged
+        iters = iters + active.astype(iters.dtype)
+        return x, r, z, p, rz, rnorm, iters, k + 1
+
+    iters0 = jnp.zeros(B.shape[-1], jnp.int32)
+    state = (x, r, z, p, rz, rnorm, iters0, jnp.asarray(0))
+    x, r, z, p, rz, rnorm, iters, k = jax.lax.while_loop(cond, body, state)
+    return BlockCGResult(x=x, iters=iters, relres=rnorm / bnorm,
+                         converged=rnorm <= rtol * bnorm)
+
+
+def make_block_solve(setupd, rtol: float = 1e-8, maxiter: int = 200):
+    """Jitted hot panel solve: ``(Hierarchy, B: (n, k)) -> BlockCGResult``.
+
+    The multi-RHS twin of ``repro.core.gamg.make_solve`` — same smoother
+    configuration, same hierarchy pytree, SpMM everywhere.  jax.jit traces
+    once per distinct k; the solve server buckets request streams to a
+    static k set precisely so this cache stays small.
+    """
+    smoother, degree = setupd.smoother, setupd.degree
+
+    @partial(jax.jit, static_argnames=())
+    def solve(hier: Hierarchy, B: Array) -> BlockCGResult:
+        def apply_a(X):
+            return apply_ell(hier.levels[0].a_ell, X)
+
+        def apply_m(R):
+            return vcycle(hier, R, smoother=smoother, degree=degree)
+
+        return block_pcg(apply_a, apply_m, B, rtol=rtol, maxiter=maxiter)
+
+    return solve

@@ -13,11 +13,13 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _run_selftest(ndev: int, m: int) -> str:
+def _run_selftest(ndev: int, m: int, extra_env: dict | None = None) -> str:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     env["REPRO_SELFTEST_NDEV"] = str(ndev)
     env.pop("XLA_FLAGS", None)
+    if extra_env:
+        env.update(extra_env)
     out = subprocess.run(
         [sys.executable, "-m", "repro.dist.selftest", str(m)],
         capture_output=True, text=True, timeout=520, env=env)
@@ -35,6 +37,15 @@ def test_dist_amg_parity(ndev, m):
     stdout = _run_selftest(ndev, m)
     assert "OK" in stdout
     assert "halo=ppermute" in stdout, stdout  # slab halos -> neighbor path
+
+
+def test_dist_amg_mrhs_parity():
+    """A (n, k) panel through the same shard_map program (masked multi-RHS
+    PCG over sharded slabs) matches the single-device batched solve per
+    column — iteration counts and solutions."""
+    stdout = _run_selftest(2, 4, {"REPRO_SELFTEST_MRHS": "1"})
+    assert "OK" in stdout
+    assert "mrhs (k=3) parity" in stdout, stdout
 
 
 def test_main_process_sees_one_device():

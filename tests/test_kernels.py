@@ -10,10 +10,13 @@ import pytest
 import repro.core  # noqa: F401  (x64 on)
 import jax.numpy as jnp
 
-from repro.core.spmv import spmv, spmv_ell
-from repro.core.spgemm import spgemm, spgemm_symbolic, spgemm_numeric
+from repro.core.spmv import spmm, spmm_ell, spmv, spmv_ell
+from repro.core.spgemm import spgemm_symbolic, spgemm_numeric
 from repro.kernels.block_spmv.block_spmv import block_spmv_ell
 from repro.kernels.block_spmv.ref import block_spmv_ell_ref
+from repro.kernels.block_spmm.block_spmm import block_spmm_ell
+from repro.kernels.block_spmm.ops import block_spmm
+from repro.kernels.block_spmm.ref import block_spmm_ell_ref
 from repro.kernels.block_pair_gemm.block_pair_gemm import block_pair_gemm
 from repro.kernels.block_pair_gemm.ref import block_pair_gemm_ref
 from repro.kernels.block_seg_sum.ops import block_seg_sum
@@ -63,6 +66,42 @@ def test_block_spmv_end_to_end_matches_core():
     x = jnp.asarray(RNG.standard_normal(60))
     got = spmv(A, x, use_kernel=True, interpret=True)
     want = spmv_ell(A.to_ell(), x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12)
+
+
+@pytest.mark.parametrize("dtype", [np.float64, np.float32])
+@pytest.mark.parametrize("nbr,kmax,br,bc,k",
+                         [(5, 3, 3, 3, 1), (16, 7, 3, 6, 4),
+                          (33, 2, 6, 6, 8), (8, 4, 1, 1, 3),
+                          (64, 9, 6, 3, 16), (3, 1, 2, 5, 2)])
+def test_block_spmm_kernel_sweep(nbr, kmax, br, bc, k, dtype):
+    nbc = nbr + 3
+    indices = jnp.asarray(RNG.integers(0, nbc, (nbr, kmax)), jnp.int32)
+    data = jnp.asarray(RNG.standard_normal((nbr, kmax, br, bc)), dtype)
+    x = jnp.asarray(RNG.standard_normal((nbc, bc, k)), dtype)
+    got = block_spmm_ell(indices, data, x, interpret=True)
+    want = block_spmm_ell_ref(indices, data, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **_tol(dtype))
+
+
+@pytest.mark.parametrize("tile_rows,pad_k_to", [(1, 1), (4, 4), (8, 8),
+                                                (32, 2)])
+def test_block_spmm_wrapper_tile_and_pad_invariance(tile_rows, pad_k_to):
+    A = random_bcsr(RNG, 13, 10, 3, 3, density=0.3)
+    ell = A.to_ell()
+    X = jnp.asarray(RNG.standard_normal((A.shape[1], 5)))
+    got = block_spmm(ell, X, interpret=True, tile_rows=tile_rows,
+                     pad_k_to=pad_k_to)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(spmm_ell(ell, X)), rtol=1e-12)
+
+
+def test_block_spmm_end_to_end_matches_core():
+    A = random_bcsr(RNG, 20, 20, 3, 3, density=0.2)
+    X = jnp.asarray(RNG.standard_normal((60, 4)))
+    got = spmm(A, X, path="kernel", interpret=True)
+    want = spmm_ell(A.to_ell(), X)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12)
 
 

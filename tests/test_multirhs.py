@@ -1,0 +1,282 @@
+"""Multi-RHS subsystem: SpMM front door, batched V-cycle/PCG, solve server,
+and the backend env-override dispatch contract.
+
+The load-bearing invariants:
+
+* ``spmm_ell(k=1)`` is *bitwise* ``spmv_ell`` (single-column delegation);
+* the panel V-cycle and masked panel PCG are per-column identical to the
+  looped single-RHS paths (same iteration counts, fp-tolerance solutions);
+* the solve server buckets/pads request streams onto static panel widths
+  and each request's answer matches a dedicated solve;
+* ``REPRO_BACKEND`` / ``REPRO_SPGEMM_PATH`` / ``REPRO_SPMM_PATH`` flips
+  mid-process change the resolved dispatch, and bad values raise
+  ``ValueError`` (not assert — must survive ``python -O``).
+"""
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401  (x64 on)
+import jax.numpy as jnp
+
+from repro.core import gamg
+from repro.core.krylov import pcg
+from repro.core.spmv import spmm, spmm_ell, spmv_ell
+from repro.core.vcycle import vcycle
+from repro.fem.assemble import assemble_elasticity
+from repro.kernels import backend
+from repro.multirhs import AMGSolveServer
+
+from helpers import random_bcsr
+
+RNG = np.random.default_rng(11)
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return assemble_elasticity(4)
+
+
+@pytest.fixture(scope="module")
+def solver(prob):
+    return gamg.GAMGSolver(prob.A, prob.B, coarse_size=30, rtol=1e-8,
+                           maxiter=100)
+
+
+# ---------------------------------------------------------------------------
+# SpMM front door
+# ---------------------------------------------------------------------------
+
+def test_spmm_ell_k1_is_exactly_spmv_ell():
+    A = random_bcsr(RNG, 17, 13, 3, 6, density=0.3)
+    ell = A.to_ell()
+    x = jnp.asarray(RNG.standard_normal(A.shape[1]))
+    got = spmm_ell(ell, x[:, None])
+    want = spmv_ell(ell, x)
+    assert got.shape == (A.shape[0], 1)
+    np.testing.assert_array_equal(np.asarray(got[:, 0]), np.asarray(want))
+
+
+def test_spmm_ell_matches_looped_spmv():
+    A = random_bcsr(RNG, 20, 20, 3, 3, density=0.25)
+    ell = A.to_ell()
+    X = jnp.asarray(RNG.standard_normal((A.shape[1], 5)))
+    Y = spmm_ell(ell, X)
+    for j in range(5):
+        np.testing.assert_allclose(np.asarray(Y[:, j]),
+                                   np.asarray(spmv_ell(ell, X[:, j])),
+                                   rtol=1e-13, atol=1e-13)
+
+
+def test_spmm_front_door_kernel_matches_reference():
+    A = random_bcsr(RNG, 15, 15, 3, 3, density=0.3)
+    X = jnp.asarray(RNG.standard_normal((A.shape[1], 4)))
+    got = spmm(A, X, path="kernel", interpret=True)
+    want = spmm(A, X, path="reference")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-12, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Batched V-cycle / coarse solve broadcast
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("smoother", ["chebyshev", "pbjacobi"])
+def test_batched_vcycle_matches_looped(solver, prob, smoother):
+    hier = solver.hierarchy
+    R = jnp.asarray(RNG.standard_normal((prob.n, 4)))
+    V = vcycle(hier, R, smoother=smoother)
+    for j in range(4):
+        vj = vcycle(hier, R[:, j], smoother=smoother)
+        np.testing.assert_allclose(np.asarray(V[:, j]), np.asarray(vj),
+                                   rtol=1e-12, atol=1e-12)
+
+
+def test_coarse_cho_solve_broadcasts_over_columns(solver):
+    """The coarse ``cho_solve`` accepts matrix RHS natively — the batched
+    V-cycle leans on this, so pin it down explicitly."""
+    import jax
+    chol = solver.hierarchy.coarse_chol
+    nc = chol.shape[0]
+    R = jnp.asarray(RNG.standard_normal((nc, 3)))
+    X = jax.scipy.linalg.cho_solve((chol, True), R)
+    for j in range(3):
+        xj = jax.scipy.linalg.cho_solve((chol, True), R[:, j])
+        np.testing.assert_allclose(np.asarray(X[:, j]), np.asarray(xj),
+                                   rtol=1e-12, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Masked panel PCG
+# ---------------------------------------------------------------------------
+
+def test_block_pcg_matches_looped_pcg_per_column(solver, prob):
+    cols = [np.asarray(prob.b)]
+    cols += [RNG.standard_normal(prob.n) for _ in range(3)]
+    B = jnp.asarray(np.stack(cols, axis=1))
+    res = solver.solve_many(B)
+    assert bool(np.asarray(res.converged).all())
+    for j in range(B.shape[1]):
+        single = solver.solve(B[:, j])
+        assert int(res.iters[j]) == int(single.iters), \
+            f"col {j}: batched {int(res.iters[j])} != single {int(single.iters)}"
+        np.testing.assert_allclose(np.asarray(res.x[:, j]),
+                                   np.asarray(single.x), rtol=1e-6,
+                                   atol=1e-10)
+
+
+def test_block_pcg_masks_converged_columns(solver, prob):
+    """A zero column is converged at iteration 0 and must stay frozen while
+    the live columns iterate to convergence."""
+    B = np.zeros((prob.n, 2))
+    B[:, 1] = np.asarray(prob.b)
+    res = solver.solve_many(jnp.asarray(B))
+    assert int(res.iters[0]) == 0
+    assert bool(res.converged[0])
+    np.testing.assert_array_equal(np.asarray(res.x[:, 0]), 0.0)
+    assert int(res.iters[1]) == int(solver.solve(jnp.asarray(B[:, 1])).iters)
+
+
+def test_pcg_record_history(solver, prob):
+    from repro.core.spmv import apply_ell
+
+    def apply_a(v):
+        return apply_ell(solver.hierarchy.levels[0].a_ell, v)
+
+    def apply_m(r):
+        return vcycle(solver.hierarchy, r)
+
+    b = jnp.asarray(prob.b)
+    res, hist = pcg(apply_a, apply_m, b, maxiter=50, record_history=True)
+    h = np.asarray(hist)
+    assert h.shape == (50,)
+    k = int(res.iters)
+    assert np.isfinite(h[:k]).all()
+    assert np.isnan(h[k:]).all()
+    bnorm = float(jnp.linalg.norm(b))
+    np.testing.assert_allclose(h[k - 1] / bnorm, float(res.relres),
+                               rtol=1e-12)
+    # default path is unchanged: plain CGResult, no history buffer
+    res2 = pcg(apply_a, apply_m, b, maxiter=50)
+    assert int(res2.iters) == k
+
+
+# ---------------------------------------------------------------------------
+# Solve server
+# ---------------------------------------------------------------------------
+
+def test_server_buckets_pads_and_matches_dedicated_solves(solver, prob):
+    srv = AMGSolveServer(solver.setup_data, prob.A.data, buckets=(1, 2, 4),
+                         rtol=1e-8, maxiter=100)
+    rhs = [np.asarray(prob.b)] + [RNG.standard_normal(prob.n)
+                                  for _ in range(2)]
+    reports = srv.serve(rhs)
+    assert [r.request_id for r in reports] == [0, 1, 2]
+    assert all(r.k_bucket == 4 for r in reports)   # 3 rides in the 4-bucket
+    assert srv.stats["padded_columns"] == 1
+    assert srv.stats["solves_per_k"] == {1: 0, 2: 0, 4: 1}
+    for r, b in zip(reports, rhs):
+        single = solver.solve(jnp.asarray(b))
+        assert r.converged and r.iters == int(single.iters)
+        np.testing.assert_allclose(r.x, np.asarray(single.x), rtol=1e-6,
+                                   atol=1e-10)
+
+
+def test_server_chunks_streams_over_max_bucket(solver, prob):
+    srv = AMGSolveServer(solver.setup_data, prob.A.data, buckets=(2, 4),
+                         rtol=1e-8, maxiter=100)
+    for _ in range(6):
+        srv.submit(RNG.standard_normal(prob.n))
+    reports = srv.flush()
+    assert len(reports) == 6 and not srv._pending
+    # 6 requests -> one full 4-panel + one 2-panel, no padding anywhere
+    assert srv.stats["solves_per_k"] == {2: 1, 4: 1}
+    assert srv.stats["padded_columns"] == 0
+    assert all(r.converged for r in reports)
+
+
+def test_server_update_operator_refreshes_hierarchy(solver, prob):
+    srv = AMGSolveServer(solver.setup_data, prob.A.data, buckets=(1, 2),
+                         rtol=1e-8, maxiter=100)
+    srv.update_operator(prob.A.data * 1.5)
+    [rep] = srv.serve([np.asarray(prob.b)])
+    direct = gamg.make_solve(solver.setup_data, rtol=1e-8, maxiter=100)(
+        srv.hierarchy, jnp.asarray(prob.b))
+    assert rep.converged and rep.iters == int(direct.iters)
+    np.testing.assert_allclose(rep.x, np.asarray(direct.x), rtol=1e-6,
+                               atol=1e-10)
+    assert srv.stats["recomputes"] == 1
+
+
+def test_server_rejects_bad_inputs(solver, prob):
+    with pytest.raises(ValueError):
+        AMGSolveServer(solver.setup_data, prob.A.data, buckets=())
+    srv = AMGSolveServer(solver.setup_data, prob.A.data, buckets=(1,))
+    with pytest.raises(ValueError):
+        srv.submit(np.zeros(prob.n + 1))
+
+
+# ---------------------------------------------------------------------------
+# Backend env-override dispatch (REPRO_BACKEND / REPRO_SPGEMM_PATH /
+# REPRO_SPMM_PATH flipped mid-process)
+# ---------------------------------------------------------------------------
+
+def test_backend_override_flips_dispatch_mid_process(monkeypatch):
+    monkeypatch.setenv("REPRO_BACKEND", "tpu")
+    assert backend.backend() == "tpu"
+    assert backend.resolve_use_kernel(None) is True
+    assert backend.resolve_interpret(None) is False
+    assert backend.resolve_spgemm_path(None) == "fused"
+    assert backend.resolve_spmm_path(None) == "kernel"
+    monkeypatch.setenv("REPRO_BACKEND", "cpu")
+    assert backend.resolve_use_kernel(None) is False
+    assert backend.resolve_interpret(None) is True
+    assert backend.resolve_spgemm_path(None) == "reference"
+    assert backend.resolve_spmm_path(None) == "reference"
+
+
+def test_path_override_changes_numeric_dispatch(monkeypatch):
+    """REPRO_SPGEMM_PATH really reroutes the numeric SpGEMM mid-process
+    (pairs kernels run in interpret mode on CPU and must agree with the
+    reference), and REPRO_SPMM_PATH reroutes the SpMM front door."""
+    from repro.core.spgemm import spgemm_symbolic, spgemm_numeric_data
+    A = random_bcsr(RNG, 8, 6, 3, 3)
+    Bm = random_bcsr(RNG, 6, 7, 3, 6)
+    plan = spgemm_symbolic(A, Bm)
+    ref = spgemm_numeric_data(plan, A.data, Bm.data)
+    monkeypatch.setenv("REPRO_SPGEMM_PATH", "pairs")
+    got = spgemm_numeric_data(plan, A.data, Bm.data)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-12, atol=1e-12)
+
+    X = jnp.asarray(RNG.standard_normal((A.shape[1], 3)))
+    want = spmm(A, X)                       # cpu default: reference
+    monkeypatch.setenv("REPRO_SPMM_PATH", "kernel")
+    got2 = spmm(A, X)                       # env forces the Pallas kernel
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(want),
+                               rtol=1e-12, atol=1e-12)
+
+
+def test_spmm_path_engages_in_panel_vcycle(monkeypatch, solver, prob):
+    """REPRO_SPMM_PATH=kernel reroutes the panel V-cycle's operator
+    applications (``apply_ell``'s panel branch) through the Pallas
+    block_spmm kernel — interpret mode on CPU — and must agree with the
+    reference path it replaces."""
+    R = jnp.asarray(RNG.standard_normal((prob.n, 2)))
+    want = vcycle(solver.hierarchy, R)
+    monkeypatch.setenv("REPRO_SPMM_PATH", "kernel")
+    got = vcycle(solver.hierarchy, R)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-12, atol=1e-12)
+
+
+def test_invalid_paths_raise_value_error(monkeypatch):
+    with pytest.raises(ValueError):
+        backend.resolve_spgemm_path("bogus")
+    with pytest.raises(ValueError):
+        backend.resolve_spmm_path("bogus")
+    monkeypatch.setenv("REPRO_SPGEMM_PATH", "nope")
+    with pytest.raises(ValueError):
+        backend.resolve_spgemm_path(None)
+    monkeypatch.setenv("REPRO_SPMM_PATH", "nope")
+    with pytest.raises(ValueError):
+        backend.resolve_spmm_path(None)

@@ -17,9 +17,12 @@ from repro.core.aggregation import (  # noqa: E402
     luby_mis_device,
 )
 from repro.core.strength import StrengthGraph  # noqa: E402
+from repro.core.krylov import pcg  # noqa: E402
+from repro.core.vcycle import pbjacobi_apply  # noqa: E402
 from repro.dist.partition import partition_rows  # noqa: E402
+from repro.multirhs.block_krylov import block_pcg  # noqa: E402
 
-from helpers import random_bcsr  # noqa: E402
+from helpers import random_bcsr, spd_bcsr  # noqa: E402
 
 
 @st.composite
@@ -122,6 +125,34 @@ def test_luby_mis_independent_and_maximal(seed, n, dens):
     assert not (adj & np.outer(in_mis, in_mis)).any(), "not independent"
     uncovered = ~in_mis & ~(adj @ in_mis.astype(int) > 0)
     assert not uncovered.any(), "not maximal"
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+@settings(max_examples=15, deadline=None)
+def test_batched_solve_matches_looped_singles(seed, k):
+    """Masked panel PCG == k looped single-RHS PCG solves to fp tolerance
+    (pbjacobi-preconditioned CG on a random SPD blocked operator)."""
+    from repro.core.spmv import apply_ell
+    rng = np.random.default_rng(seed)
+    A = spd_bcsr(rng, 6, 3)
+    ell = A.to_ell()
+    dinv = jnp.linalg.inv(A.diagonal_blocks())
+
+    def apply_a(v):
+        return apply_ell(ell, v)
+
+    def apply_m(r):
+        return pbjacobi_apply(dinv, r)
+
+    B = jnp.asarray(rng.standard_normal((A.shape[0], k)))
+    res = block_pcg(apply_a, apply_m, B, rtol=1e-10, maxiter=100)
+    assert bool(np.asarray(res.converged).all())
+    for j in range(k):
+        single = pcg(apply_a, apply_m, B[:, j], rtol=1e-10, maxiter=100)
+        assert bool(single.converged)
+        np.testing.assert_allclose(np.asarray(res.x[:, j]),
+                                   np.asarray(single.x), rtol=1e-6,
+                                   atol=1e-8)
 
 
 @given(st.integers(1, 1000), st.integers(1, 64))
