@@ -1,9 +1,16 @@
-"""Benchmark helpers: timing + CSV emission.
+"""Benchmark helpers: timing, CSV emission, and the dtype-parameterized
+traffic model.
 
 All benchmarks run the REAL implementations on CPU at reduced scale (the
 paper's A100 ladder does not fit a CPU container); the quantities compared
 are the same ones the paper tables compare, and byte/traffic models are
 evaluated exactly.  CSV schema: ``name,us_per_call,derived``.
+
+The traffic model is parameterized by the *value itemsize* (the
+``PrecisionPolicy`` lever): every modeled byte count separates value
+bytes (scale with the hierarchy dtype width) from index bytes (always
+int32) so blocked-fp32 / blocked-fp64 / scalar rows are all derived from
+one accounting.
 """
 from __future__ import annotations
 
@@ -11,6 +18,73 @@ import time
 from typing import Callable
 
 import jax
+import numpy as np
+
+
+def value_itemsize(dtype) -> int:
+    """Bytes per stored value for a dtype / dtype name ('f32' -> 4)."""
+    names = {"f64": 8, "f32": 4, "bf16": 2}
+    if isinstance(dtype, str) and dtype in names:
+        return names[dtype]
+    return int(np.dtype(dtype).itemsize)
+
+
+def _ell_apply_bytes(nbr, kmax, br, bc, itemsize, scalar=False):
+    """Modeled HBM bytes of one blocked-ELL operator apply.
+
+    values  (nbr*kmax) blocks of br*bc values   — scale with itemsize
+    indices one int32 per block — or per *scalar* nnz in scalar storage
+            (the paper's bs^2 index-traffic blowup)
+    vectors x gather at the no-reuse bound (one bc-block per slot blocked,
+            one value per scalar nnz in scalar form) + the y write
+    """
+    values = nbr * kmax * br * bc * itemsize
+    if scalar:
+        indices = nbr * kmax * br * bc * 4
+        x_gather = nbr * kmax * br * bc * itemsize
+    else:
+        indices = nbr * kmax * 4
+        x_gather = nbr * kmax * bc * itemsize
+    y_write = nbr * br * itemsize
+    return values, indices, x_gather + y_write
+
+
+def vcycle_traffic(setupd, itemsize: int = 8, scalar: bool = False) -> dict:
+    """Modeled HBM traffic of one V(degree,degree) cycle at a value width.
+
+    Per level (down + up): ``2*degree + 1`` applications of A (degree
+    smoothing each side + the residual), ``2*degree`` pbjacobi applies of
+    the dinv blocks, one R and one P apply; the coarsest level pays the
+    dense triangular solves.  Returns ``{"value", "index", "vector",
+    "total"}`` bytes so callers can report the value-byte lever (what a
+    reduced-precision hierarchy halves) next to the index-byte lever
+    (what the blocked format sheds) — the two halves of the paper's
+    bytes-per-nonzero argument.
+    """
+    degree = setupd.degree
+    v = ix = vec = 0
+    for ls in setupd.levels:
+        nbr, kmax = ls.a_ell_plan.indices.shape
+        bs = ls.A0.br
+        av, ai, avec = _ell_apply_bytes(nbr, kmax, bs, bs, itemsize, scalar)
+        n_apply = 2 * degree + 1
+        v += n_apply * av
+        ix += n_apply * ai
+        vec += n_apply * avec
+        # pbjacobi: dinv blocks + r read + x update, per smoothing step
+        vec += 2 * degree * 3 * nbr * bs * itemsize
+        v += 2 * degree * nbr * bs * bs * itemsize
+        for t in (ls.p_ell, ls.r_ell):
+            tv, ti, tvec = _ell_apply_bytes(t.nbr, t.kmax, t.br, t.bc,
+                                            itemsize, scalar)
+            v += tv
+            ix += ti
+            vec += tvec
+    nc = setupd.coarse_struct.nbr * setupd.coarse_struct.br
+    v += nc * nc * itemsize          # two triangular solves over the factor
+    vec += 2 * nc * itemsize
+    return {"value": v, "index": ix, "vector": vec,
+            "total": v + ix + vec}
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:

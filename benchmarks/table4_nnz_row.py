@@ -28,7 +28,9 @@ from benchmarks.common import emit, time_fn
 def run() -> None:
     for order, m in ((1, 10), (2, 6)):
         prob = assemble_elasticity(m, order=order)
-        setupd = gamg.setup(prob.A, prob.B, coarse_size=30)
+        # fp64 pin: blocked/scalar parity rows are an fp64 contract
+        setupd = gamg.setup(prob.A, prob.B, coarse_size=30,
+                            precision="f64")
         hier_b = gamg.recompute(setupd, prob.A.data)
         hier_s = recompute_scalar(setupd, prob.A.data)
         nnz_row = prob.A.nnzb * 9 / prob.A.shape[0]

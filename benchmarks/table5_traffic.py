@@ -5,6 +5,11 @@ containers: the blocked SpGEMM moves one 4-byte index per block against
 bs^2 for scalar, so the traffic ratio approaches bs^2 (the paper measures
 10.2x vs the 9x model for bs=3).
 
+The model is parameterized by *value-dtype width* (the ``PrecisionPolicy``
+lever): the V-cycle section reports blocked-fp64 vs blocked-fp32 vs
+scalar-fp64 rows, separating the value bytes a reduced-precision hierarchy
+halves from the index bytes the blocked format sheds.
+
 Fig. 3 (the cuSPARSE OOM at 128^3 on 8 GPUs) is reproduced as a *predicted*
 capacity cliff: measure the scalar/blocked SpGEMM plan bytes on a ladder of
 grids, fit the per-unknown slope (it is linear in unknowns for fixed
@@ -22,7 +27,7 @@ from repro.core.spgemm import spgemm_symbolic
 from repro.core.scalar_csr import expand_bcsr
 from repro.fem.assemble import assemble_elasticity
 
-from benchmarks.common import emit
+from benchmarks.common import emit, value_itemsize, vcycle_traffic
 
 
 def run(ladder=(6, 8, 10)) -> None:
@@ -51,13 +56,38 @@ def run(ladder=(6, 8, 10)) -> None:
         emit(f"t5.spgemm_plan.scalar.m{m}", 0.0,
              f"bytes={s_bytes};ratio={s_bytes/b_bytes:.1f}x;"
              f"model_ratio={s_bytes_model/b_bytes:.1f}x")
-        # traffic of the numeric phase: values + one index per pair
+        # traffic of the numeric phase: values + one index per pair, at the
+        # operator's actual value width and at the fp32 policy width
         bs = ls.A0.br
-        t_block = plan_b.npairs * (bs * bs * 8 * 2 + 4)
-        t_scalar = plan_s.npairs * (8 * 2 + 4 + 4)
-        emit(f"t5.numeric_traffic.m{m}", 0.0,
-             f"block={t_block};scalar={t_scalar};"
-             f"ratio={t_scalar/t_block:.2f}x;bs2={bs*bs}")
+        isz = value_itemsize(ls.A0.data.dtype)
+        for tag, w in (("", isz), (".f32", 4)):
+            t_block = plan_b.npairs * (bs * bs * w * 2 + 4)
+            t_scalar = plan_s.npairs * (w * 2 + 4 + 4)
+            emit(f"t5.numeric_traffic{tag}.m{m}", 0.0,
+                 f"block={t_block};scalar={t_scalar};"
+                 f"ratio={t_scalar/t_block:.2f}x;bs2={bs*bs};"
+                 f"value_bytes={w}")
+
+        # V-cycle traffic at the PrecisionPolicy widths: blocked fp64 vs
+        # blocked fp32 vs scalar fp64.  The value-byte column is the lever
+        # a reduced-precision-resident hierarchy pulls (~2x), orthogonal
+        # to the index-byte lever of the blocked format.
+        t64 = vcycle_traffic(setupd, itemsize=value_itemsize("f64"))
+        t32 = vcycle_traffic(setupd, itemsize=value_itemsize("f32"))
+        ts = vcycle_traffic(setupd, itemsize=value_itemsize("f64"),
+                            scalar=True)
+        emit(f"t5.vcycle_traffic.block_f64.m{m}", 0.0,
+             f"value={t64['value']};index={t64['index']};"
+             f"total={t64['total']}")
+        emit(f"t5.vcycle_traffic.block_f32.m{m}", 0.0,
+             f"value={t32['value']};index={t32['index']};"
+             f"total={t32['total']};"
+             f"value_ratio_vs_f64={t64['value']/t32['value']:.2f}x;"
+             f"total_ratio_vs_f64={t64['total']/t32['total']:.2f}x")
+        emit(f"t5.vcycle_traffic.scalar_f64.m{m}", 0.0,
+             f"value={ts['value']};index={ts['index']};"
+             f"total={ts['total']};"
+             f"index_ratio_vs_block={ts['index']/t64['index']:.1f}x")
         per_unknown.append((n, s_bytes / n, b_bytes / n))
 
         # blocked COO assembly plan vs scalar equivalent (Sec. 5)

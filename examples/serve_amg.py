@@ -25,11 +25,14 @@ def main(m: int = 7) -> None:
     print(f"assembling {m}^3 Q1 elasticity ...")
     prob = assemble_elasticity(m)
     t0 = time.perf_counter()
+    # REPRO_PRECISION=f32 hosts an fp32-resident hierarchy that still
+    # serves fp64 requests (fp64 outer CG, preconditioner-boundary cast)
     setupd = gamg.setup(prob.A, prob.B, coarse_size=40)
     server = AMGSolveServer(setupd, prob.A.data, buckets=(1, 2, 4, 8),
                             rtol=1e-8, maxiter=100)
     print(f"cold setup + hierarchy: {time.perf_counter() - t0:.2f}s, "
-          f"n = {prob.n}, buckets = {server.buckets}")
+          f"n = {prob.n}, buckets = {server.buckets}, "
+          f"precision: {setupd.precision.describe()}")
 
     rng = np.random.default_rng(0)
     # bursty request stream: arrival counts deliberately off-bucket

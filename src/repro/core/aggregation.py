@@ -14,14 +14,17 @@ greedy disjoint covering (Vanek et al.):
 
 ``luby_mis_device`` implements the paper's *future-work* device coarsener
 (MATCOARSENMISKOKKOS, Sec. 6): parallel Luby rounds with deterministic hash
-weights, entirely in ``jax.lax`` control flow, followed by a device
-root-attach pass.  It is selectable via ``gamg.setup(coarsener="mis")`` and
-keeps even the cold graph phase on device for single-shard problems —
-completing the fully device-resident cold setup the paper sketches.
+weights, entirely in ``jax.lax`` control flow (jitted, shapes static per
+level), followed by a device root-attach pass.  It is ``gamg.setup``'s
+*default* aggregation path (``coarsener="mis"``; the host greedy covering
+stays available as ``coarsener="greedy"``) and keeps even the cold graph
+phase on device for single-shard problems — completing the fully
+device-resident cold setup the paper sketches.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -102,6 +105,7 @@ def _hash_weights(n: int, seed: int) -> jax.Array:
     return (x ^ (x >> 16)).astype(jnp.uint32)
 
 
+@functools.partial(jax.jit, static_argnames=("seed",))
 def luby_mis_device(nbr_idx: jax.Array, nbr_mask: jax.Array,
                     seed: int = 0) -> jax.Array:
     """Maximal independent set via deterministic Luby rounds, on device.
@@ -141,6 +145,7 @@ def luby_mis_device(nbr_idx: jax.Array, nbr_mask: jax.Array,
     return (state == 1).astype(jnp.int32)
 
 
+@functools.partial(jax.jit, static_argnames=("seed",))
 def mis_aggregate_device(nbr_idx: jax.Array, nbr_mask: jax.Array,
                          seed: int = 0) -> jax.Array:
     """MIS roots claim their neighborhoods — device aggregation.

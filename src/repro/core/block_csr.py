@@ -244,6 +244,18 @@ class BlockELL:
     def shape(self) -> Tuple[int, int]:
         return (self.nbr * self.br, self.nbc * self.bc)
 
+    def astype(self, dtype) -> "BlockELL":
+        """Same structure, values cast to ``dtype`` (precision policies).
+
+        Returns ``self`` when the dtype already matches, so full-precision
+        policies stay bitwise on the original arrays.
+        """
+        if self.data.dtype == jnp.dtype(dtype):
+            return self
+        return BlockELL(indices=self.indices,
+                        data=self.data.astype(dtype), mask=self.mask,
+                        nbc=self.nbc, state_token=self.state_token)
+
     def tree_flatten(self):
         return (self.indices, self.data, self.mask), (self.nbc,
                                                       self.state_token)

@@ -42,9 +42,10 @@ from repro.core.smooth import (
     lambda_max_dinv_a,
     smoothed_prolongator,
 )
+from repro.core.precision import PrecisionPolicy
 from repro.core.strength import strength_graph
 from repro.core.tentative import tentative_prolongator
-from repro.core.vcycle import Hierarchy, LevelState, vcycle
+from repro.core.vcycle import Hierarchy, LevelState, fine_operator, vcycle
 from repro.core.spmv import spmv_ell
 from repro.core.krylov import CGResult, pcg
 
@@ -79,6 +80,8 @@ class GAMGSetup:
     theta: float
     coarsener: str
     stats: dict
+    precision: PrecisionPolicy = dataclasses.field(
+        default_factory=PrecisionPolicy.double)
 
     @property
     def n_levels(self) -> int:
@@ -88,14 +91,32 @@ class GAMGSetup:
 def setup(A: BlockCSR, B: Array, *, theta: float = 0.08,
           max_levels: int = 10, coarse_size: int = 100,
           smoother: str = "chebyshev", degree: int = 2,
-          coarsener: str = "greedy") -> GAMGSetup:
-    """Cold GAMG setup on the block format (no scalar expansion anywhere)."""
+          coarsener: str = "mis", precision=None) -> GAMGSetup:
+    """Cold GAMG setup on the block format (no scalar expansion anywhere).
+
+    ``coarsener`` selects the aggregation path: ``"mis"`` (default) keeps
+    even the cold graph phase on device via the jitted Luby-MIS coarsener
+    (paper Sec. 6's future work); ``"greedy"`` is the classical host-side
+    Vanek covering, kept as the fallback and the quality baseline
+    (``tests/test_amg_convergence.py`` checks the two stay comparable).
+
+    ``precision`` is a ``PrecisionPolicy`` / stock-policy name; ``None``
+    resolves ``REPRO_PRECISION`` via ``repro.kernels.backend`` (default
+    full fp64).  The *setup* math (strength, aggregation, prolongator
+    smoothing) always runs at the operator dtype; the policy governs what
+    ``recompute`` builds and what the solves run at.
+    """
+    from repro.kernels.backend import resolve_precision
+    precision = resolve_precision(precision)
     assert A.br == A.bc, "system operator must have square blocks"
     levels: List[LevelSetup] = []
     Acur, Bcur = A, jnp.asarray(B)
     nns = int(Bcur.shape[1])
     stats = {"level_rows": [A.nbr * A.br], "level_nnzb": [A.nnzb],
              "level_bs": [A.br], "conversions_to_scalar": 0}
+    if coarsener not in ("mis", "greedy"):
+        raise ValueError(f"invalid coarsener {coarsener!r}: "
+                         f"expected 'mis' or 'greedy'")
     while Acur.nbr > coarse_size and len(levels) < max_levels - 1:
         bs = Acur.br
         graph = strength_graph(Acur, theta)
@@ -126,7 +147,8 @@ def setup(A: BlockCSR, B: Array, *, theta: float = 0.08,
         Acur, Bcur = Anext, Bc
     return GAMGSetup(levels=levels, coarse_struct=Acur, bs_fine=A.br,
                      nns_dim=nns, smoother=smoother, degree=degree,
-                     theta=theta, coarsener=coarsener, stats=stats)
+                     theta=theta, coarsener=coarsener, stats=stats,
+                     precision=precision)
 
 
 def _repair_small_aggregates(aggr: Aggregation, graph, min_size: int
@@ -154,35 +176,78 @@ def _repair_small_aggregates(aggr: Aggregation, graph, min_size: int
 # Hot numeric recompute (the paper's state-gated PtAP chain).
 # ---------------------------------------------------------------------------
 
-def _level_state(ls: LevelSetup, a_data: Array) -> LevelState:
+def _level_state(ls: LevelSetup, a_data: Array,
+                 policy: PrecisionPolicy = None) -> LevelState:
+    """Numeric level state from hierarchy-dtype payloads ``a_data``.
+
+    The dense diagonal inversion runs at ``policy.factor_dtype`` (LAPACK
+    has no sub-f32 kernels) and the D^{-1}A scaling accumulates at
+    ``policy.accum_dtype``; everything is *stored* at the hierarchy dtype.
+    A full-fp64 policy leaves every operation bitwise unchanged.
+    """
+    policy = policy or PrecisionPolicy.double()
+    h = jnp.dtype(policy.hierarchy_dtype)
+    acc = jnp.promote_types(h, jnp.dtype(policy.accum_dtype))
     A = ls.A0.with_data(a_data)
     diag = A.diagonal_blocks()
-    dinv = invert_diag_blocks(diag)
+    dinv = invert_diag_blocks(
+        diag.astype(policy.factor_dtype)).astype(h)
     a_ell = ls.a_ell_plan.build(a_data)
-    dinva_ell = jnp.einsum("nab,nkbc->nkac", dinv, a_ell.data,
-                           preferred_element_type=a_data.dtype)
+    dinva_ell = jnp.einsum("nab,nkbc->nkac", dinv.astype(acc),
+                           a_ell.data.astype(acc),
+                           preferred_element_type=acc).astype(h)
     lam = lambda_max_dinv_a(a_ell.indices, dinva_ell, a_ell.mask,
                             A.nbr, A.br)
-    return LevelState(a_ell=a_ell, p_ell=ls.p_ell, r_ell=ls.r_ell,
-                      dinv=dinv, lam_max=lam)
+    return LevelState(a_ell=a_ell, p_ell=ls.p_ell.astype(h),
+                      r_ell=ls.r_ell.astype(h), dinv=dinv, lam_max=lam)
+
+
+def coarse_cholesky(dense: Array, policy: PrecisionPolicy) -> Array:
+    """Jittered dense Cholesky of the coarsest operator.
+
+    fp64 keeps the legacy 1e-12 relative jitter bitwise; reduced-precision
+    chains carry O(eps) rounding into the coarse operator, so the guard
+    scales with the hierarchy eps (``PrecisionPolicy.coarse_jitter_scale``)
+    and the factorization runs at ``factor_dtype``.
+    """
+    n = dense.shape[0]
+    fd = jnp.dtype(policy.factor_dtype)
+    densef = dense.astype(fd)
+    jitter = policy.coarse_jitter_scale() * jnp.trace(densef) / n
+    chol = jnp.linalg.cholesky(densef + jitter * jnp.eye(n, dtype=fd))
+    return chol.astype(policy.hierarchy_dtype)
 
 
 def recompute(setupd: GAMGSetup, a_fine_data: Array) -> Hierarchy:
     """Hot numeric hierarchy rebuild: pure function of the fine values.
 
+    The hierarchy (level payloads, transfer payloads, dinv, coarse factor)
+    is built and stored at ``setupd.precision.hierarchy_dtype``; the PtAP
+    chain runs at that dtype too, so the value traffic of the whole
+    recompute scales with the policy's width.  Mixed policies additionally
+    keep a krylov-dtype copy of the *finest* operator
+    (``Hierarchy.a_fine_ell``) for the outer iteration.
+
     Wrap with ``make_recompute`` for the jitted production entry point.
     """
+    policy = setupd.precision
+    h = jnp.dtype(policy.hierarchy_dtype)
+    a_in = jnp.asarray(a_fine_data)
     states = []
-    a_data = a_fine_data
+    a_data = a_in.astype(h)
     for ls in setupd.levels:
-        states.append(_level_state(ls, a_data))
-        a_data = ptap_numeric_data(ls.ptap_cache, a_data, ls.P.data)
+        states.append(_level_state(ls, a_data, policy))
+        a_data = ptap_numeric_data(ls.ptap_cache, a_data,
+                                   ls.P.data.astype(h),
+                                   accum_dtype=policy.kernel_accum_dtype)
     Ac = setupd.coarse_struct.with_data(a_data)
-    dense = Ac.to_dense()
-    n = dense.shape[0]
-    jitter = 1e-12 * jnp.trace(dense) / n
-    chol = jnp.linalg.cholesky(dense + jitter * jnp.eye(n, dtype=dense.dtype))
-    return Hierarchy(levels=tuple(states), coarse_chol=chol)
+    chol = coarse_cholesky(Ac.to_dense(), policy)
+    a_fine_ell = None
+    if policy.mixed and setupd.levels:
+        a_fine_ell = setupd.levels[0].a_ell_plan.build(
+            a_in.astype(policy.krylov_dtype))
+    return Hierarchy(levels=tuple(states), coarse_chol=chol,
+                     a_fine_ell=a_fine_ell)
 
 
 def make_recompute(setupd: GAMGSetup):
@@ -191,18 +256,26 @@ def make_recompute(setupd: GAMGSetup):
 
 
 def make_solve(setupd: GAMGSetup, rtol: float = 1e-8, maxiter: int = 200):
-    """Jitted hot KSPSolve: AMG-preconditioned CG on a Hierarchy pytree."""
+    """Jitted hot KSPSolve: AMG-preconditioned CG on a Hierarchy pytree.
+
+    The outer CG runs at the policy's ``krylov_dtype`` (the dtype of
+    ``b`` / the ``fine_operator`` copy); the V-cycle preconditioner runs
+    at ``smoother_dtype`` with the cast at the ``pcg`` boundary —
+    iterative refinement around a reduced-precision hierarchy.
+    """
     smoother, degree = setupd.smoother, setupd.degree
+    precond_dtype = setupd.precision.smoother_dtype
 
     @partial(jax.jit, static_argnames=())
     def solve(hier: Hierarchy, b: Array) -> CGResult:
         def apply_a(x):
-            return spmv_ell(hier.levels[0].a_ell, x)
+            return spmv_ell(fine_operator(hier), x)
 
         def apply_m(r):
             return vcycle(hier, r, smoother=smoother, degree=degree)
 
-        return pcg(apply_a, apply_m, b, rtol=rtol, maxiter=maxiter)
+        return pcg(apply_a, apply_m, b, rtol=rtol, maxiter=maxiter,
+                   precond_dtype=precond_dtype)
 
     return solve
 

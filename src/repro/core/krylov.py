@@ -22,10 +22,34 @@ class CGResult(NamedTuple):
     converged: Array
 
 
+def wrap_precond(apply_m: Callable[[Array], Array], precond_dtype,
+                 outer_dtype) -> Callable[[Array], Array]:
+    """The mixed-precision preconditioner boundary, in one place.
+
+    Casts the residual down to ``precond_dtype`` before ``apply_m`` and
+    the preconditioned direction back to ``outer_dtype`` after —
+    iterative-refinement style.  Returns ``apply_m`` unchanged when no
+    cast is needed, so full-precision callers stay bitwise.  Shared by
+    ``pcg``, ``block_pcg`` and the distributed ``_rank_pcg``.
+    """
+    if precond_dtype is None:
+        return apply_m
+    pd = jnp.dtype(precond_dtype)
+    outer = jnp.dtype(outer_dtype)
+    if pd == outer:
+        return apply_m
+
+    def wrapped(r):
+        return apply_m(r.astype(pd)).astype(outer)
+
+    return wrapped
+
+
 def pcg(apply_a: Callable[[Array], Array],
         apply_m: Callable[[Array], Array],
         b: Array, x0: Array | None = None, rtol: float = 1e-8,
-        maxiter: int = 200, record_history: bool = False):
+        maxiter: int = 200, record_history: bool = False,
+        precond_dtype=None):
     """Standard PCG; fixed SPD preconditioner (one AMG V-cycle).
 
     ``record_history=True`` (a static, trace-time switch — the default
@@ -33,7 +57,16 @@ def pcg(apply_a: Callable[[Array], Array],
     unpreconditioned residual-norm trace as a fixed-size ``(maxiter,)``
     buffer: slot ``i`` holds ``||r||`` after iteration ``i+1``; slots past
     ``iters`` stay NaN.  Used by the benchmark/convergence plots.
+
+    ``precond_dtype`` (static) is the mixed-precision boundary: when set,
+    the residual is cast to that dtype before ``apply_m`` and the
+    preconditioned direction cast back to ``b.dtype`` afterwards —
+    iterative-refinement style, so the outer iteration (dots, updates,
+    convergence monitor) stays at the Krylov dtype while the AMG V-cycle
+    runs on a reduced-precision hierarchy (``PrecisionPolicy``).  ``None``
+    or ``b.dtype`` leaves the call chain bitwise unchanged.
     """
+    apply_m = wrap_precond(apply_m, precond_dtype, b.dtype)
     x = jnp.zeros_like(b) if x0 is None else x0
     r = b - apply_a(x)
     z = apply_m(r)

@@ -1,0 +1,152 @@
+"""Precision policy — dtype assignments for the mixed-precision AMG stack.
+
+The paper's traffic argument is bytes-per-nonzero: the blocked format sheds
+*index* bytes, and this module governs the other half of the lever — the
+*value* bytes.  Following Demidov (arXiv:2202.09056), a reduced-precision
+AMG preconditioner inside a full-precision Krylov loop halves the
+bandwidth-bound V-cycle traffic with negligible iteration growth, so the
+policy splits the solve into four dtype roles:
+
+``hierarchy_dtype``
+    storage of the device-resident hierarchy: every level operator's
+    ``A_l`` payloads, the P/R transfer payloads, the pbjacobi ``dinv``
+    blocks and the coarse Cholesky factor.
+
+``smoother_dtype``
+    the dtype the V-cycle (smoother + transfer chain) *runs* at.  Equal to
+    ``hierarchy_dtype`` in the stock policies; kept separate so a policy
+    can e.g. store bf16 payloads but smooth in fp32.
+
+``krylov_dtype``
+    the outer Krylov iteration (PCG vectors, dot products, residual
+    monitor) and the finest-level operator it applies.  ``pcg`` /
+    ``block_pcg`` cast at the preconditioner boundary
+    (iterative-refinement style), so a reduced-precision hierarchy never
+    degrades the convergence monitor.
+
+``accum_dtype``
+    the accumulator the blocked kernels contract in when fed inputs below
+    fp32 (the ``preferred_element_type`` of every einsum/kernel reduction).
+
+Policies are resolved by ``repro.kernels.backend.resolve_precision`` —
+``None`` falls back to the ``REPRO_PRECISION`` env override ("f64" | "f32"
+| "bf16"), default full double (the paper's setting, bitwise-identical to
+the pre-policy behaviour).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+_NAMES = ("f64", "f32", "bf16")
+
+
+def _dt(x) -> np.dtype:
+    """Canonical np.dtype (ml_dtypes names like 'bfloat16' resolve too)."""
+    if isinstance(x, str) and x in _ALIASES:
+        x = _ALIASES[x]
+    try:
+        return np.dtype(x)
+    except TypeError as e:  # pragma: no cover - exotic dtype objects
+        raise ValueError(f"not a dtype: {x!r}") from e
+
+
+def _bf16() -> np.dtype:
+    import ml_dtypes
+    return np.dtype(ml_dtypes.bfloat16)
+
+
+_ALIASES = {"f64": np.float64, "fp64": np.float64, "float64": np.float64,
+            "f32": np.float32, "fp32": np.float32, "float32": np.float32}
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Frozen, hashable dtype assignment for one solver configuration."""
+
+    hierarchy_dtype: np.dtype
+    smoother_dtype: np.dtype
+    krylov_dtype: np.dtype
+    accum_dtype: np.dtype
+
+    def __post_init__(self):
+        for f in dataclasses.fields(self):
+            object.__setattr__(self, f.name, _dt(getattr(self, f.name)))
+
+    # ---- constructors ---------------------------------------------------
+    @staticmethod
+    def double() -> "PrecisionPolicy":
+        """All-fp64 (the paper's setting; bitwise legacy behaviour)."""
+        return PrecisionPolicy(np.float64, np.float64, np.float64,
+                               np.float64)
+
+    @staticmethod
+    def from_name(name: str) -> "PrecisionPolicy":
+        """Stock policies by hierarchy-dtype shorthand.
+
+        "f64"   all double.
+        "f32"   fp32-resident hierarchy + smoother, fp64 outer Krylov,
+                fp32 accumulators (Demidov's mixed-precision SA-AMG).
+        "bf16"  bf16-resident hierarchy + smoother, fp64 outer Krylov,
+                fp32 accumulators (kernel-level support; the dense coarse
+                factorization still runs in fp32 — see ``factor_dtype``).
+        """
+        if not isinstance(name, str):
+            raise ValueError(f"precision must be a name or policy: {name!r}")
+        key = name.strip().lower()
+        if key in ("f64", "fp64", "float64", "double"):
+            return PrecisionPolicy.double()
+        if key in ("f32", "fp32", "float32", "single"):
+            return PrecisionPolicy(np.float32, np.float32, np.float64,
+                                   np.float32)
+        if key in ("bf16", "bfloat16"):
+            bf = _bf16()
+            return PrecisionPolicy(bf, bf, np.float64, np.float32)
+        raise ValueError(
+            f"invalid precision {name!r}: expected one of {_NAMES} "
+            f"(from REPRO_PRECISION or the precision= knob)")
+
+    # ---- derived properties --------------------------------------------
+    @property
+    def mixed(self) -> bool:
+        """True when the hierarchy is stored below the Krylov dtype (the
+        solve then keeps a krylov-dtype copy of the finest operator for
+        the outer iteration — ``Hierarchy.a_fine_ell``)."""
+        return self.hierarchy_dtype != self.krylov_dtype
+
+    @property
+    def factor_dtype(self) -> np.dtype:
+        """Dtype for dense factorizations (diag inverses, coarse Cholesky):
+        LAPACK only speaks f32/f64, so sub-f32 hierarchies factor in the
+        accumulator dtype and store the result at ``hierarchy_dtype``."""
+        if self.hierarchy_dtype in (np.dtype(np.float32),
+                                    np.dtype(np.float64)):
+            return self.hierarchy_dtype
+        return self.accum_dtype
+
+    @property
+    def kernel_accum_dtype(self):
+        """``accum_dtype=`` knob for the blocked kernels: ``None`` (native
+        accumulation) unless the hierarchy runs below the accumulator."""
+        if self.hierarchy_dtype.itemsize < self.accum_dtype.itemsize:
+            return self.accum_dtype
+        return None
+
+    def coarse_jitter_scale(self) -> float:
+        """Relative diagonal jitter for the coarse Cholesky.  fp64 keeps the
+        legacy 1e-12 (bitwise compatibility); reduced-precision chains carry
+        O(eps) rounding into the coarse operator, so the guard scales with
+        the hierarchy's eps."""
+        if self.hierarchy_dtype == np.dtype(np.float64):
+            return 1e-12
+        return 100.0 * float(np.finfo(self.factor_dtype).eps)
+
+    def describe(self) -> str:
+        return (f"hierarchy={self.hierarchy_dtype.name} "
+                f"smoother={self.smoother_dtype.name} "
+                f"krylov={self.krylov_dtype.name} "
+                f"accum={self.accum_dtype.name}")
+
+
+DOUBLE = PrecisionPolicy.double()

@@ -91,21 +91,35 @@ def recompute_scalar(setupd: GAMGSetup, a_fine_data: Array) -> Hierarchy:
     structure: the baseline differs in the *solve-phase format*); the
     benchmark harness separately times scalar-format PtAP via expanded
     SpGEMM plans (``benchmarks/table1_weak_scaling.py``).
+
+    Honors ``setupd.precision`` exactly like the blocked ``gamg.recompute``
+    (hierarchy payloads at ``hierarchy_dtype``, shared dinv/lam data), so
+    the format-parity claim can be exercised per policy.
     """
+    from repro.core.gamg import coarse_cholesky
+    policy = setupd.precision
+    h = jnp.dtype(policy.hierarchy_dtype)
     states = []
-    a_data = a_fine_data
+    a_data = jnp.asarray(a_fine_data).astype(h)
     for ls in setupd.levels:
-        blocked = _level_state(ls, a_data)     # reuse dinv + lam (identical)
+        blocked = _level_state(ls, a_data, policy)   # reuse dinv + lam
         A = ls.A0.with_data(a_data)
         a_ell = expand_bcsr(A).to_ell()
-        p_ell = expand_bcsr(ls.P).to_ell()
-        r_ell = expand_bcsr(ls.R).to_ell()
+        p_ell = expand_bcsr(ls.P).to_ell().astype(h)
+        r_ell = expand_bcsr(ls.R).to_ell().astype(h)
         states.append(LevelState(a_ell=a_ell, p_ell=p_ell, r_ell=r_ell,
                                  dinv=blocked.dinv, lam_max=blocked.lam_max))
-        a_data = ptap_numeric_data(ls.ptap_cache, a_data, ls.P.data)
+        a_data = ptap_numeric_data(ls.ptap_cache, a_data,
+                                   ls.P.data.astype(h),
+                                   accum_dtype=policy.kernel_accum_dtype)
     Ac = setupd.coarse_struct.with_data(a_data)
-    dense = Ac.to_dense()
-    n = dense.shape[0]
-    jitter = 1e-12 * jnp.trace(dense) / n
-    chol = jnp.linalg.cholesky(dense + jitter * jnp.eye(n, dtype=dense.dtype))
-    return Hierarchy(levels=tuple(states), coarse_chol=chol)
+    chol = coarse_cholesky(Ac.to_dense(), policy)
+    a_fine_ell = None
+    if policy.mixed and setupd.levels:
+        # krylov-dtype copy of the (expanded) finest operator, mirroring
+        # the blocked path — the fp64 outer CG must never apply the
+        # reduced-precision operator or its residual monitor lies
+        a_fine_ell = expand_bcsr(setupd.levels[0].A0.with_data(
+            jnp.asarray(a_fine_data).astype(policy.krylov_dtype))).to_ell()
+    return Hierarchy(levels=tuple(states), coarse_chol=chol,
+                     a_fine_ell=a_fine_ell)

@@ -259,7 +259,8 @@ def spgemm_numeric_data(plan: SpGEMMPlan, a_data: Array, b_data: Array, *,
                         path: str | None = None,
                         use_kernel: bool | None = None,
                         interpret: bool | None = None,
-                        tile_slots: int | None = None) -> Array:
+                        tile_slots: int | None = None,
+                        accum_dtype=None) -> Array:
     """Device numeric phase -> C.data.  Pure function of the plan + values.
 
     ``path`` selects the execution strategy ("fused" | "pairs" |
@@ -268,6 +269,8 @@ def spgemm_numeric_data(plan: SpGEMMPlan, a_data: Array, b_data: Array, *,
     via Triton yet; see ``repro.kernels.backend``).  The
     legacy knob maps ``use_kernel=True`` to ``path="pairs"`` and an
     explicit ``use_kernel=False`` to ``path="reference"``.
+    ``accum_dtype`` is the contraction/reduction accumulator on every path
+    (None = native in ``a_data.dtype``; output always at ``a_data.dtype``).
     """
     from repro.kernels import backend as _backend
     if path is None and use_kernel is not None:
@@ -276,25 +279,36 @@ def spgemm_numeric_data(plan: SpGEMMPlan, a_data: Array, b_data: Array, *,
     interpret = _backend.resolve_interpret(interpret)
     if path == "fused":
         return _fused_numeric(plan, a_data, b_data, interpret=interpret,
-                              tile_slots=tile_slots)
+                              tile_slots=tile_slots,
+                              accum_dtype=accum_dtype)
     pa = jnp.asarray(plan.pair_a)
     pb = jnp.asarray(plan.pair_b)
     seg = jnp.asarray(plan.out_idx)
     lhs = a_data[pa]                     # (npairs, br, bk)
     rhs = b_data[pb]                     # (npairs, bk, bc)
     if path == "pairs":
+        # cast the operands up *before* the kernel chain so the pair
+        # products stay at the accumulator between block_pair_gemm and
+        # block_seg_sum (rounding each product back to the payload dtype
+        # in between would violate the round-once accumulator rule)
+        acc = (jnp.dtype(accum_dtype) if accum_dtype is not None
+               else a_data.dtype)
         from repro.kernels.block_pair_gemm import ops as _kg
-        prod = _kg.block_pair_gemm(lhs, rhs, interpret=interpret)
+        prod = _kg.block_pair_gemm(lhs.astype(acc), rhs.astype(acc),
+                                   interpret=interpret)
         from repro.kernels.block_seg_sum import ops as _ks
-        return _ks.block_seg_sum(prod, seg, plan.nnzb, interpret=interpret)
-    prod = jnp.einsum("pij,pjk->pik", lhs, rhs,
-                      preferred_element_type=a_data.dtype)
+        out = _ks.block_seg_sum(prod, seg, plan.nnzb, interpret=interpret)
+        return out.astype(a_data.dtype)
+    acc = jnp.dtype(accum_dtype) if accum_dtype is not None else a_data.dtype
+    prod = jnp.einsum("pij,pjk->pik", lhs.astype(acc), rhs.astype(acc),
+                      preferred_element_type=acc)
     return jax.ops.segment_sum(prod, seg, num_segments=plan.nnzb,
-                               indices_are_sorted=True)
+                               indices_are_sorted=True).astype(a_data.dtype)
 
 
 def _fused_numeric(plan: SpGEMMPlan, a_data: Array, b_data: Array, *,
-                   interpret: bool, tile_slots: int | None = None) -> Array:
+                   interpret: bool, tile_slots: int | None = None,
+                   accum_dtype=None) -> Array:
     """One-pass numeric phase over the tiled plan layout.
 
     Gathers the A/B blocks into the fixed-width ELL-of-pairs operand stream
@@ -309,14 +323,16 @@ def _fused_numeric(plan: SpGEMMPlan, a_data: Array, b_data: Array, *,
     lhs = jnp.where(mask[..., None, None], a_data[ta], 0)
     rhs = b_data[tb]                     # (tile_rows, kmax, bk, bc)
     out = _kf.fused_pair_gemm(lhs, rhs, interpret=interpret,
-                              tile_slots=tile_slots)
+                              tile_slots=tile_slots,
+                              accum_dtype=accum_dtype)
     if plan.tile_identity:
         return out
     # histogram-forced row splits: combine the O(nnzb)-sized row partials
-    # (never the O(npairs) pair products)
-    return jax.ops.segment_sum(out, jnp.asarray(plan.tile_seg),
+    # (never the O(npairs) pair products), at the accumulator dtype
+    acc = jnp.dtype(accum_dtype) if accum_dtype is not None else out.dtype
+    return jax.ops.segment_sum(out.astype(acc), jnp.asarray(plan.tile_seg),
                                num_segments=plan.nnzb,
-                               indices_are_sorted=True)
+                               indices_are_sorted=True).astype(out.dtype)
 
 
 def spgemm_numeric(plan: SpGEMMPlan, A: BlockCSR, B: BlockCSR, **kw

@@ -85,37 +85,42 @@ def spmv_bcsr_ref(A: BlockCSR, x: Array) -> Array:
 
 
 def spmv(A, x: Array, *, use_kernel: bool | None = None,
-         interpret: bool | None = None) -> Array:
+         interpret: bool | None = None, accum_dtype=None) -> Array:
     """Front door: accepts BlockCSR (converts) or BlockELL.
 
     ``use_kernel=None`` / ``interpret=None`` resolve per backend: the Pallas
     kernel compiled natively on TPU, the jnp reference elsewhere (see
-    ``repro.kernels.backend``).
+    ``repro.kernels.backend``).  ``accum_dtype`` threads the kernel
+    accumulator rule (None = native; the jnp reference path accumulates
+    natively and low-precision callers should use the kernel path).
     """
     from repro.kernels import backend as _backend
     ell = A.to_ell() if isinstance(A, BlockCSR) else A
     if _backend.resolve_use_kernel(use_kernel):
         from repro.kernels.block_spmv import ops as _k
         return _k.block_spmv(ell, x,
-                             interpret=_backend.resolve_interpret(interpret))
+                             interpret=_backend.resolve_interpret(interpret),
+                             accum_dtype=accum_dtype)
     return spmv_ell(ell, x)
 
 
 def spmm(A, X: Array, *, path: str | None = None,
-         interpret: bool | None = None) -> Array:
+         interpret: bool | None = None, accum_dtype=None) -> Array:
     """Multi-RHS front door: Y = A @ X, X: (n, k), A BlockCSR or BlockELL.
 
     ``path=None`` resolves per backend (``repro.kernels.backend
     .resolve_spmm_path``): the Pallas panel kernel where it compiles
     natively (TPU), the jnp reference elsewhere; ``REPRO_SPMM_PATH``
-    forces it globally.
+    forces it globally.  ``accum_dtype`` threads the kernel accumulator
+    (None = native).
     """
     from repro.kernels import backend as _backend
     ell = A.to_ell() if isinstance(A, BlockCSR) else A
     if _backend.resolve_spmm_path(path) == "kernel":
         from repro.kernels.block_spmm import ops as _k
         return _k.block_spmm(ell, X,
-                             interpret=_backend.resolve_interpret(interpret))
+                             interpret=_backend.resolve_interpret(interpret),
+                             accum_dtype=accum_dtype)
     return spmm_ell(ell, X)
 
 

@@ -11,7 +11,7 @@ invariant.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,15 +45,34 @@ class LevelState:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class Hierarchy:
+    """Device-resident numeric hierarchy, stored at the policy's
+    ``hierarchy_dtype``.
+
+    ``a_fine_ell`` is only populated by mixed-precision policies
+    (``PrecisionPolicy.mixed``): a krylov-dtype copy of the finest
+    operator for the *outer* Krylov iteration, so the residual monitor
+    never sees the reduced-precision rounding of ``levels[0].a_ell``
+    (which the smoother keeps using).  ``fine_operator`` picks the right
+    one.
+    """
+
     levels: Tuple[LevelState, ...]
     coarse_chol: Array    # lower Cholesky factor of the coarsest operator
+    a_fine_ell: Optional[BlockELL] = None   # krylov-dtype finest operator
 
     def tree_flatten(self):
-        return (self.levels, self.coarse_chol), None
+        return (self.levels, self.coarse_chol, self.a_fine_ell), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children)
+
+
+def fine_operator(hier: Hierarchy) -> BlockELL:
+    """The finest-level operator the Krylov loop should apply: the
+    krylov-dtype copy under a mixed policy, else level 0's operator."""
+    return hier.a_fine_ell if hier.a_fine_ell is not None \
+        else hier.levels[0].a_ell
 
 
 def pbjacobi_apply(dinv: Array, r: Array) -> Array:
@@ -166,4 +185,4 @@ def vcycle(hier: Hierarchy, b: Array, smoother: str = "chebyshev",
 
 def vcycle_apply_op(hier: Hierarchy, x: Array) -> Array:
     """Finest-level operator application (for the Krylov wrapper)."""
-    return apply_ell(hier.levels[0].a_ell, x)
+    return apply_ell(fine_operator(hier), x)

@@ -198,15 +198,22 @@ def build_dist_ell(A: BlockCSR, row_part: RowPartition,
                    data=data, rpad=rpad, kmax=kmax, br=A.br, bc=A.bc)
 
 
-def dist_ell_apply(indices: Array, data: Array, x_win: Array) -> Array:
+def dist_ell_apply(indices: Array, data: Array, x_win: Array,
+                   accum_dtype=None) -> Array:
     """Device per-rank SpMV/SpMM: (rpad, kmax, br, bc) x window -> (rpad, br).
 
     ``x_win`` may carry a trailing panel axis ``(win, bc, k)`` (multi-RHS
     slabs); the ellipsis broadcasts it, mirroring ``core.spmv.spmm_ell``.
+    ``accum_dtype`` is the contraction accumulator for reduced-precision
+    slabs (None = native in ``data.dtype``; output always at
+    ``data.dtype``).  Note the *halo exchange itself* is dtype-agnostic:
+    ``halo_window`` moves whatever width the slab carries, so a
+    reduced-precision hierarchy halves the ppermute payload for free.
     """
     g = x_win[indices]                       # (rpad, kmax, bc[, k])
-    return jnp.einsum("rkab,rkb...->ra...", data, g,
-                      preferred_element_type=data.dtype)
+    acc = jnp.dtype(accum_dtype) if accum_dtype is not None else data.dtype
+    return jnp.einsum("rkab,rkb...->ra...", data.astype(acc), g.astype(acc),
+                      preferred_element_type=acc).astype(data.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -314,17 +321,20 @@ def build_stage2(ac_plan: SpGEMMPlan, coarse_part: RowPartition,
                          out_pad=out_pad, ppad=ppad)
 
 
-def dist_stage_apply(lhs: Array, rhs: Array, seg: Array, out_pad: int
-                     ) -> Array:
+def dist_stage_apply(lhs: Array, rhs: Array, seg: Array, out_pad: int,
+                     accum_dtype=None) -> Array:
     """Device per-rank numeric stage: pair products + sorted segment-sum.
 
     Padded pairs carry a zero operand on one side, so they add exactly 0.0
-    into the (guaranteed-zero) last output slot.
+    into the (guaranteed-zero) last output slot.  ``accum_dtype`` is the
+    contract/reduce accumulator for reduced-precision payload slabs (None
+    = native; output at ``lhs.dtype``).
     """
-    prod = jnp.einsum("pij,pjk->pik", lhs, rhs,
-                      preferred_element_type=lhs.dtype)
+    acc = jnp.dtype(accum_dtype) if accum_dtype is not None else lhs.dtype
+    prod = jnp.einsum("pij,pjk->pik", lhs.astype(acc), rhs.astype(acc),
+                      preferred_element_type=acc)
     return jax.ops.segment_sum(prod, seg, num_segments=out_pad,
-                               indices_are_sorted=True)
+                               indices_are_sorted=True).astype(lhs.dtype)
 
 
 def build_diag_sel(indptr: np.ndarray, indices: np.ndarray,

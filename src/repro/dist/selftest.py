@@ -19,7 +19,14 @@ Checks, on an m^3 Q1 elasticity problem:
   * with ``REPRO_SELFTEST_MRHS=1``: a k-column panel through the *same*
     shard_map program (scattered ``(n, k)`` payload -> masked multi-RHS
     PCG) matches the single-device batched solve per column — same
-    iteration counts, allclose solutions.
+    iteration counts, allclose solutions;
+  * with ``REPRO_PRECISION`` set to a reduced policy (e.g. ``f32``): a
+    distributed solve on the reduced-precision-resident hierarchy (fp64
+    outer CG, boundary casts) still converges to rtol with at most a
+    small iteration-count growth over the fp64 reference and an allclose
+    solution.  The *parity* sections above always pin ``precision="f64"``
+    — exact iteration parity is an fp64 contract, and the env override
+    must not silently weaken it.
 
 Prints ``OK`` on success (asserts otherwise).
 """
@@ -45,14 +52,14 @@ def main(m: int) -> int:
 
     assert len(jax.devices()) == ndev, (jax.devices(), ndev)
     prob = assemble_elasticity(m)
-    setupd = gamg.setup(prob.A, prob.B, coarse_size=30)
+    setupd = gamg.setup(prob.A, prob.B, coarse_size=30, precision="f64")
     assert setupd.levels, \
         (f"m={m} gives only {prob.A.nbr} block rows (< coarse_size=30): "
          f"no AMG levels to distribute — use m >= 4")
 
     # single-device reference
     solver = gamg.GAMGSolver(prob.A, prob.B, coarse_size=30, rtol=1e-8,
-                             maxiter=200)
+                             maxiter=200, precision="f64")
     ref0 = solver.solve(prob.b)
 
     # distributed: cold staging + hot solve
@@ -124,6 +131,28 @@ def main(m: int) -> int:
                                    atol=1e-9)
         print(f"mrhs (k={B3.shape[1]}) parity: "
               f"iters={np.asarray(itm[0]).tolist()}")
+
+    prec = os.environ.get("REPRO_PRECISION")
+    if prec and prec not in ("f64", "fp64", "float64", "double"):
+        # reduced-precision-resident distributed hierarchy: fp64 outer CG,
+        # boundary casts.  Convergence + bounded iteration growth + close
+        # solution vs the fp64 reference (exact parity is an fp64 claim).
+        setup_p = gamg.setup(prob.A, prob.B, coarse_size=30, precision=prec)
+        dg_p = build_dist_gamg(setup_p, ndev)
+        run_p = make_dist_solver(dg_p, setup_p, mesh, rtol=1e-8, maxiter=200)
+        xp, itp, rrp, okp = jax.block_until_ready(
+            run_p(dg_p.sharded_args(setup_p),
+                  dg_p.scatter_fine_payloads(prob.A.data), b))
+        assert bool(okp[0]), (itp, rrp)
+        bound = int(np.ceil(1.3 * int(ref0.iters))) + 1
+        assert int(itp[0]) <= bound, \
+            f"{prec} dist iters {int(itp[0])} > {bound} (f64: {ref0.iters})"
+        np.testing.assert_allclose(dg_p.gather_vector(xp),
+                                   np.asarray(ref0.x), rtol=1e-5, atol=1e-7)
+        h_dt = setup_p.precision.hierarchy_dtype
+        assert dg_p.levels[0].p_op.data.dtype == h_dt
+        print(f"reduced precision ({prec}): iters={int(itp[0])} "
+              f"(f64 ref {int(ref0.iters)}) relres={float(rrp[0]):.3e}")
 
     print("OK")
     return 0

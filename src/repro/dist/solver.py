@@ -34,6 +34,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec
 
 from repro.core.gamg import GAMGSetup
+from repro.core.krylov import wrap_precond
+from repro.core.precision import PrecisionPolicy
 from repro.core.vcycle import chebyshev_recurrence, pbjacobi_recurrence
 from repro.dist.pamg import (
     AXIS,
@@ -94,7 +96,14 @@ class DistCoarse:
 
 @dataclasses.dataclass
 class DistGAMG:
-    """Cold distributed staging — valid while the setup's structures hold."""
+    """Cold distributed staging — valid while the setup's structures hold.
+
+    ``precision`` mirrors the setup's ``PrecisionPolicy``: the staged
+    constant payloads (P/R blocks, the cached P_oth operand) are baked at
+    ``hierarchy_dtype``, the rank-local recompute/V-cycle runs at that
+    dtype (halving the halo/ppermute payload for f32), and the outer
+    distributed PCG stays at ``krylov_dtype`` with the boundary cast.
+    """
 
     ndev: int
     parts: List[RowPartition]     # per level, + the coarsest
@@ -102,6 +111,8 @@ class DistGAMG:
     coarse: DistCoarse
     smoother: str
     degree: int
+    precision: PrecisionPolicy = dataclasses.field(
+        default_factory=PrecisionPolicy.double)
 
     # ---- args bundle (the sharded operands of the hot program) ----------
     def sharded_args(self, setupd: Optional[GAMGSetup] = None):
@@ -161,8 +172,14 @@ class DistGAMG:
 
 
 def build_dist_gamg(setupd: GAMGSetup, ndev: int) -> DistGAMG:
-    """Cold distributed staging of a single-device GAMG setup."""
+    """Cold distributed staging of a single-device GAMG setup.
+
+    Constant payloads (P, R, the cached P_oth) are staged at the policy's
+    ``hierarchy_dtype`` — the distributed rendering of "the hierarchy is
+    stored at hierarchy_dtype".
+    """
     assert setupd.levels, "distributed path needs at least one AMG level"
+    h_np = setupd.precision.hierarchy_dtype
     parts = [partition_rows(ls.n_fine, ndev) for ls in setupd.levels]
     parts.append(partition_rows(setupd.coarse_struct.nbr, ndev))
     levels: List[DistLevel] = []
@@ -171,7 +188,7 @@ def build_dist_gamg(setupd: GAMGSetup, ndev: int) -> DistGAMG:
         A0 = ls.A0
         a_nnz_starts = A0.indptr[fine.starts]
         a_pad = int(np.diff(a_nnz_starts).max()) + 1
-        p_np = np.asarray(ls.P.data)
+        p_np = np.asarray(ls.P.data).astype(h_np)
         cache = ls.ptap_cache
         s1 = build_stage1(cache.ap_plan, fine, A0.indptr, p_np)
         s2 = build_stage2(cache.ac_plan, coarse, fine, cache.ap_plan.indptr,
@@ -185,7 +202,8 @@ def build_dist_gamg(setupd: GAMGSetup, ndev: int) -> DistGAMG:
             a_op=build_dist_ell(A0, fine, fine, payload_pad=a_pad),
             p_op=build_dist_ell(ls.P, fine, coarse, const_data=p_np),
             r_op=build_dist_ell(ls.R, coarse, fine,
-                                const_data=np.asarray(ls.R.data)),
+                                const_data=np.asarray(
+                                    ls.R.data).astype(h_np)),
             stage1=s1, stage2=s2, diag_sel=diag_sel, diag_mask=diag_mask,
             row_mask=row_mask, a_nnz_starts=a_nnz_starts, a_pad=a_pad,
             bs=A0.br, rpad=rpad, n_fine=ls.n_fine))
@@ -206,7 +224,8 @@ def build_dist_gamg(setupd: GAMGSetup, ndev: int) -> DistGAMG:
         row_sel=row_owner * c_rpad + c_part.local_of(all_rows),
         nbr=Ac.nbr, bs=Ac.br, rpad=c_rpad, ac_pad=ac_pad)
     return DistGAMG(ndev=ndev, parts=parts, levels=levels, coarse=coarse,
-                    smoother=setupd.smoother, degree=setupd.degree)
+                    smoother=setupd.smoother, degree=setupd.degree,
+                    precision=setupd.precision)
 
 
 # ---------------------------------------------------------------------------
@@ -231,12 +250,14 @@ def _pnorm_cols(a: Array) -> Array:
 
 
 def _rank_lambda_max(lv: DistLevel, a_idx: Array, dinva_data: Array,
-                     row_mask: Array, iters: int = 10) -> Array:
+                     row_mask: Array, iters: int = 10,
+                     accum=None) -> Array:
     """Distributed power iteration — mirrors ``lambda_max_dinv_a``."""
     halo = lv.a_op.halo
 
     def spmv(x):
-        return dist_ell_apply(a_idx, dinva_data, halo_window(x, halo))
+        return dist_ell_apply(a_idx, dinva_data, halo_window(x, halo),
+                              accum_dtype=accum)
 
     x0 = row_mask[:, None] * jnp.ones((lv.rpad, lv.bs), dinva_data.dtype)
     x0 = x0 / _pnorm(x0)
@@ -250,42 +271,64 @@ def _rank_lambda_max(lv: DistLevel, a_idx: Array, dinva_data: Array,
 
 
 def _rank_recompute(dg: DistGAMG, args, a_slab: Array):
-    """Distributed hot hierarchy rebuild: chained PtAP + smoother data."""
+    """Distributed hot hierarchy rebuild: chained PtAP + smoother data.
+
+    The payload chain runs at the policy's hierarchy dtype (the incoming
+    fine slab is cast once at the top); under a mixed policy level 0
+    additionally keeps a krylov-dtype payload gather (``a_data_kr``) for
+    the outer CG's operator, mirroring ``Hierarchy.a_fine_ell``.
+    """
+    policy = dg.precision
+    h = jnp.dtype(policy.hierarchy_dtype)
+    acc = policy.kernel_accum_dtype
+    acc_p = jnp.promote_types(h, jnp.dtype(policy.accum_dtype))
     states = []
+    a_cur = a_slab.astype(h)
     for li, lv in enumerate(dg.levels):
         a = args["levels"][li]
-        a_ell_data = a_slab[a["a_gather"]]
-        eye = jnp.eye(lv.bs, dtype=a_slab.dtype)
-        diag = jnp.where(a["diag_mask"][:, None, None], a_slab[a["diag_sel"]],
+        a_ell_data = a_cur[a["a_gather"]]
+        eye = jnp.eye(lv.bs, dtype=h)
+        diag = jnp.where(a["diag_mask"][:, None, None], a_cur[a["diag_sel"]],
                          eye)
-        dinv = jnp.linalg.inv(diag)
-        dinva = jnp.einsum("rab,rkbc->rkac", dinv, a_ell_data,
-                           preferred_element_type=a_slab.dtype)
-        lam = _rank_lambda_max(lv, a["a_idx"], dinva, a["row_mask"])
-        states.append(dict(a_data=a_ell_data, dinv=dinv, lam=lam))
+        dinv = jnp.linalg.inv(
+            diag.astype(policy.factor_dtype)).astype(h)
+        dinva = jnp.einsum("rab,rkbc->rkac", dinv.astype(acc_p),
+                           a_ell_data.astype(acc_p),
+                           preferred_element_type=acc_p).astype(h)
+        lam = _rank_lambda_max(lv, a["a_idx"], dinva, a["row_mask"],
+                               accum=acc)
+        st = dict(a_data=a_ell_data, dinv=dinv, lam=lam)
+        if li == 0 and policy.mixed:
+            st["a_data_kr"] = a_slab.astype(
+                policy.krylov_dtype)[a["a_gather"]]
+        states.append(st)
         # next-level payload: local A@P (cached P_oth), then the
         # off-process reduction window for R@(AP)
-        ap = dist_stage_apply(a_slab[a["s1_lhs"]], a["s1_rhs"], a["s1_seg"],
-                              lv.stage1.out_pad)
+        ap = dist_stage_apply(a_cur[a["s1_lhs"]], a["s1_rhs"], a["s1_seg"],
+                              lv.stage1.out_pad, accum_dtype=acc)
         ap_win = halo_window(ap, lv.stage2.halo)
-        a_slab = dist_stage_apply(a["s2_lhs"], ap_win[a["s2_rhs"]],
-                                  a["s2_seg"], lv.stage2.out_pad)
-    chol = _rank_coarse_chol(dg, a_slab)
+        a_cur = dist_stage_apply(a["s2_lhs"], ap_win[a["s2_rhs"]],
+                                 a["s2_seg"], lv.stage2.out_pad,
+                                 accum_dtype=acc)
+    chol = _rank_coarse_chol(dg, a_cur)
     return states, chol
 
 
 def _rank_coarse_chol(dg: DistGAMG, ac_slab: Array) -> Array:
     """Replicated dense Cholesky of the (tiny) coarsest operator."""
     c = dg.coarse
+    policy = dg.precision
     g = lax.all_gather(ac_slab, AXIS, axis=0, tiled=True)
     blocks = g[jnp.asarray(c.sel)]
     dense4 = jnp.zeros((c.nbr, c.nbr, c.bs, c.bs), ac_slab.dtype)
     dense4 = dense4.at[jnp.asarray(c.rows), jnp.asarray(c.cols)].add(blocks)
     n = c.nbr * c.bs
     dense = dense4.transpose(0, 2, 1, 3).reshape(n, n)
-    jitter = 1e-12 * jnp.trace(dense) / n
-    return jnp.linalg.cholesky(dense + jitter * jnp.eye(n,
-                                                        dtype=dense.dtype))
+    fd = jnp.dtype(policy.factor_dtype)
+    densef = dense.astype(fd)
+    jitter = policy.coarse_jitter_scale() * jnp.trace(densef) / n
+    chol = jnp.linalg.cholesky(densef + jitter * jnp.eye(n, dtype=fd))
+    return chol.astype(policy.hierarchy_dtype)
 
 
 def _rank_coarse_solve(dg: DistGAMG, chol: Array, rhs: Array) -> Array:
@@ -311,17 +354,23 @@ def _rank_coarse_solve(dg: DistGAMG, chol: Array, rhs: Array) -> Array:
     return mine * mask.reshape((c.rpad,) + (1,) * (mine.ndim - 1))
 
 
-def _rank_spmv(op: DistEll, idx: Array, data: Array, x: Array) -> Array:
-    return dist_ell_apply(idx, data, halo_window(x, op.halo))
+def _rank_spmv(op: DistEll, idx: Array, data: Array, x: Array,
+               accum=None) -> Array:
+    return dist_ell_apply(idx, data, halo_window(x, op.halo),
+                          accum_dtype=accum)
 
 
 def _rank_smooth(dg: DistGAMG, spmv, st, b: Array, x: Array) -> Array:
     """Same recurrences as the single-device V-cycle (single source of
     truth in ``repro.core.vcycle``) with per-rank spmv/pbjacobi closures —
     iteration parity with the single-device path depends on this."""
+    acc = jnp.promote_types(st["dinv"].dtype,
+                            jnp.dtype(dg.precision.accum_dtype))
+
     def pbj(r):
-        return jnp.einsum("nab,nb...->na...", st["dinv"], r,
-                          preferred_element_type=st["dinv"].dtype)
+        return jnp.einsum("nab,nb...->na...", st["dinv"].astype(acc),
+                          r.astype(acc),
+                          preferred_element_type=acc).astype(r.dtype)
 
     if dg.smoother == "chebyshev":
         return chebyshev_recurrence(spmv, pbj, st["lam"], b, x, dg.degree)
@@ -329,7 +378,13 @@ def _rank_smooth(dg: DistGAMG, spmv, st, b: Array, x: Array) -> Array:
 
 
 def _rank_vcycle(dg: DistGAMG, args, states, chol: Array, b: Array) -> Array:
-    """One V-cycle over the rank-sharded hierarchy (zero initial guess)."""
+    """One V-cycle over the rank-sharded hierarchy (zero initial guess).
+
+    Every operator apply threads the policy's kernel accumulator so
+    sub-fp32 hierarchies contract at ``accum_dtype`` (None — native — for
+    the stock f64/f32 policies).
+    """
+    acc = dg.precision.kernel_accum_dtype
     bs_stack, x_stack = [], []
     rhs = b
     for li, lv in enumerate(dg.levels):
@@ -337,13 +392,14 @@ def _rank_vcycle(dg: DistGAMG, args, states, chol: Array, b: Array) -> Array:
         st = states[li]
 
         def spmv_a(v, a=a, st=st, lv=lv):
-            return _rank_spmv(lv.a_op, a["a_idx"], st["a_data"], v)
+            return _rank_spmv(lv.a_op, a["a_idx"], st["a_data"], v,
+                              accum=acc)
 
         x = _rank_smooth(dg, spmv_a, st, rhs, jnp.zeros_like(rhs))
         r = rhs - spmv_a(x)
         bs_stack.append(rhs)
         x_stack.append(x)
-        rhs = _rank_spmv(lv.r_op, a["r_idx"], a["r_data"], r)
+        rhs = _rank_spmv(lv.r_op, a["r_idx"], a["r_data"], r, accum=acc)
     xc = _rank_coarse_solve(dg, chol, rhs)
     for li in reversed(range(len(dg.levels))):
         a = args["levels"][li]
@@ -351,24 +407,33 @@ def _rank_vcycle(dg: DistGAMG, args, states, chol: Array, b: Array) -> Array:
         lv = dg.levels[li]
 
         def spmv_a(v, a=a, st=st, lv=lv):
-            return _rank_spmv(lv.a_op, a["a_idx"], st["a_data"], v)
+            return _rank_spmv(lv.a_op, a["a_idx"], st["a_data"], v,
+                              accum=acc)
 
-        x = x_stack[li] + _rank_spmv(lv.p_op, a["p_idx"], a["p_data"], xc)
+        x = x_stack[li] + _rank_spmv(lv.p_op, a["p_idx"], a["p_data"], xc,
+                                     accum=acc)
         xc = _rank_smooth(dg, spmv_a, st, bs_stack[li], x)
     return xc
 
 
 def _rank_pcg(dg: DistGAMG, args, states, chol: Array, b: Array,
               rtol: float, maxiter: int):
-    """Distributed PCG — mirrors ``repro.core.krylov.pcg`` with psum dots."""
+    """Distributed PCG — mirrors ``repro.core.krylov.pcg`` with psum dots.
+
+    Under a mixed policy the operator uses level 0's krylov-dtype payload
+    copy and the V-cycle runs at the smoother dtype behind the same
+    boundary cast as ``pcg(precond_dtype=...)``.
+    """
     a0 = args["levels"][0]
     st0 = states[0]
+    a_data_kr = st0.get("a_data_kr", st0["a_data"])
 
     def apply_a(v):
-        return _rank_spmv(dg.levels[0].a_op, a0["a_idx"], st0["a_data"], v)
+        return _rank_spmv(dg.levels[0].a_op, a0["a_idx"], a_data_kr, v)
 
-    def apply_m(r):
-        return _rank_vcycle(dg, args, states, chol, r)
+    apply_m = wrap_precond(
+        lambda r: _rank_vcycle(dg, args, states, chol, r),
+        dg.precision.smoother_dtype, b.dtype)
 
     x = jnp.zeros_like(b)
     r = b - apply_a(x)
@@ -412,15 +477,17 @@ def _rank_block_pcg(dg: DistGAMG, args, states, chol: Array, b: Array,
     """
     a0 = args["levels"][0]
     st0 = states[0]
+    a_data_kr = st0.get("a_data_kr", st0["a_data"])
 
     def apply_a(v):
-        return _rank_spmv(dg.levels[0].a_op, a0["a_idx"], st0["a_data"], v)
+        return _rank_spmv(dg.levels[0].a_op, a0["a_idx"], a_data_kr, v)
 
     def apply_m(r):
         return _rank_vcycle(dg, args, states, chol, r)
 
     res = block_pcg(apply_a, apply_m, b, rtol=rtol, maxiter=maxiter,
-                    col_dot=_pdot_cols, col_norm=_pnorm_cols)
+                    col_dot=_pdot_cols, col_norm=_pnorm_cols,
+                    precond_dtype=dg.precision.smoother_dtype)
     return res.x, res.iters, res.relres, res.converged
 
 

@@ -20,6 +20,9 @@ interpreter.  This module centralizes the decision:
                            kernel on TPU, the jnp reference elsewhere;
                            forced globally with ``REPRO_SPMM_PATH``
                            ("kernel" | "reference").
+* ``resolve_precision``  — the solver-stack ``PrecisionPolicy``:
+                           ``None`` falls back to ``REPRO_PRECISION``
+                           ("f64" | "f32" | "bf16"), default full fp64.
 
 Every front door (``spmv``, ``spgemm_numeric_data``, ``set_values_coo``)
 accepts ``None`` for these knobs and resolves them here, so the same call
@@ -117,3 +120,22 @@ def resolve_spmm_path(path: str | None = None) -> str:
             f"invalid SpMM path {path!r}: expected 'kernel' or 'reference' "
             f"(from REPRO_SPMM_PATH or the path= knob)")
     return path
+
+
+def resolve_precision(precision=None):
+    """Default precision policy; honours the REPRO_PRECISION override.
+
+    ``precision`` may be a ``PrecisionPolicy``, a stock-policy name
+    ("f64" | "f32" | "bf16"), or ``None`` — which reads
+    ``REPRO_PRECISION`` (re-read per call, mirroring the path knobs) and
+    falls back to full fp64, the paper's setting and the bitwise legacy
+    behaviour.  Invalid names raise ``ValueError``.
+    """
+    from repro.core.precision import PrecisionPolicy
+    if isinstance(precision, PrecisionPolicy):
+        return precision
+    if precision is None:
+        precision = os.environ.get("REPRO_PRECISION")
+    if precision is None:
+        return PrecisionPolicy.double()
+    return PrecisionPolicy.from_name(precision)

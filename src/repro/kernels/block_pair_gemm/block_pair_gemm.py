@@ -29,24 +29,30 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _pair_gemm_kernel(lhs_ref, rhs_ref, o_ref):
-    lhs = lhs_ref[...]          # (TP, br, bk)
-    rhs = rhs_ref[...]          # (TP, bk, bc)
+def _pair_gemm_kernel(acc_dt, lhs_ref, rhs_ref, o_ref):
+    lhs = lhs_ref[...].astype(acc_dt)        # (TP, br, bk)
+    rhs = rhs_ref[...].astype(acc_dt)        # (TP, bk, bc)
     # unroll the tiny contraction dim: TP stays on lanes, no transposes
-    acc = jnp.zeros(o_ref.shape, o_ref.dtype)
+    acc = jnp.zeros(o_ref.shape, acc_dt)
     for k in range(lhs.shape[2]):
         acc = acc + lhs[:, :, k][:, :, None] * rhs[:, k, :][:, None, :]
-    o_ref[...] = acc
+    o_ref[...] = acc.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("tile_pairs", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("tile_pairs", "interpret", "accum_dtype"))
 def block_pair_gemm(lhs: jax.Array, rhs: jax.Array, *,
-                    tile_pairs: int = 128, interpret: bool = True
-                    ) -> jax.Array:
-    """(npairs, br, bk) @ (npairs, bk, bc) -> (npairs, br, bc)."""
+                    tile_pairs: int = 128, interpret: bool = True,
+                    accum_dtype=None) -> jax.Array:
+    """(npairs, br, bk) @ (npairs, bk, bc) -> (npairs, br, bc).
+
+    ``accum_dtype`` is the on-register contraction dtype (None = native in
+    ``lhs.dtype``, bitwise legacy); the output rounds back to ``lhs.dtype``.
+    """
     npairs, br, bk = lhs.shape
     _, bk2, bc = rhs.shape
     assert bk == bk2, (bk, bk2)
+    acc_dt = jnp.dtype(accum_dtype) if accum_dtype is not None else lhs.dtype
     tp = min(tile_pairs, max(npairs, 1))
     pad = (-npairs) % tp
     if pad:
@@ -54,7 +60,7 @@ def block_pair_gemm(lhs: jax.Array, rhs: jax.Array, *,
         rhs = jnp.pad(rhs, ((0, pad), (0, 0), (0, 0)))
     grid = ((npairs + pad) // tp,)
     out = pl.pallas_call(
-        _pair_gemm_kernel,
+        functools.partial(_pair_gemm_kernel, acc_dt),
         grid=grid,
         in_specs=[
             pl.BlockSpec((tp, br, bk), lambda i: (i, 0, 0)),

@@ -1,9 +1,13 @@
 """Pure-jnp oracle for the batched rectangular block GEMM kernel."""
+import functools
+
 import jax
 import jax.numpy as jnp
 
 
-@jax.jit
-def block_pair_gemm_ref(lhs: jax.Array, rhs: jax.Array) -> jax.Array:
-    return jnp.einsum("pij,pjk->pik", lhs, rhs,
-                      preferred_element_type=lhs.dtype)
+@functools.partial(jax.jit, static_argnames=("accum_dtype",))
+def block_pair_gemm_ref(lhs: jax.Array, rhs: jax.Array, *,
+                        accum_dtype=None) -> jax.Array:
+    acc = jnp.dtype(accum_dtype) if accum_dtype is not None else lhs.dtype
+    return jnp.einsum("pij,pjk->pik", lhs.astype(acc), rhs.astype(acc),
+                      preferred_element_type=acc).astype(lhs.dtype)

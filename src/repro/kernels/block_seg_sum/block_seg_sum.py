@@ -38,17 +38,27 @@ def _cumsum_kernel(x_ref, o_ref, carry_ref):
     def _init():
         carry_ref[...] = jnp.zeros_like(carry_ref)
 
-    x = x_ref[...]                               # (TN, br, bc)
+    x = x_ref[...].astype(o_ref.dtype)           # (TN, br, bc)
     csum = jnp.cumsum(x, axis=0) + carry_ref[...]
     o_ref[...] = csum
     carry_ref[...] = csum[-1:, :, :]
 
 
-@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("tile_n", "interpret", "accum_dtype"))
 def block_stream_cumsum(x: jax.Array, *, tile_n: int = 256,
-                        interpret: bool = True) -> jax.Array:
-    """Inclusive cumsum over axis 0 of a (n, br, bc) block stream."""
+                        interpret: bool = True,
+                        accum_dtype=None) -> jax.Array:
+    """Inclusive cumsum over axis 0 of a (n, br, bc) block stream.
+
+    The running prefix (output, VMEM carry) is held at ``accum_dtype``
+    (None = native in ``x.dtype``): the difference-of-prefix trick in the
+    wrapper cancels catastrophically below fp32, so low-precision streams
+    must accumulate wider.  The *returned cumsum* stays at the accumulator
+    dtype — the wrapper rounds only the final per-segment sums.
+    """
     n, br, bc = x.shape
+    acc_dt = jnp.dtype(accum_dtype) if accum_dtype is not None else x.dtype
     tn = min(tile_n, max(n, 1))
     pad = (-n) % tn
     if pad:
@@ -59,8 +69,8 @@ def block_stream_cumsum(x: jax.Array, *, tile_n: int = 256,
         grid=grid,
         in_specs=[pl.BlockSpec((tn, br, bc), lambda i: (i, 0, 0))],
         out_specs=pl.BlockSpec((tn, br, bc), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((n + pad, br, bc), x.dtype),
-        scratch_shapes=[pltpu.VMEM((1, br, bc), x.dtype)],
+        out_shape=jax.ShapeDtypeStruct((n + pad, br, bc), acc_dt),
+        scratch_shapes=[pltpu.VMEM((1, br, bc), acc_dt)],
         interpret=interpret,
     )(x)
     return out[:n]

@@ -2,10 +2,14 @@
 import functools
 
 import jax
+import jax.numpy as jnp
 
 
-@functools.partial(jax.jit, static_argnames=("num_segments",))
+@functools.partial(jax.jit, static_argnames=("num_segments", "accum_dtype"))
 def block_seg_sum_ref(vals: jax.Array, seg_ids: jax.Array,
-                      num_segments: int) -> jax.Array:
-    return jax.ops.segment_sum(vals, seg_ids, num_segments=num_segments,
-                               indices_are_sorted=True)
+                      num_segments: int, *, accum_dtype=None) -> jax.Array:
+    acc = jnp.dtype(accum_dtype) if accum_dtype is not None else vals.dtype
+    out = jax.ops.segment_sum(vals.astype(acc), seg_ids,
+                              num_segments=num_segments,
+                              indices_are_sorted=True)
+    return out.astype(vals.dtype)

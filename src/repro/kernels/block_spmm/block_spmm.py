@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _spmm_kernel(idx_ref, data_ref, x_ref, o_ref):
+def _spmm_kernel(acc_dt, idx_ref, data_ref, x_ref, o_ref):
     """One row-tile: gather x panels, contract against the data tile."""
     idx = idx_ref[...]                       # (TR, kmax) int32
     tr, kmax = idx.shape
@@ -40,23 +40,26 @@ def _spmm_kernel(idx_ref, data_ref, x_ref, o_ref):
         tr, kmax, x.shape[1], x.shape[2])
     # padded slots carry exactly-zero data blocks -> contribute 0
     o_ref[...] = jnp.einsum(
-        "rkab,rkbm->ram", data_ref[...], xg,
-        preferred_element_type=o_ref.dtype)
+        "rkab,rkbm->ram", data_ref[...].astype(acc_dt), xg.astype(acc_dt),
+        preferred_element_type=acc_dt).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("tile_rows", "interpret"))
+                   static_argnames=("tile_rows", "interpret", "accum_dtype"))
 def block_spmm_ell(indices: jax.Array, data: jax.Array, x_panels: jax.Array,
-                   *, tile_rows: int = 8, interpret: bool = True
-                   ) -> jax.Array:
+                   *, tile_rows: int = 8, interpret: bool = True,
+                   accum_dtype=None) -> jax.Array:
     """Y = A @ X with A in padded BlockELL form and X a column panel.
 
     indices:  (nbr, kmax) int32, padded slots point at block-col 0
     data:     (nbr, kmax, br, bc), padded slots are zero blocks
     x_panels: (nbc, bc, k)
-    returns   (nbr, br, k)
+    returns   (nbr, br, k) at ``data.dtype``; ``accum_dtype`` sets the
+    contraction accumulator (None = native — bitwise legacy; bf16 inputs
+    should accumulate in fp32)
     """
     nbr, kmax, br, bc = data.shape
+    acc_dt = jnp.dtype(accum_dtype) if accum_dtype is not None else data.dtype
     k = x_panels.shape[2]
     tr = min(tile_rows, nbr)
     pad = (-nbr) % tr
@@ -65,7 +68,7 @@ def block_spmm_ell(indices: jax.Array, data: jax.Array, x_panels: jax.Array,
         data = jnp.pad(data, ((0, pad), (0, 0), (0, 0), (0, 0)))
     grid = ((nbr + pad) // tr,)
     out = pl.pallas_call(
-        _spmm_kernel,
+        functools.partial(_spmm_kernel, acc_dt),
         grid=grid,
         in_specs=[
             pl.BlockSpec((tr, kmax), lambda i: (i, 0)),

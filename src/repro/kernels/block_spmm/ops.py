@@ -15,7 +15,8 @@ from repro.kernels.block_spmm.block_spmm import block_spmm_ell
 
 
 def block_spmm(ell: BlockELL, X: jax.Array, *, interpret: bool = True,
-               tile_rows: int = 8, pad_k_to: int = 8) -> jax.Array:
+               tile_rows: int = 8, pad_k_to: int = 8,
+               accum_dtype=None) -> jax.Array:
     """Y = A @ X, flat (n, k) panels in/out (matches core ``spmm_ell``)."""
     k = X.shape[1]
     kp = -(-k // pad_k_to) * pad_k_to if pad_k_to > 1 else k
@@ -23,5 +24,5 @@ def block_spmm(ell: BlockELL, X: jax.Array, *, interpret: bool = True,
     if kp != k:
         xb = jnp.pad(xb, ((0, 0), (0, 0), (0, kp - k)))
     y = block_spmm_ell(ell.indices, ell.data, xb, tile_rows=tile_rows,
-                       interpret=interpret)
+                       interpret=interpret, accum_dtype=accum_dtype)
     return y.reshape(ell.nbr * ell.br, kp)[:, :k]

@@ -1,13 +1,17 @@
 """Pure-jnp oracle for the blocked ELL SpMM (column-panel) kernel."""
+import functools
+
 import jax
 import jax.numpy as jnp
 
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("accum_dtype",))
 def block_spmm_ell_ref(indices: jax.Array, data: jax.Array,
-                       x_panels: jax.Array) -> jax.Array:
+                       x_panels: jax.Array, *, accum_dtype=None) -> jax.Array:
     """Same contract as the kernel: (nbr,kmax) x (nbr,kmax,br,bc) x
-    (nbc,bc,k) -> (nbr,br,k)."""
+    (nbc,bc,k) -> (nbr,br,k); ``accum_dtype`` mirrors the kernel's
+    accumulator rule (contract there, round back to ``data.dtype``)."""
+    acc = jnp.dtype(accum_dtype) if accum_dtype is not None else data.dtype
     xg = x_panels[indices]  # (nbr, kmax, bc, k)
-    return jnp.einsum("rkab,rkbm->ram", data, xg,
-                      preferred_element_type=data.dtype)
+    return jnp.einsum("rkab,rkbm->ram", data.astype(acc), xg.astype(acc),
+                      preferred_element_type=acc).astype(data.dtype)

@@ -12,6 +12,14 @@ kernel loads one int32 per block and reuses it across the whole ``br*bc``
 payload; the ELL padding adds only zero blocks (measured padding overhead is
 reported by the benchmarks).
 
+Dtype polymorphism: the kernel accepts any floating payload dtype (f64 /
+f32 / bf16).  ``accum_dtype`` selects the accumulator the contraction runs
+in — the operands are cast up on-register, contracted at that dtype, and the
+result is rounded back to the payload dtype on the way out (the value-HBM
+traffic stays at the storage width).  ``None`` accumulates natively in the
+payload dtype, which is bitwise the pre-policy behaviour; low-precision
+inputs (bf16) should pass ``accum_dtype=jnp.float32``.
+
 Layout / tiling
   grid        = (ceil(nbr / TR),)                sequential over row tiles
   data tile   = (TR, kmax, br, bc)  VMEM         streamed per grid step
@@ -37,7 +45,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _spmv_kernel(idx_ref, data_ref, x_ref, o_ref):
+def _spmv_kernel(acc_dt, idx_ref, data_ref, x_ref, o_ref):
     """One row-tile: gather x blocks, contract against the data tile."""
     idx = idx_ref[...]                       # (TR, kmax) int32
     tr, kmax = idx.shape
@@ -46,23 +54,25 @@ def _spmv_kernel(idx_ref, data_ref, x_ref, o_ref):
     xg = jnp.take(x, idx.reshape(-1), axis=0).reshape(tr, kmax, x.shape[1])
     # padded slots carry exactly-zero data blocks -> contribute 0
     o_ref[...] = jnp.einsum(
-        "rkab,rkb->ra", data_ref[...], xg,
-        preferred_element_type=o_ref.dtype)
+        "rkab,rkb->ra", data_ref[...].astype(acc_dt), xg.astype(acc_dt),
+        preferred_element_type=acc_dt).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("tile_rows", "interpret"))
+                   static_argnames=("tile_rows", "interpret", "accum_dtype"))
 def block_spmv_ell(indices: jax.Array, data: jax.Array, x_blocks: jax.Array,
-                   *, tile_rows: int = 8, interpret: bool = True
-                   ) -> jax.Array:
+                   *, tile_rows: int = 8, interpret: bool = True,
+                   accum_dtype=None) -> jax.Array:
     """y = A @ x with A in padded BlockELL form.
 
     indices: (nbr, kmax) int32, padded slots point at block-col 0
     data:    (nbr, kmax, br, bc), padded slots are zero blocks
     x_blocks: (nbc, bc)
-    returns  (nbr, br)
+    returns  (nbr, br) at ``data.dtype``; ``accum_dtype`` sets the
+    contraction accumulator (None = native)
     """
     nbr, kmax, br, bc = data.shape
+    acc_dt = jnp.dtype(accum_dtype) if accum_dtype is not None else data.dtype
     tr = min(tile_rows, nbr)
     pad = (-nbr) % tr
     if pad:
@@ -70,7 +80,7 @@ def block_spmv_ell(indices: jax.Array, data: jax.Array, x_blocks: jax.Array,
         data = jnp.pad(data, ((0, pad), (0, 0), (0, 0), (0, 0)))
     grid = ((nbr + pad) // tr,)
     out = pl.pallas_call(
-        _spmv_kernel,
+        functools.partial(_spmv_kernel, acc_dt),
         grid=grid,
         in_specs=[
             pl.BlockSpec((tr, kmax), lambda i: (i, 0)),

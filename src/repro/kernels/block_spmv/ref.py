@@ -1,12 +1,19 @@
 """Pure-jnp oracle for the blocked ELL SpMV kernel."""
+import functools
+
 import jax
 import jax.numpy as jnp
 
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("accum_dtype",))
 def block_spmv_ell_ref(indices: jax.Array, data: jax.Array,
-                       x_blocks: jax.Array) -> jax.Array:
-    """Same contract as the kernel: (nbr, kmax) x (nbr,kmax,br,bc) -> y."""
+                       x_blocks: jax.Array, *, accum_dtype=None) -> jax.Array:
+    """Same contract as the kernel: (nbr, kmax) x (nbr,kmax,br,bc) -> y.
+
+    ``accum_dtype`` mirrors the kernel's accumulator rule: contract at that
+    dtype, round the result back to ``data.dtype`` (None = native).
+    """
+    acc = jnp.dtype(accum_dtype) if accum_dtype is not None else data.dtype
     xg = x_blocks[indices]  # (nbr, kmax, bc)
-    return jnp.einsum("rkab,rkb->ra", data, xg,
-                      preferred_element_type=data.dtype)
+    return jnp.einsum("rkab,rkb->ra", data.astype(acc), xg.astype(acc),
+                      preferred_element_type=acc).astype(data.dtype)

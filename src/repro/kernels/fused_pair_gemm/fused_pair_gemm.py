@@ -45,16 +45,16 @@ from jax.experimental import pallas as pl
 _VMEM_TILE_BUDGET = 4 * 2 ** 20
 
 
-def _fused_kernel(lhs_ref, rhs_ref, o_ref):
+def _fused_kernel(acc_dt, lhs_ref, rhs_ref, o_ref):
     kmax = lhs_ref.shape[1]
     bk = lhs_ref.shape[3]
-    acc = jnp.zeros(o_ref.shape, o_ref.dtype)
+    acc = jnp.zeros(o_ref.shape, acc_dt)
     for k in range(kmax):           # static unroll over the pair slots
-        lhs = lhs_ref[:, k]         # (TS, br, bk)
-        rhs = rhs_ref[:, k]         # (TS, bk, bc)
+        lhs = lhs_ref[:, k].astype(acc_dt)   # (TS, br, bk)
+        rhs = rhs_ref[:, k].astype(acc_dt)   # (TS, bk, bc)
         for j in range(bk):         # unroll the tiny contraction dim
             acc = acc + lhs[:, :, j][:, :, None] * rhs[:, j, :][:, None, :]
-    o_ref[...] = acc
+    o_ref[...] = acc.astype(o_ref.dtype)
 
 
 def default_tile_slots(nslots: int, kmax: int, br: int, bk: int, bc: int,
@@ -65,19 +65,23 @@ def default_tile_slots(nslots: int, kmax: int, br: int, bk: int, bc: int,
     return max(1, min(256, ts, max(nslots, 1)))
 
 
-@functools.partial(jax.jit, static_argnames=("tile_slots", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("tile_slots", "interpret", "accum_dtype"))
 def fused_pair_gemm(lhs: jax.Array, rhs: jax.Array, *,
                     tile_slots: int | None = None,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool = True, accum_dtype=None) -> jax.Array:
     """(nslots, kmax, br, bk) @ (nslots, kmax, bk, bc) -> (nslots, br, bc).
 
     Contracts each slot's ``kmax`` padded block pairs and reduces them into
     the slot's output block in one pass (padded pairs must be zero blocks on
-    at least one side).
+    at least one side).  ``accum_dtype`` is the VMEM accumulator dtype
+    (None = native in ``lhs.dtype``, bitwise legacy); the output rounds
+    back to ``lhs.dtype``.
     """
     nslots, kmax, br, bk = lhs.shape
     _, kmax2, bk2, bc = rhs.shape
     assert kmax == kmax2 and bk == bk2, (lhs.shape, rhs.shape)
+    acc_dt = jnp.dtype(accum_dtype) if accum_dtype is not None else lhs.dtype
     if nslots == 0 or kmax == 0:
         return jnp.zeros((nslots, br, bc), lhs.dtype)
     ts = tile_slots or default_tile_slots(nslots, kmax, br, bk, bc,
@@ -89,7 +93,7 @@ def fused_pair_gemm(lhs: jax.Array, rhs: jax.Array, *,
         rhs = jnp.pad(rhs, ((0, pad), (0, 0), (0, 0), (0, 0)))
     grid = ((nslots + pad) // ts,)
     out = pl.pallas_call(
-        _fused_kernel,
+        functools.partial(_fused_kernel, acc_dt),
         grid=grid,
         in_specs=[
             pl.BlockSpec((ts, kmax, br, bk), lambda i: (i, 0, 0, 0)),

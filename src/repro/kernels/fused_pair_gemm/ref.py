@@ -1,13 +1,17 @@
 """Pure-jnp oracle for the fused tiled pair-GEMM (contract + reduce)."""
+import functools
+
 import jax
 import jax.numpy as jnp
 
 
-@jax.jit
-def fused_pair_gemm_ref(lhs: jax.Array, rhs: jax.Array) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("accum_dtype",))
+def fused_pair_gemm_ref(lhs: jax.Array, rhs: jax.Array, *,
+                        accum_dtype=None) -> jax.Array:
     """(nslots, kmax, br, bk) @ (nslots, kmax, bk, bc) -> (nslots, br, bc)."""
+    acc = jnp.dtype(accum_dtype) if accum_dtype is not None else lhs.dtype
     if lhs.shape[1] == 0:
         return jnp.zeros((lhs.shape[0], lhs.shape[2], rhs.shape[3]),
                          lhs.dtype)
-    return jnp.einsum("skij,skjl->sil", lhs, rhs,
-                      preferred_element_type=lhs.dtype)
+    return jnp.einsum("skij,skjl->sil", lhs.astype(acc), rhs.astype(acc),
+                      preferred_element_type=acc).astype(lhs.dtype)

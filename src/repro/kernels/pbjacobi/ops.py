@@ -7,9 +7,10 @@ from repro.kernels.pbjacobi.pbjacobi import pbjacobi_update
 
 
 def pbjacobi_apply(dinv: jax.Array, r: jax.Array, x: jax.Array, omega,
-                   *, interpret: bool = True) -> jax.Array:
+                   *, interpret: bool = True, accum_dtype=None) -> jax.Array:
     """Flat-vector front door: x, r are (nbr*bs,)."""
     nbr, bs, _ = dinv.shape
     out = pbjacobi_update(dinv, r.reshape(nbr, bs), x.reshape(nbr, bs),
-                          omega, interpret=interpret)
+                          omega, interpret=interpret,
+                          accum_dtype=accum_dtype)
     return out.reshape(-1)

@@ -21,20 +21,28 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _pbjacobi_kernel(omega_ref, dinv_ref, r_ref, x_ref, o_ref):
-    dinv = dinv_ref[...]                      # (TR, bs, bs)
-    r = r_ref[...]                            # (TR, bs)
+def _pbjacobi_kernel(acc_dt, omega_ref, dinv_ref, r_ref, x_ref, o_ref):
+    dinv = dinv_ref[...].astype(acc_dt)       # (TR, bs, bs)
+    r = r_ref[...].astype(acc_dt)             # (TR, bs)
     y = jnp.einsum("nab,nb->na", dinv, r,
-                   preferred_element_type=o_ref.dtype)
-    o_ref[...] = x_ref[...] + omega_ref[0] * y
+                   preferred_element_type=acc_dt)
+    out = x_ref[...].astype(acc_dt) + omega_ref[0].astype(acc_dt) * y
+    o_ref[...] = out.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("tile_rows", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("tile_rows", "interpret", "accum_dtype"))
 def pbjacobi_update(dinv: jax.Array, r: jax.Array, x: jax.Array,
                     omega: jax.Array, *, tile_rows: int = 64,
-                    interpret: bool = True) -> jax.Array:
-    """x + omega * D^{-1} r over (nbr, bs) block vectors."""
+                    interpret: bool = True, accum_dtype=None) -> jax.Array:
+    """x + omega * D^{-1} r over (nbr, bs) block vectors.
+
+    ``accum_dtype`` is the on-register dtype of the block matvec and the
+    damped update (None = native in ``dinv.dtype``, bitwise legacy); the
+    result is rounded back to ``dinv.dtype``.
+    """
     nbr, bs, _ = dinv.shape
+    acc_dt = jnp.dtype(accum_dtype) if accum_dtype is not None else dinv.dtype
     tr = min(tile_rows, nbr)
     pad = (-nbr) % tr
     if pad:
@@ -42,9 +50,9 @@ def pbjacobi_update(dinv: jax.Array, r: jax.Array, x: jax.Array,
         r = jnp.pad(r, ((0, pad), (0, 0)))
         x = jnp.pad(x, ((0, pad), (0, 0)))
     grid = ((nbr + pad) // tr,)
-    omega = jnp.asarray(omega, dinv.dtype).reshape(1)
+    omega = jnp.asarray(omega, acc_dt).reshape(1)
     out = pl.pallas_call(
-        _pbjacobi_kernel,
+        functools.partial(_pbjacobi_kernel, acc_dt),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1,), lambda i: (0,)),

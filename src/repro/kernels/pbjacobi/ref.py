@@ -1,10 +1,15 @@
 """Pure-jnp oracle for the fused pbjacobi update."""
+import functools
+
 import jax
 import jax.numpy as jnp
 
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("accum_dtype",))
 def pbjacobi_update_ref(dinv: jax.Array, r: jax.Array, x: jax.Array,
-                        omega) -> jax.Array:
-    return x + omega * jnp.einsum("nab,nb->na", dinv, r,
-                                  preferred_element_type=dinv.dtype)
+                        omega, *, accum_dtype=None) -> jax.Array:
+    acc = jnp.dtype(accum_dtype) if accum_dtype is not None else dinv.dtype
+    y = jnp.einsum("nab,nb->na", dinv.astype(acc), r.astype(acc),
+                   preferred_element_type=acc)
+    out = x.astype(acc) + jnp.asarray(omega).astype(acc) * y
+    return out.astype(dinv.dtype)

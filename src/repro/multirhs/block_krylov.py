@@ -21,7 +21,8 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.vcycle import Hierarchy, vcycle
+from repro.core.krylov import wrap_precond
+from repro.core.vcycle import Hierarchy, fine_operator, vcycle
 from repro.core.spmv import apply_ell
 
 Array = jax.Array
@@ -48,8 +49,8 @@ def block_pcg(apply_a: Callable[[Array], Array],
               B: Array, x0: Array | None = None, rtol: float = 1e-8,
               maxiter: int = 200, *,
               col_dot: Callable[[Array, Array], Array] = _col_dot,
-              col_norm: Callable[[Array], Array] = _col_norm
-              ) -> BlockCGResult:
+              col_norm: Callable[[Array], Array] = _col_norm,
+              precond_dtype=None) -> BlockCGResult:
     """PCG on a panel ``B: (..., k)`` with per-column masking.
 
     A column is *active* while its residual exceeds ``rtol * ||b_col||``;
@@ -66,7 +67,13 @@ def block_pcg(apply_a: Callable[[Array], Array],
     iteration-parity invariant depends on this body being the single
     source of truth (mirroring how ``core.vcycle`` shares the smoother
     recurrences).
+
+    ``precond_dtype`` is the same mixed-precision boundary as
+    ``core.krylov.pcg``: the panel residual is cast down before
+    ``apply_m`` and the result cast back, so the masked outer recurrence
+    stays at the Krylov dtype over a reduced-precision hierarchy.
     """
+    apply_m = wrap_precond(apply_m, precond_dtype, B.dtype)
     x = jnp.zeros_like(B) if x0 is None else x0
     r = B - apply_a(x)
     z = apply_m(r)
@@ -113,15 +120,17 @@ def make_block_solve(setupd, rtol: float = 1e-8, maxiter: int = 200):
     static k set precisely so this cache stays small.
     """
     smoother, degree = setupd.smoother, setupd.degree
+    precond_dtype = setupd.precision.smoother_dtype
 
     @partial(jax.jit, static_argnames=())
     def solve(hier: Hierarchy, B: Array) -> BlockCGResult:
         def apply_a(X):
-            return apply_ell(hier.levels[0].a_ell, X)
+            return apply_ell(fine_operator(hier), X)
 
         def apply_m(R):
             return vcycle(hier, R, smoother=smoother, degree=degree)
 
-        return block_pcg(apply_a, apply_m, B, rtol=rtol, maxiter=maxiter)
+        return block_pcg(apply_a, apply_m, B, rtol=rtol, maxiter=maxiter,
+                         precond_dtype=precond_dtype)
 
     return solve

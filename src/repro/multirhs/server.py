@@ -52,10 +52,14 @@ class AMGSolveServer:
         self.setupd = setupd
         self.buckets = buckets
         self.n = int(setupd.stats["level_rows"][0])
-        # panels are assembled in the operator's dtype (fp64 for AMG):
-        # every rhs is force-cast to it at submit time, so a mixed-dtype
-        # burst can never have one request's dtype decide the panel's.
-        self.dtype = np.dtype(np.asarray(a_fine_data).dtype)
+        # panels are assembled at the policy's *Krylov* dtype (fp64 under
+        # every stock policy): every rhs is force-cast to it at submit
+        # time, so a mixed-dtype burst can never have one request's dtype
+        # decide the panel's — and a reduced-precision-resident hierarchy
+        # (e.g. ``precision="f32"``) still serves full-fp64 requests, the
+        # cast to the hierarchy dtype happening only at the masked PCG's
+        # preconditioner boundary.
+        self.dtype = np.dtype(setupd.precision.krylov_dtype)
         self._recompute = gamg.make_recompute(setupd)
         self._solve = make_block_solve(setupd, rtol=rtol, maxiter=maxiter)
         self.hierarchy = self._recompute(jnp.asarray(a_fine_data))

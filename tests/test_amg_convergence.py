@@ -14,7 +14,7 @@ from repro.core import gamg
 from repro.core.scalar_path import recompute_scalar
 from repro.core.krylov import pcg
 from repro.core.spmv import spmv_ell
-from repro.core.vcycle import vcycle
+from repro.core.vcycle import fine_operator, vcycle
 from repro.fem.assemble import assemble_elasticity
 from repro.fem.hex_elasticity import element_stiffness, rigid_body_modes
 
@@ -62,8 +62,9 @@ def test_gamg_converges_elasticity(m):
     res = solver.solve(prob.b)
     assert bool(res.converged), f"no convergence: relres={res.relres}"
     assert int(res.iters) < 40
-    # true residual check
-    r = prob.b - spmv_ell(solver.hierarchy.levels[0].a_ell, res.x)
+    # true residual check (fine_operator: the krylov-dtype operator under
+    # a reduced-precision REPRO_PRECISION policy)
+    r = prob.b - spmv_ell(fine_operator(solver.hierarchy), res.x)
     assert float(jnp.linalg.norm(r) / jnp.linalg.norm(prob.b)) < 1e-7
 
 
@@ -90,9 +91,10 @@ def _mesh_independence_trend(ladder):
 
 def test_blocked_scalar_iteration_parity():
     """Paper Sec. 4.1: both formats converge in the same iteration count to
-    the same true residual (same algorithm, different storage)."""
+    the same true residual (same algorithm, different storage).  Exact
+    parity is an fp64 contract — pin the policy against REPRO_PRECISION."""
     prob = assemble_elasticity(5)
-    setupd = gamg.setup(prob.A, prob.B, coarse_size=30)
+    setupd = gamg.setup(prob.A, prob.B, coarse_size=30, precision="f64")
     hier_b = gamg.recompute(setupd, prob.A.data)
     hier_s = recompute_scalar(setupd, prob.A.data)
 
@@ -124,12 +126,57 @@ def test_hot_recompute_scaled_operator():
 
 
 def test_mis_coarsener_device():
-    """Paper Sec. 6 future work: device Luby-MIS coarsener end-to-end."""
+    """Paper Sec. 6 future work: device Luby-MIS coarsener end-to-end.
+    MIS is now ``setup``'s *default* aggregation path — this exercises it
+    through the explicit knob."""
     prob = assemble_elasticity(5)
     solver = gamg.GAMGSolver(prob.A, prob.B, coarse_size=30,
                              coarsener="mis", rtol=1e-8, maxiter=120)
     res = solver.solve(prob.b)
     assert bool(res.converged), f"MIS coarsener: relres={res.relres}"
+
+
+def test_mis_greedy_coarsener_parity_and_quality():
+    """The jitted device MIS default vs the numpy greedy fallback: both
+    produce valid aggregations (full cover, dense ids, real coarsening)
+    and hierarchies of comparable convergence quality."""
+    from repro.core.aggregation import graph_to_ell, greedy_aggregate, \
+        aggregation_from_device, mis_aggregate_device
+    from repro.core.strength import strength_graph
+
+    prob = assemble_elasticity(5)
+    graph = strength_graph(prob.A, 0.08)
+    idx, mask = graph_to_ell(graph)
+    mis = aggregation_from_device(mis_aggregate_device(idx, mask))
+    greedy = greedy_aggregate(graph, min_size=2)
+    for aggr in (mis, greedy):
+        assert aggr.node_to_agg.shape == (graph.n,)
+        assert (aggr.node_to_agg >= 0).all()
+        assert set(np.unique(aggr.node_to_agg)) == set(range(aggr.n_agg)), \
+            "aggregate ids must be dense"
+        assert 1 < aggr.n_agg < graph.n, "must genuinely coarsen"
+    # comparable coarsening rates (within 3x of each other)
+    assert mis.n_agg < 3 * greedy.n_agg and greedy.n_agg < 3 * mis.n_agg
+
+    # end-to-end quality: iteration counts within a fixed bound
+    iters = {}
+    for c in ("mis", "greedy"):
+        s = gamg.GAMGSolver(prob.A, prob.B, coarse_size=30, coarsener=c,
+                            rtol=1e-8, maxiter=120)
+        r = s.solve(prob.b)
+        assert bool(r.converged), f"{c}: relres={r.relres}"
+        iters[c] = int(r.iters)
+    assert abs(iters["mis"] - iters["greedy"]) <= 5, iters
+
+
+def test_setup_default_routes_through_device_mis():
+    """The default aggregation is the jitted device MIS path; greedy stays
+    reachable as the explicit fallback, bogus names fail loudly."""
+    prob = assemble_elasticity(4)
+    setupd = gamg.setup(prob.A, prob.B, coarse_size=30)
+    assert setupd.coarsener == "mis"
+    with pytest.raises(ValueError):
+        gamg.setup(prob.A, prob.B, coarse_size=30, coarsener="bogus")
 
 
 def test_coarsening_reduces_and_block_sizes():

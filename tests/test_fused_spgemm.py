@@ -6,6 +6,7 @@ Property coverage per the deliverables: rectangular block mixes
 no ``(npairs, br, bc)`` pair-product intermediate anywhere in the jaxpr.
 All Pallas execution is interpret-mode (CPU CI).
 """
+import ml_dtypes
 import numpy as np
 import pytest
 
@@ -24,25 +25,34 @@ RNG = np.random.default_rng(11)
 
 
 def _tol(dtype):
-    return dict(rtol=1e-12, atol=1e-12) if dtype == np.float64 else \
-        dict(rtol=2e-5, atol=2e-5)
+    if dtype == np.float64:
+        return dict(rtol=1e-12, atol=1e-12)
+    if dtype == ml_dtypes.bfloat16:
+        return dict(rtol=5e-2, atol=5e-2)
+    return dict(rtol=2e-5, atol=2e-5)
 
 
 # ---------------------------------------------------------------------------
 # Kernel-level: fused contract+reduce vs pure-jnp oracle
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("dtype", [np.float64, np.float32])
+@pytest.mark.parametrize("dtype,accum",
+                         [(np.float64, None), (np.float32, None),
+                          (ml_dtypes.bfloat16, np.float32)],
+                         ids=["f64", "f32", "bf16"])
 @pytest.mark.parametrize("nslots,kmax,br,bk,bc",
                          [(1, 1, 3, 3, 3), (7, 3, 3, 3, 6), (33, 5, 6, 3, 6),
                           (64, 2, 6, 6, 6), (9, 4, 1, 1, 1), (20, 7, 2, 4, 5)])
-def test_fused_pair_gemm_sweep(nslots, kmax, br, bk, bc, dtype):
-    lhs = jnp.asarray(RNG.standard_normal((nslots, kmax, br, bk)), dtype)
-    rhs = jnp.asarray(RNG.standard_normal((nslots, kmax, bk, bc)), dtype)
-    got = fused_pair_gemm(lhs, rhs, interpret=True)
-    np.testing.assert_allclose(np.asarray(got),
-                               np.asarray(fused_pair_gemm_ref(lhs, rhs)),
-                               **_tol(dtype))
+def test_fused_pair_gemm_sweep(nslots, kmax, br, bk, bc, dtype, accum):
+    lhs = jnp.asarray(
+        RNG.standard_normal((nslots, kmax, br, bk)).astype(dtype))
+    rhs = jnp.asarray(
+        RNG.standard_normal((nslots, kmax, bk, bc)).astype(dtype))
+    got = fused_pair_gemm(lhs, rhs, interpret=True, accum_dtype=accum)
+    want = fused_pair_gemm_ref(lhs, rhs, accum_dtype=accum)
+    assert got.dtype == lhs.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float64),
+                               np.asarray(want, np.float64), **_tol(dtype))
 
 
 @pytest.mark.parametrize("tile_slots", [1, 3, 8, 64])

@@ -1,9 +1,12 @@
 """Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle.
 
-Each kernel is swept over shapes and dtypes per the deliverables spec; the
-blocked SpMV/SpGEMM paths are additionally validated end-to-end against the
-core reference implementations.
+Each kernel is swept over shapes and dtypes per the deliverables spec —
+f64 and f32 with native accumulation, bf16 with the explicit fp32
+accumulator (the ``accum_dtype`` rule every kernel family shares; see
+``src/repro/kernels/README.md``).  The blocked SpMV/SpGEMM paths are
+additionally validated end-to-end against the core references.
 """
+import ml_dtypes
 import numpy as np
 import pytest
 
@@ -28,25 +31,43 @@ from helpers import random_bcsr
 
 RNG = np.random.default_rng(7)
 
+# dtype rows of the kernel sweeps: (value dtype, accum_dtype knob).  bf16
+# uses the explicit fp32 accumulator — the supported low-precision mode.
+DTYPES = [(np.float64, None), (np.float32, None),
+          (ml_dtypes.bfloat16, np.float32)]
+DTYPE_IDS = ["f64", "f32", "bf16"]
+
 
 def _tol(dtype):
-    return dict(rtol=1e-12, atol=1e-12) if dtype == np.float64 else \
-        dict(rtol=2e-5, atol=2e-5)
+    if dtype == np.float64:
+        return dict(rtol=1e-12, atol=1e-12)
+    if dtype == ml_dtypes.bfloat16:
+        # kernel and oracle share the fp32-accumulate/round-to-bf16 rule;
+        # the slack covers reduction-order ulps at bf16 resolution
+        return dict(rtol=5e-2, atol=5e-2)
+    return dict(rtol=2e-5, atol=2e-5)
 
 
-@pytest.mark.parametrize("dtype", [np.float64, np.float32])
+def _cast(a, dtype):
+    """Numpy fp arrays -> jnp at the sweep dtype (bf16 via ml_dtypes)."""
+    return jnp.asarray(np.asarray(a).astype(dtype))
+
+
+@pytest.mark.parametrize("dtype,accum", DTYPES, ids=DTYPE_IDS)
 @pytest.mark.parametrize("nbr,kmax,br,bc",
                          [(5, 3, 3, 3), (16, 7, 3, 6), (33, 2, 6, 6),
                           (8, 4, 1, 1), (64, 9, 6, 3), (3, 1, 2, 5)])
-def test_block_spmv_kernel_sweep(nbr, kmax, br, bc, dtype):
+def test_block_spmv_kernel_sweep(nbr, kmax, br, bc, dtype, accum):
     nbc = nbr + 3
     indices = jnp.asarray(RNG.integers(0, nbc, (nbr, kmax)), jnp.int32)
-    data = jnp.asarray(RNG.standard_normal((nbr, kmax, br, bc)), dtype)
-    x = jnp.asarray(RNG.standard_normal((nbc, bc)), dtype)
-    got = block_spmv_ell(indices, data, x, interpret=True)
-    want = block_spmv_ell_ref(indices, data, x)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               **_tol(dtype))
+    data = _cast(RNG.standard_normal((nbr, kmax, br, bc)), dtype)
+    x = _cast(RNG.standard_normal((nbc, bc)), dtype)
+    got = block_spmv_ell(indices, data, x, interpret=True,
+                         accum_dtype=accum)
+    want = block_spmv_ell_ref(indices, data, x, accum_dtype=accum)
+    assert got.dtype == data.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float64),
+                               np.asarray(want, np.float64), **_tol(dtype))
 
 
 @pytest.mark.parametrize("tile_rows", [1, 4, 8, 32])
@@ -69,20 +90,22 @@ def test_block_spmv_end_to_end_matches_core():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12)
 
 
-@pytest.mark.parametrize("dtype", [np.float64, np.float32])
+@pytest.mark.parametrize("dtype,accum", DTYPES, ids=DTYPE_IDS)
 @pytest.mark.parametrize("nbr,kmax,br,bc,k",
                          [(5, 3, 3, 3, 1), (16, 7, 3, 6, 4),
                           (33, 2, 6, 6, 8), (8, 4, 1, 1, 3),
                           (64, 9, 6, 3, 16), (3, 1, 2, 5, 2)])
-def test_block_spmm_kernel_sweep(nbr, kmax, br, bc, k, dtype):
+def test_block_spmm_kernel_sweep(nbr, kmax, br, bc, k, dtype, accum):
     nbc = nbr + 3
     indices = jnp.asarray(RNG.integers(0, nbc, (nbr, kmax)), jnp.int32)
-    data = jnp.asarray(RNG.standard_normal((nbr, kmax, br, bc)), dtype)
-    x = jnp.asarray(RNG.standard_normal((nbc, bc, k)), dtype)
-    got = block_spmm_ell(indices, data, x, interpret=True)
-    want = block_spmm_ell_ref(indices, data, x)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               **_tol(dtype))
+    data = _cast(RNG.standard_normal((nbr, kmax, br, bc)), dtype)
+    x = _cast(RNG.standard_normal((nbc, bc, k)), dtype)
+    got = block_spmm_ell(indices, data, x, interpret=True,
+                         accum_dtype=accum)
+    want = block_spmm_ell_ref(indices, data, x, accum_dtype=accum)
+    assert got.dtype == data.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float64),
+                               np.asarray(want, np.float64), **_tol(dtype))
 
 
 @pytest.mark.parametrize("tile_rows,pad_k_to", [(1, 1), (4, 4), (8, 8),
@@ -105,31 +128,35 @@ def test_block_spmm_end_to_end_matches_core():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12)
 
 
-@pytest.mark.parametrize("dtype", [np.float64, np.float32])
+@pytest.mark.parametrize("dtype,accum", DTYPES, ids=DTYPE_IDS)
 @pytest.mark.parametrize("npairs,br,bk,bc",
                          [(1, 3, 3, 3), (7, 3, 3, 6), (130, 6, 3, 6),
                           (256, 6, 6, 6), (9, 1, 1, 1), (50, 2, 4, 5)])
-def test_block_pair_gemm_sweep(npairs, br, bk, bc, dtype):
-    lhs = jnp.asarray(RNG.standard_normal((npairs, br, bk)), dtype)
-    rhs = jnp.asarray(RNG.standard_normal((npairs, bk, bc)), dtype)
-    got = block_pair_gemm(lhs, rhs, interpret=True)
-    np.testing.assert_allclose(np.asarray(got),
-                               np.asarray(block_pair_gemm_ref(lhs, rhs)),
-                               **_tol(dtype))
+def test_block_pair_gemm_sweep(npairs, br, bk, bc, dtype, accum):
+    lhs = _cast(RNG.standard_normal((npairs, br, bk)), dtype)
+    rhs = _cast(RNG.standard_normal((npairs, bk, bc)), dtype)
+    got = block_pair_gemm(lhs, rhs, interpret=True, accum_dtype=accum)
+    want = block_pair_gemm_ref(lhs, rhs, accum_dtype=accum)
+    assert got.dtype == lhs.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float64),
+                               np.asarray(want, np.float64), **_tol(dtype))
 
 
-@pytest.mark.parametrize("dtype", [np.float64, np.float32])
+@pytest.mark.parametrize("dtype,accum", DTYPES, ids=DTYPE_IDS)
 @pytest.mark.parametrize("n,nseg,br,bc",
                          [(12, 5, 3, 3), (100, 1, 3, 6), (64, 64, 6, 6),
                           (300, 37, 1, 1), (5, 9, 2, 2)])
-def test_block_seg_sum_sweep(n, nseg, br, bc, dtype):
+def test_block_seg_sum_sweep(n, nseg, br, bc, dtype, accum):
     # sorted segment ids, some segments possibly empty
     ids = np.sort(RNG.integers(0, nseg, n)).astype(np.int32)
-    vals = jnp.asarray(RNG.standard_normal((n, br, bc)), dtype)
-    got = block_seg_sum(vals, jnp.asarray(ids), nseg, interpret=True)
-    want = block_seg_sum_ref(vals, jnp.asarray(ids), nseg)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               **_tol(dtype))
+    vals = _cast(RNG.standard_normal((n, br, bc)), dtype)
+    got = block_seg_sum(vals, jnp.asarray(ids), nseg, interpret=True,
+                        accum_dtype=accum)
+    want = block_seg_sum_ref(vals, jnp.asarray(ids), nseg,
+                             accum_dtype=accum)
+    assert got.dtype == vals.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float64),
+                               np.asarray(want, np.float64), **_tol(dtype))
 
 
 @pytest.mark.parametrize("tile_n", [1, 16, 256])
@@ -154,13 +181,15 @@ def test_spgemm_with_kernels_matches_ref():
                                rtol=1e-12, atol=1e-12)
 
 
-@pytest.mark.parametrize("dtype", [np.float64, np.float32])
+@pytest.mark.parametrize("dtype,accum", DTYPES, ids=DTYPE_IDS)
 @pytest.mark.parametrize("nbr,bs", [(4, 3), (100, 6), (17, 3), (1, 1)])
-def test_pbjacobi_sweep(nbr, bs, dtype):
-    dinv = jnp.asarray(RNG.standard_normal((nbr, bs, bs)), dtype)
-    r = jnp.asarray(RNG.standard_normal((nbr, bs)), dtype)
-    x = jnp.asarray(RNG.standard_normal((nbr, bs)), dtype)
-    got = pbjacobi_update(dinv, r, x, 0.7, interpret=True)
-    want = pbjacobi_update_ref(dinv, r, x, jnp.asarray(0.7, dtype))
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               **_tol(dtype))
+def test_pbjacobi_sweep(nbr, bs, dtype, accum):
+    dinv = _cast(RNG.standard_normal((nbr, bs, bs)), dtype)
+    r = _cast(RNG.standard_normal((nbr, bs)), dtype)
+    x = _cast(RNG.standard_normal((nbr, bs)), dtype)
+    got = pbjacobi_update(dinv, r, x, 0.7, interpret=True,
+                          accum_dtype=accum)
+    want = pbjacobi_update_ref(dinv, r, x, 0.7, accum_dtype=accum)
+    assert got.dtype == dinv.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float64),
+                               np.asarray(want, np.float64), **_tol(dtype))

@@ -38,8 +38,12 @@ def prob():
 
 @pytest.fixture(scope="module")
 def solver(prob):
+    # exact per-column iteration parity between the batched and looped
+    # paths is an fp64 contract: pin the policy so a REPRO_PRECISION
+    # override cannot weaken what this module asserts (the mixed-precision
+    # batching behaviour is covered by tests/test_precision.py)
     return gamg.GAMGSolver(prob.A, prob.B, coarse_size=30, rtol=1e-8,
-                           maxiter=100)
+                           maxiter=100, precision="f64")
 
 
 # ---------------------------------------------------------------------------
@@ -205,6 +209,47 @@ def test_server_update_operator_refreshes_hierarchy(solver, prob):
     np.testing.assert_allclose(rep.x, np.asarray(direct.x), rtol=1e-6,
                                atol=1e-10)
     assert srv.stats["recomputes"] == 1
+
+
+def test_server_recompute_preserves_bucketing_and_accounting(solver, prob):
+    """``update_operator`` -> ``solve_many`` interaction: a hierarchy
+    recompute invalidates *nothing* in the server's bucketing (same static
+    bucket set, same jitted solves, no queue disturbance), and the
+    recompute accounting is exact on both front doors."""
+    srv = AMGSolveServer(solver.setup_data, prob.A.data, buckets=(1, 2, 4),
+                         rtol=1e-8, maxiter=100)
+    # a pending request survives a mid-stream recompute untouched
+    srv.submit(np.asarray(prob.b))
+    before = dict(srv.stats, solves_per_k=dict(srv.stats["solves_per_k"]))
+    srv.update_operator(prob.A.data * 2.0)
+    assert srv.buckets == (1, 2, 4)
+    assert len(srv._pending) == 1
+    assert srv.stats["requests"] == before["requests"]
+    assert srv.stats["batches"] == before["batches"]
+    assert srv.stats["padded_columns"] == before["padded_columns"]
+    assert srv.stats["solves_per_k"] == before["solves_per_k"]
+    [rep] = srv.flush()
+    # served against the *new* operator: A -> 2A halves the solution
+    single = solver.solve(jnp.asarray(prob.b))
+    assert rep.converged
+    np.testing.assert_allclose(rep.x, np.asarray(single.x) / 2.0,
+                               rtol=1e-5, atol=1e-12)
+    # exact recompute accounting, server and GAMGSolver front doors alike
+    assert srv.stats["recomputes"] == 1
+    srv.update_operator(prob.A.data)
+    srv.update_operator(prob.A.data * 3.0)
+    assert srv.stats["recomputes"] == 3
+    g = gamg.GAMGSolver(prob.A, prob.B, coarse_size=30, rtol=1e-8,
+                        maxiter=100, precision="f64")
+    assert g.n_recomputes == 0          # __init__'s build is not an update
+    for i in range(3):
+        g.update_operator(prob.A.data * (1.0 + i))
+    assert g.n_recomputes == 3
+    # the bucket machinery still serves correctly after all the recomputes
+    reports = srv.serve([np.asarray(prob.b),
+                         RNG.standard_normal(prob.n)])
+    assert len(reports) == 2 and all(r.k_bucket == 2 for r in reports)
+    assert srv.stats["solves_per_k"][2] == 1
 
 
 def test_server_rejects_bad_inputs(solver, prob):

@@ -1,0 +1,214 @@
+"""PrecisionPolicy: resolution, storage dtypes, and mixed-precision solves.
+
+The load-bearing claims (ISSUE acceptance):
+
+* with ``hierarchy_dtype=float32`` the elasticity PCG still reaches
+  rtol 1e-8 at <= 1.3x the fp64 iteration count (fp64 outer Krylov on the
+  fp64 fine operator, fp32 V-cycle behind the boundary cast);
+* fp32- and fp64-preconditioned PCG converge to the *same* solution at
+  rtol, with iteration counts within a fixed bound of each other
+  (Demidov, arXiv:2202.09056) — swept deterministically here, and as a
+  hypothesis property in ``tests/test_property.py``;
+* the stored hierarchy really is at the policy dtype end to end, and the
+  solve server can host an fp32-resident hierarchy serving fp64 requests.
+"""
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401  (x64 on)
+import jax.numpy as jnp
+
+from repro.core import gamg
+from repro.core.krylov import pcg
+from repro.core.precision import PrecisionPolicy
+from repro.core.spmv import apply_ell, spmv_ell
+from repro.core.vcycle import fine_operator, pbjacobi_apply
+from repro.fem.assemble import assemble_elasticity
+from repro.kernels import backend
+from repro.multirhs import AMGSolveServer
+
+from helpers import spd_bcsr
+
+RNG = np.random.default_rng(3)
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return assemble_elasticity(5)
+
+
+@pytest.fixture(scope="module")
+def solver64(prob):
+    return gamg.GAMGSolver(prob.A, prob.B, coarse_size=30, rtol=1e-8,
+                           maxiter=100, precision="f64")
+
+
+@pytest.fixture(scope="module")
+def solver32(prob):
+    return gamg.GAMGSolver(prob.A, prob.B, coarse_size=30, rtol=1e-8,
+                           maxiter=100, precision="f32")
+
+
+# ---------------------------------------------------------------------------
+# Policy resolution
+# ---------------------------------------------------------------------------
+
+def test_policy_names_and_defaults():
+    d = PrecisionPolicy.double()
+    assert d == PrecisionPolicy.from_name("f64")
+    assert not d.mixed
+    assert d.kernel_accum_dtype is None
+    f32 = PrecisionPolicy.from_name("f32")
+    assert f32.hierarchy_dtype == np.dtype(np.float32)
+    assert f32.smoother_dtype == np.dtype(np.float32)
+    assert f32.krylov_dtype == np.dtype(np.float64)
+    assert f32.mixed and f32.factor_dtype == np.dtype(np.float32)
+    assert f32.kernel_accum_dtype is None    # fp32 accumulates natively
+    bf = PrecisionPolicy.from_name("bf16")
+    assert bf.hierarchy_dtype.itemsize == 2
+    assert bf.factor_dtype == np.dtype(np.float32)   # LAPACK floor
+    assert bf.kernel_accum_dtype == np.dtype(np.float32)
+    assert bf.coarse_jitter_scale() > d.coarse_jitter_scale()
+
+
+def test_resolve_precision_env_override(monkeypatch):
+    monkeypatch.delenv("REPRO_PRECISION", raising=False)
+    assert backend.resolve_precision(None) == PrecisionPolicy.double()
+    monkeypatch.setenv("REPRO_PRECISION", "f32")
+    assert backend.resolve_precision(None) == \
+        PrecisionPolicy.from_name("f32")
+    # explicit knob beats the env, policy objects pass through
+    assert backend.resolve_precision("f64") == PrecisionPolicy.double()
+    p = PrecisionPolicy.from_name("bf16")
+    assert backend.resolve_precision(p) is p
+
+
+def test_invalid_precision_raises_value_error(monkeypatch):
+    with pytest.raises(ValueError):
+        PrecisionPolicy.from_name("f16-ish")
+    monkeypatch.setenv("REPRO_PRECISION", "nope")
+    with pytest.raises(ValueError):
+        backend.resolve_precision(None)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchy storage dtypes
+# ---------------------------------------------------------------------------
+
+def test_f32_hierarchy_stored_at_policy_dtype(solver32):
+    h = solver32.hierarchy
+    for lv in h.levels:
+        assert lv.a_ell.data.dtype == jnp.float32
+        assert lv.p_ell.data.dtype == jnp.float32
+        assert lv.r_ell.data.dtype == jnp.float32
+        assert lv.dinv.dtype == jnp.float32
+    assert h.coarse_chol.dtype == jnp.float32
+    # mixed policy: krylov-dtype copy of the finest operator only
+    assert h.a_fine_ell is not None
+    assert h.a_fine_ell.data.dtype == jnp.float64
+    assert fine_operator(h) is h.a_fine_ell
+
+
+def test_f64_hierarchy_has_no_duplicate_fine_operator(solver64):
+    h = solver64.hierarchy
+    assert h.a_fine_ell is None
+    assert fine_operator(h) is h.levels[0].a_ell
+    assert h.levels[0].a_ell.data.dtype == jnp.float64
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: f32 hierarchy reaches rtol 1e-8 within 1.3x fp64 iterations
+# ---------------------------------------------------------------------------
+
+def test_f32_hierarchy_converges_like_f64(prob, solver64, solver32):
+    r64 = solver64.solve(prob.b)
+    r32 = solver32.solve(prob.b)
+    assert bool(r64.converged) and bool(r32.converged)
+    assert float(r32.relres) <= 1e-8
+    assert int(r32.iters) <= int(np.ceil(1.3 * int(r64.iters)))
+    # same fp64 operator in the outer loop -> same solution to solver tol
+    np.testing.assert_allclose(np.asarray(r32.x), np.asarray(r64.x),
+                               rtol=1e-6, atol=1e-10)
+    # the fp64 outer residual is a *true* residual of the fp64 operator
+    r = prob.b - spmv_ell(fine_operator(solver32.hierarchy), r32.x)
+    assert float(jnp.linalg.norm(r) / jnp.linalg.norm(prob.b)) < 1e-7
+
+
+def test_f32_hot_recompute_stays_mixed(prob, solver64, solver32):
+    """State-gated recompute under the mixed policy: both hierarchy copies
+    refresh, dtypes hold, and A -> 2A halves the solution."""
+    x_ref = solver64.solve(prob.b).x
+    solver32.update_operator(prob.A.data * 2.0)
+    res = solver32.solve(prob.b)
+    assert bool(res.converged)
+    assert solver32.hierarchy.levels[0].a_ell.data.dtype == jnp.float32
+    assert solver32.hierarchy.a_fine_ell.data.dtype == jnp.float64
+    np.testing.assert_allclose(np.asarray(res.x), np.asarray(x_ref) / 2.0,
+                               rtol=1e-5, atol=1e-10)
+    solver32.update_operator(prob.A.data)        # restore for other tests
+
+
+# ---------------------------------------------------------------------------
+# Property (deterministic sweep): fp32- vs fp64-preconditioned PCG
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_f32_vs_f64_preconditioned_pcg_same_solution(seed):
+    """pbjacobi-preconditioned CG on random SPD blocked operators: casting
+    the preconditioner to fp32 (via the ``precond_dtype`` boundary) must
+    reach the same solution at rtol with iterations within a fixed bound.
+    The hypothesis twin lives in tests/test_property.py."""
+    rng = np.random.default_rng(seed)
+    A = spd_bcsr(rng, 8, 3)
+    ell = A.to_ell()
+    dinv64 = jnp.linalg.inv(A.diagonal_blocks())
+    dinv32 = dinv64.astype(jnp.float32)
+    b = jnp.asarray(rng.standard_normal(A.shape[0]))
+
+    def apply_a(v):
+        return apply_ell(ell, v)
+
+    r64 = pcg(apply_a, lambda r: pbjacobi_apply(dinv64, r), b,
+              rtol=1e-10, maxiter=200)
+    r32 = pcg(apply_a, lambda r: pbjacobi_apply(dinv32, r), b,
+              rtol=1e-10, maxiter=200, precond_dtype=jnp.float32)
+    assert bool(r64.converged) and bool(r32.converged)
+    assert abs(int(r32.iters) - int(r64.iters)) <= \
+        max(3, int(np.ceil(0.3 * int(r64.iters))))
+    np.testing.assert_allclose(np.asarray(r32.x), np.asarray(r64.x),
+                               rtol=1e-6, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# Mixed-precision panels + the solve server
+# ---------------------------------------------------------------------------
+
+def test_f32_solve_many_converges_per_column(prob, solver32):
+    cols = [np.asarray(prob.b)] + [RNG.standard_normal(prob.n)
+                                   for _ in range(2)]
+    B = jnp.asarray(np.stack(cols, axis=1))
+    res = solver32.solve_many(B)
+    assert res.x.dtype == jnp.float64           # krylov-dtype panel out
+    assert bool(np.asarray(res.converged).all())
+    for j in range(B.shape[1]):
+        single = solver32.solve(B[:, j])
+        assert abs(int(res.iters[j]) - int(single.iters)) <= 2
+        np.testing.assert_allclose(np.asarray(res.x[:, j]),
+                                   np.asarray(single.x), rtol=1e-6,
+                                   atol=1e-8)
+
+
+def test_server_hosts_f32_hierarchy_serving_f64_requests(prob, solver64):
+    setupd = gamg.setup(prob.A, prob.B, coarse_size=30, precision="f32")
+    srv = AMGSolveServer(setupd, prob.A.data, buckets=(1, 2, 4),
+                         rtol=1e-8, maxiter=100)
+    assert srv.dtype == np.dtype(np.float64)    # panels at krylov dtype
+    assert srv.hierarchy.levels[0].a_ell.data.dtype == jnp.float32
+    rhs = [np.asarray(prob.b), RNG.standard_normal(prob.n)]
+    reports = srv.serve(rhs)
+    assert all(r.converged for r in reports)
+    for rep, b in zip(reports, rhs):
+        ref = solver64.solve(jnp.asarray(b))    # dedicated fp64 solve
+        np.testing.assert_allclose(rep.x, np.asarray(ref.x), rtol=1e-6,
+                                   atol=1e-8)
+        assert rep.iters <= int(np.ceil(1.3 * int(ref.iters)))

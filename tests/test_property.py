@@ -155,6 +155,35 @@ def test_batched_solve_matches_looped_singles(seed, k):
                                    atol=1e-8)
 
 
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_f32_and_f64_preconditioned_pcg_agree(seed):
+    """ISSUE satellite: fp32-preconditioned PCG and fp64-preconditioned
+    PCG (same operator, fp64 outer loop) converge to the same solution at
+    rtol, with iteration counts within a fixed bound of each other."""
+    from repro.core.spmv import apply_ell
+    rng = np.random.default_rng(seed)
+    A = spd_bcsr(rng, 7, 3)
+    ell = A.to_ell()
+    dinv = jnp.linalg.inv(A.diagonal_blocks())
+    b = jnp.asarray(rng.standard_normal(A.shape[0]))
+
+    def apply_a(v):
+        return apply_ell(ell, v)
+
+    r64 = pcg(apply_a, lambda r: pbjacobi_apply(dinv, r), b,
+              rtol=1e-10, maxiter=200)
+    dinv32 = dinv.astype(jnp.float32)
+    r32 = pcg(apply_a, lambda r: pbjacobi_apply(dinv32, r), b,
+              rtol=1e-10, maxiter=200, precond_dtype=jnp.float32)
+    assert bool(r64.converged) and bool(r32.converged)
+    bound = max(3, int(np.ceil(0.3 * int(r64.iters))))
+    assert abs(int(r32.iters) - int(r64.iters)) <= bound, \
+        (int(r32.iters), int(r64.iters))
+    np.testing.assert_allclose(np.asarray(r32.x), np.asarray(r64.x),
+                               rtol=1e-6, atol=1e-8)
+
+
 @given(st.integers(1, 1000), st.integers(1, 64))
 @settings(max_examples=50, deadline=None)
 def test_partition_covers_and_balances(nbr, ndev):
