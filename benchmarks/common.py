@@ -87,6 +87,82 @@ def vcycle_traffic(setupd, itemsize: int = 8, scalar: bool = False) -> dict:
             "total": v + ix + vec}
 
 
+def dist_cycle_comm(dg, itemsize: int = 8) -> list:
+    """Per-level, per-rank comm model of one distributed V-cycle.
+
+    The latency-vs-bandwidth accounting behind coarse-level agglomeration
+    (``repro.dist.solver``): every halo-window exchange is one *event*
+    whose ppermutes run concurrently (one alpha of latency) and move
+    ``exchanged_slabs`` messages; an all-gather is one event of
+    ``ceil(log2(ndev))`` alphas (recursive doubling) moving ``ndev - 1``
+    slab-messages.  Per sharded level and cycle: ``2*degree + 1`` operator
+    applies (degree smoothing each side + the residual) plus one R and one
+    P transfer; the sharded coarsest adds the solve-side rhs all-gather.
+    A replicated level is one all-gather event at the switch (the boundary
+    restriction) and *zero* everywhere else — prolongation back across the
+    boundary is communication-free by construction.
+
+    Returns one dict per level (+ the coarsest):
+    ``{level, placement, msgs, latency, halo_bytes, gather_bytes}`` —
+    message count and latency are per rank per cycle, bytes split the
+    neighbor-halo traffic from the all-gather traffic so benchmarks can
+    report both levers separately.
+    """
+    import math
+
+    ndev = dg.ndev
+    ag_lat = max(1, math.ceil(math.log2(max(ndev, 2))))
+    degree = dg.degree
+    rows = []
+    ns = len(dg.levels)
+    def event_lat(halo):
+        """Alphas of one window exchange: ppermutes overlap (1), an
+        allgather-fallback window is a full collective (ag_lat)."""
+        if not halo.exchanged_slabs:
+            return 0
+        return ag_lat if halo.strategy == "allgather" else 1
+
+    for li, lv in enumerate(dg.levels):
+        n_apply = 2 * degree + 1
+        halo = lv.a_op.halo
+        vec_bytes = halo.cpad * lv.bs * itemsize        # one exchanged slab
+        msgs = n_apply * halo.exchanged_slabs
+        lat = n_apply * event_lat(halo)
+        halo_bytes = msgs * vec_bytes
+        gather_bytes = 0
+        boundary = li == ns - 1 and dg.repl
+        if boundary:
+            # restriction crosses the switch: one all-gather of the fine
+            # residual slabs; prolongation back is free (replicated halo)
+            msgs += ndev - 1
+            lat += ag_lat
+            gather_bytes += (ndev - 1) * lv.rpad * lv.bs * itemsize
+        else:
+            for t in (lv.r_op, lv.p_op):
+                t_halo = t.halo
+                # the windowed operand's slabs: (cpad, bc-block) vectors
+                t_bytes = t_halo.cpad * t.bc * itemsize
+                msgs += t_halo.exchanged_slabs
+                lat += event_lat(t_halo)
+                halo_bytes += t_halo.exchanged_slabs * t_bytes
+        rows.append(dict(level=li, placement="sharded", msgs=msgs,
+                         latency=lat, halo_bytes=halo_bytes,
+                         gather_bytes=gather_bytes))
+    for off, rl in enumerate(dg.repl):
+        rows.append(dict(level=ns + off, placement="replicated", msgs=0,
+                         latency=0, halo_bytes=0, gather_bytes=0))
+    if dg.repl:
+        rows.append(dict(level=dg.n_levels, placement="replicated",
+                         msgs=0, latency=0, halo_bytes=0, gather_bytes=0))
+    else:
+        c = dg.coarse
+        rows.append(dict(level=dg.n_levels, placement="sharded",
+                         msgs=ndev - 1, latency=ag_lat, halo_bytes=0,
+                         gather_bytes=(ndev - 1) * c.rpad * c.bs
+                         * itemsize))
+    return rows
+
+
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
     """Best-of-iters wall time (us) of a jitted fn, fully blocked."""
     for _ in range(warmup):

@@ -1,9 +1,17 @@
-"""Paper Table 1: hot KSPSolve / SpMV / PtAP, blocked vs scalar.
+"""Paper Table 1: hot KSPSolve / SpMV / PtAP, blocked vs scalar — plus the
+distributed per-level comm model behind coarse-level agglomeration.
 
 CPU-scale ladder (m^3 Q1 elasticity grids).  Measures the same three hot
 events as the paper with both storage formats running the identical
 algorithm (same hierarchy, same iteration counts — asserted), plus the
 analytic traffic model that explains the ratios.
+
+``comm_model`` evaluates the per-cycle message/latency/byte accounting of
+the distributed V-cycle for both placements (fully sharded vs
+agglomerated coarse levels) at the paper's weak-scaling rank counts —
+the latency-bound coarse grids are exactly where the paper is fastest,
+and the rows show the agglomeration crossover paying from ndev >= 8
+(asserted).
 """
 from __future__ import annotations
 
@@ -20,7 +28,7 @@ from repro.core.spmv import spmv_ell
 from repro.core.vcycle import vcycle
 from repro.fem.assemble import assemble_elasticity
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import dist_cycle_comm, emit, time_fn
 
 
 def run(ladder=(7, 10, 13)) -> None:
@@ -88,7 +96,63 @@ def run(ladder=(7, 10, 13)) -> None:
         emit(f"t1.matrix_bytes.block.m{m}", 0.0, f"bytes={bb}")
         emit(f"t1.matrix_bytes.scalar.m{m}", 0.0,
              f"bytes={sb};ceiling={sb/bb:.2f}x")
+    comm_model()
+
+
+def comm_model(m: int = 7, ndevs=(8, 27, 64)) -> None:
+    """Distributed V-cycle comm rows: sharded vs agglomerated placement.
+
+    Host-only (``build_dist_gamg`` is pure staging — no devices needed),
+    so the paper's rank counts evaluate exactly on the CPU-scale grid.
+    Emits per-level message counts / latency units / byte split and the
+    crossover row, and asserts the agglomerated coarse tail is strictly
+    cheaper in both messages and latency at every ndev >= 8.
+    """
+    from repro.dist.solver import build_dist_gamg
+
+    prob = assemble_elasticity(m)
+    setupd = gamg.setup(prob.A, prob.B, coarse_size=30, precision="f64")
+    assert len(setupd.levels) >= 2, "comm model needs a mid level"
+    for ndev in ndevs:
+        sh = dist_cycle_comm(build_dist_gamg(setupd, ndev,
+                                             coarse_eq_limit=0))
+        ag_dg = build_dist_gamg(setupd, ndev)   # default placement policy
+        ag = dist_cycle_comm(ag_dg)
+        switch = len(ag_dg.levels)
+        for r_sh, r_ag in zip(sh, ag):
+            li = r_sh["level"]
+            emit(f"t1.comm.sharded.nd{ndev}.L{li}", 0.0,
+                 f"msgs={r_sh['msgs']};lat={r_sh['latency']};"
+                 f"halo_bytes={r_sh['halo_bytes']};"
+                 f"gather_bytes={r_sh['gather_bytes']}")
+            emit(f"t1.comm.agg.nd{ndev}.L{li}", 0.0,
+                 f"placement={r_ag['placement']};"
+                 f"msgs={r_ag['msgs']};lat={r_ag['latency']};"
+                 f"halo_bytes={r_ag['halo_bytes']};"
+                 f"gather_bytes={r_ag['gather_bytes']}")
+        # whole-cycle totals: the agglomerated boundary pays one
+        # all-gather where the sharded placement pays the boundary R/P
+        # halos *plus* every coarse level's halo and the coarse-solve
+        # gather — the crossover the placement policy buys
+        msgs_sh = sum(r["msgs"] for r in sh)
+        msgs_ag = sum(r["msgs"] for r in ag)
+        lat_sh = sum(r["latency"] for r in sh)
+        lat_ag = sum(r["latency"] for r in ag)
+        emit(f"t1.comm.crossover.nd{ndev}", 0.0,
+             f"switch_level={switch};"
+             f"coarse_eq_limit={ag_dg.coarse_eq_limit};"
+             f"cycle_msgs={msgs_sh}->{msgs_ag};"
+             f"cycle_lat={lat_sh}->{lat_ag}")
+        if ndev >= 8:
+            assert ag_dg.repl, \
+                f"default placement agglomerated nothing at ndev={ndev}"
+            assert msgs_ag < msgs_sh and lat_ag < lat_sh, \
+                (f"agglomeration must beat sharding at ndev={ndev}: "
+                 f"msgs {msgs_sh}->{msgs_ag} lat {lat_sh}->{lat_ag}")
+            for r_sh, r_ag in zip(sh[switch:], ag[switch:]):
+                assert r_ag["msgs"] == 0 < r_sh["msgs"], (r_sh, r_ag)
+                assert r_ag["latency"] == 0 < r_sh["latency"], (r_sh, r_ag)
 
 
 if __name__ == "__main__":
-    run()
+    run()       # run() ends with the comm_model rows

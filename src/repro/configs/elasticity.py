@@ -25,6 +25,10 @@ class ElasticityConfig:
     rtol: float = 1e-8           # unpreconditioned residual norm
     maxiter: int = 200
     reuse_interpolation: bool = True   # -pc_gamg_reuse_interpolation
+    # distributed placement: agglomerate levels at or below this many equations
+    # per rank (PETSc -pc_gamg_process_eq_limit; None = dist default,
+    # 0 = keep every level slab-sharded)
+    coarse_eq_limit: "int | None" = None
 
     def build(self):
         """Assemble the problem and the solver (cold setup)."""
@@ -36,7 +40,8 @@ class ElasticityConfig:
                             smoother=self.smoother, degree=self.degree,
                             coarse_size=self.coarse_size,
                             coarsener=self.coarsener, rtol=self.rtol,
-                            maxiter=self.maxiter)
+                            maxiter=self.maxiter,
+                            coarse_eq_limit=self.coarse_eq_limit)
         return prob, solver
 
 

@@ -66,11 +66,17 @@ def preallocate_coo(rows, cols, nbr: int, nbc: int, br: int, bc: int
     """
     rows = np.asarray(rows, dtype=np.int64)
     cols = np.asarray(cols, dtype=np.int64)
-    assert rows.shape == cols.shape
+    # ValueError, not assert: validation must survive ``python -O``
+    if rows.shape != cols.shape:
+        raise ValueError(f"rows/cols shape mismatch: {rows.shape} != "
+                         f"{cols.shape}")
     keep = np.flatnonzero((rows >= 0) & (cols >= 0))
     kr, kc = rows[keep], cols[keep]
-    if len(kr):
-        assert kr.max() < nbr and kc.max() < nbc, "coordinate out of range"
+    if len(kr) and (kr.max() >= nbr or kc.max() >= nbc):
+        raise ValueError(
+            f"block coordinate out of range: max (row, col) = "
+            f"({int(kr.max())}, {int(kc.max())}) for a {nbr} x {nbc} "
+            f"block grid")
     indptr, indices, order, out_idx, nnzb = coo_to_csr_structure(
         kr, kc, nbr, sum_duplicates=True)
     # re-express out_idx in sorted order so the numeric segment_sum sees
@@ -94,7 +100,11 @@ def set_values_coo(plan: BlockCOOPlan, values: Array, *,
     segment-sum on TPU, jnp ``segment_sum`` elsewhere).
     """
     from repro.kernels import backend as _backend
-    assert values.shape == (plan.n_input, plan.br, plan.bc), values.shape
+    expected = (plan.n_input, plan.br, plan.bc)
+    if values.shape != expected:
+        raise ValueError(f"value stream shape {values.shape} != {expected} "
+                         f"(one ({plan.br}, {plan.bc}) block per declared "
+                         f"coordinate, in declaration order)")
     vals = values[jnp.asarray(plan.keep)][jnp.asarray(plan.order)]
     seg = jnp.asarray(plan.out_idx_sorted)
     if _backend.resolve_use_kernel(use_kernel):

@@ -82,6 +82,11 @@ class GAMGSetup:
     stats: dict
     precision: PrecisionPolicy = dataclasses.field(
         default_factory=PrecisionPolicy.double)
+    # distributed placement hint (PETSc ``-pc_gamg_process_eq_limit``):
+    # levels whose equations-per-rank are at or below this leave the slab-sharded
+    # path and run agglomerated (``repro.dist.solver.build_dist_gamg``).
+    # ``None`` defers to the dist layer's default.
+    coarse_eq_limit: "int | None" = None
 
     @property
     def n_levels(self) -> int:
@@ -91,7 +96,8 @@ class GAMGSetup:
 def setup(A: BlockCSR, B: Array, *, theta: float = 0.08,
           max_levels: int = 10, coarse_size: int = 100,
           smoother: str = "chebyshev", degree: int = 2,
-          coarsener: str = "mis", precision=None) -> GAMGSetup:
+          coarsener: str = "mis", precision=None,
+          coarse_eq_limit: "int | None" = None) -> GAMGSetup:
     """Cold GAMG setup on the block format (no scalar expansion anywhere).
 
     ``coarsener`` selects the aggregation path: ``"mis"`` (default) keeps
@@ -105,6 +111,11 @@ def setup(A: BlockCSR, B: Array, *, theta: float = 0.08,
     full fp64).  The *setup* math (strength, aggregation, prolongator
     smoothing) always runs at the operator dtype; the policy governs what
     ``recompute`` builds and what the solves run at.
+
+    ``coarse_eq_limit`` is the distributed placement hint (equations per
+    rank at or below which a level is agglomerated, PETSc's
+    ``-pc_gamg_process_eq_limit``); the single-device path ignores it and
+    ``repro.dist.solver.build_dist_gamg`` consumes it.
     """
     from repro.kernels.backend import resolve_precision
     precision = resolve_precision(precision)
@@ -148,7 +159,7 @@ def setup(A: BlockCSR, B: Array, *, theta: float = 0.08,
     return GAMGSetup(levels=levels, coarse_struct=Acur, bs_fine=A.br,
                      nns_dim=nns, smoother=smoother, degree=degree,
                      theta=theta, coarsener=coarsener, stats=stats,
-                     precision=precision)
+                     precision=precision, coarse_eq_limit=coarse_eq_limit)
 
 
 def _repair_small_aggregates(aggr: Aggregation, graph, min_size: int
@@ -176,14 +187,19 @@ def _repair_small_aggregates(aggr: Aggregation, graph, min_size: int
 # Hot numeric recompute (the paper's state-gated PtAP chain).
 # ---------------------------------------------------------------------------
 
-def _level_state(ls: LevelSetup, a_data: Array,
-                 policy: PrecisionPolicy = None) -> LevelState:
+def level_state(ls: LevelSetup, a_data: Array,
+                policy: PrecisionPolicy = None) -> LevelState:
     """Numeric level state from hierarchy-dtype payloads ``a_data``.
 
     The dense diagonal inversion runs at ``policy.factor_dtype`` (LAPACK
     has no sub-f32 kernels) and the D^{-1}A scaling accumulates at
     ``policy.accum_dtype``; everything is *stored* at the hierarchy dtype.
     A full-fp64 policy leaves every operation bitwise unchanged.
+
+    Shared verbatim by the scalar baseline (``scalar_path``) and the
+    distributed path's agglomerated levels (``repro.dist.solver``) — the
+    rank-redundant replicated tail IS the single-device computation, which
+    is what makes agglomerated-vs-single parity exact by construction.
     """
     policy = policy or PrecisionPolicy.double()
     h = jnp.dtype(policy.hierarchy_dtype)
@@ -236,7 +252,7 @@ def recompute(setupd: GAMGSetup, a_fine_data: Array) -> Hierarchy:
     states = []
     a_data = a_in.astype(h)
     for ls in setupd.levels:
-        states.append(_level_state(ls, a_data, policy))
+        states.append(level_state(ls, a_data, policy))
         a_data = ptap_numeric_data(ls.ptap_cache, a_data,
                                    ls.P.data.astype(h),
                                    accum_dtype=policy.kernel_accum_dtype)

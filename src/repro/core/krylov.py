@@ -65,6 +65,13 @@ def pcg(apply_a: Callable[[Array], Array],
     convergence monitor) stays at the Krylov dtype while the AMG V-cycle
     runs on a reduced-precision hierarchy (``PrecisionPolicy``).  ``None``
     or ``b.dtype`` leaves the call chain bitwise unchanged.
+
+    Breakdown floor: the relative-residual denominator is floored at
+    ``finfo(b.dtype).tiny`` — a *dtype-aware* floor, because a literal
+    like 1e-300 underflows to 0 below f64 and turns the ``b == 0`` case
+    into a 0/0 NaN ``relres``.  An all-zero right-hand side therefore
+    reports ``converged=True, iters=0, relres=0`` at every Krylov dtype
+    (``x = 0`` is its exact solution).
     """
     apply_m = wrap_precond(apply_m, precond_dtype, b.dtype)
     x = jnp.zeros_like(b) if x0 is None else x0
@@ -72,7 +79,7 @@ def pcg(apply_a: Callable[[Array], Array],
     z = apply_m(r)
     p = z
     rz = jnp.vdot(r, z)
-    bnorm = jnp.maximum(jnp.linalg.norm(b), 1e-300)
+    bnorm = jnp.maximum(jnp.linalg.norm(b), jnp.finfo(b.dtype).tiny)
     rnorm = jnp.linalg.norm(r)
 
     def cond(state):

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.block_csr import BlockCSR
-from repro.core.gamg import GAMGSetup, _level_state
+from repro.core.gamg import GAMGSetup, level_state
 from repro.core.ptap import ptap_numeric_data
 from repro.core.scalar_csr import expand_bcsr
 from repro.core.vcycle import Hierarchy, LevelState
@@ -102,7 +102,7 @@ def recompute_scalar(setupd: GAMGSetup, a_fine_data: Array) -> Hierarchy:
     states = []
     a_data = jnp.asarray(a_fine_data).astype(h)
     for ls in setupd.levels:
-        blocked = _level_state(ls, a_data, policy)   # reuse dinv + lam
+        blocked = level_state(ls, a_data, policy)    # reuse dinv + lam
         A = ls.A0.with_data(a_data)
         a_ell = expand_bcsr(A).to_ell()
         p_ell = expand_bcsr(ls.P).to_ell().astype(h)

@@ -64,7 +64,8 @@ def lambda_max_dinv_a(ell_indices: Array, dinva_ell_data: Array,
 
     def body(_, x):
         y = spmv(x)
-        return y / jnp.maximum(jnp.linalg.norm(y), 1e-300)
+        # finfo tiny, not a literal: 1e-300 underflows to 0 below f64
+        return y / jnp.maximum(jnp.linalg.norm(y), jnp.finfo(y.dtype).tiny)
 
     x = jax.lax.fori_loop(0, iters, body, x0)
     y = spmv(x)

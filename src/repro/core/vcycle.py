@@ -147,7 +147,10 @@ def pbjacobi_smooth(lv: LevelState, b: Array, x: Array,
                                b, x, its, omega)
 
 
-def _smooth(lv, b, x, smoother: str, degree: int):
+def apply_smoother(lv, b, x, smoother: str, degree: int):
+    """Smoother-name dispatch — the single source of truth shared by the
+    V-cycle here and the distributed path's replicated (agglomerated)
+    levels, whose exact-parity argument depends on running this verbatim."""
     if smoother == "chebyshev":
         return chebyshev_smooth(lv, b, x, degree=degree)
     return pbjacobi_smooth(lv, b, x, its=degree)
@@ -170,7 +173,7 @@ def vcycle(hier: Hierarchy, b: Array, smoother: str = "chebyshev",
     x_stack = []
     rhs = b
     for lv in hier.levels:
-        x = _smooth(lv, rhs, jnp.zeros_like(rhs), smoother, degree)
+        x = apply_smoother(lv, rhs, jnp.zeros_like(rhs), smoother, degree)
         r = rhs - apply_ell(lv.a_ell, x)
         bs_stack.append(rhs)
         x_stack.append(x)
@@ -179,7 +182,7 @@ def vcycle(hier: Hierarchy, b: Array, smoother: str = "chebyshev",
     for lv, rhs_l, x in zip(reversed(hier.levels), reversed(bs_stack),
                             reversed(x_stack)):
         x = x + apply_ell(lv.p_ell, xc)       # prolong + correct
-        xc = _smooth(lv, rhs_l, x, smoother, degree)
+        xc = apply_smoother(lv, rhs_l, x, smoother, degree)
     return xc
 
 

@@ -7,7 +7,11 @@
                 prolongator operand (P_oth) cached device-side.
 ``solver``      ``build_dist_gamg`` / ``make_dist_solver`` — the full
                 device-resident hot path (numeric hierarchy recompute +
-                AMG-preconditioned CG) as one ``shard_map`` program.
+                AMG-preconditioned CG) as one ``shard_map`` program, with
+                per-level placement: fine levels slab-sharded, coarse
+                levels agglomerated into a replicated rank-redundant tail
+                below the ``coarse_eq_limit`` equations-per-rank threshold
+                (PETSc GAMG process reduction).
 ``selftest``    subprocess entry point asserting distributed == single
                 device parity (``python -m repro.dist.selftest <m>``).
 """

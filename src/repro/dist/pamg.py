@@ -22,6 +22,23 @@ device (hot, the ``*_apply`` / ``halo_window`` functions)
     ``all_gather`` fallback when a plan's reach exceeds the neighbor
     window.
 
+Agglomerated (replicated) coarse levels add a third input layout: when the
+placement policy in ``repro.dist.solver`` takes a level off the sharded
+path, its operands live *replicated* on every rank and operator applies do
+zero communication.  Two pieces here support that:
+
+* ``Halo.strategy == "replicated"`` — the input vector is already global,
+  ``halo_window`` is the identity and plan indices are plain global block
+  coordinates (``build_dist_ell(..., replicated_cols=True)`` emits them).
+  Used by the boundary prolongator that re-slices the replicated coarse
+  correction back into row slabs.
+* the **gather-boundary plans** ``build_row_gather`` /
+  ``build_payload_gather`` — window ids that reassemble a global vector /
+  payload array from one ``all_gather`` of the padded per-rank slabs.  The
+  switch level crosses the sharded->replicated boundary with exactly one
+  such gather per V-cycle (restriction) and one per recompute (the
+  Galerkin payload of the first replicated operator).
+
 Padding discipline (what keeps the padded lanes exact):
     every payload slab is padded to ``max_count + 1`` so its last slot is
     guaranteed zero; padded plan entries either gather that zero slot or
@@ -52,10 +69,16 @@ AXIS = "rank"
 
 @dataclasses.dataclass(frozen=True)
 class Halo:
-    """Exchange pattern for one sharded operand axis."""
+    """Exchange pattern for one sharded operand axis.
+
+    ``"replicated"`` marks an operand whose input vector is already global
+    on every rank (an agglomerated level's correction): the window is the
+    vector itself and no exchange happens — the all-gather that made it
+    global is accounted at the switch boundary, not here.
+    """
 
     width: int       # neighbor hops each side (0 = purely local)
-    strategy: str    # "local" | "ppermute" | "allgather"
+    strategy: str    # "local" | "ppermute" | "allgather" | "replicated"
     cpad: int        # padded slab length of the exchanged axis
     ndev: int
 
@@ -63,13 +86,17 @@ class Halo:
     def window_len(self) -> int:
         if self.strategy == "allgather":
             return self.cpad * self.ndev
+        if self.strategy == "replicated":
+            return self.cpad
         return self.cpad * (2 * self.width + 1)
 
     @property
     def exchanged_slabs(self) -> int:
         """Slabs moved per rank per exchange (the halo traffic unit)."""
-        return 0 if self.strategy == "local" else (
-            self.ndev - 1 if self.strategy == "allgather" else 2 * self.width)
+        if self.strategy in ("local", "replicated"):
+            return 0
+        return (self.ndev - 1 if self.strategy == "allgather"
+                else 2 * self.width)
 
 
 def make_halo(width: int, cpad: int, ndev: int) -> Halo:
@@ -85,6 +112,8 @@ def make_halo(width: int, cpad: int, ndev: int) -> Halo:
 def window_coords(halo: Halo, owner: np.ndarray, local: np.ndarray,
                   rank: int) -> np.ndarray:
     """Host: window coordinate of (owner, slab-local) seen from ``rank``."""
+    if halo.strategy == "replicated":
+        return local                     # the window IS the global vector
     if halo.strategy == "allgather":
         return owner * halo.cpad + local
     return (owner - rank + halo.width) * halo.cpad + local
@@ -92,6 +121,8 @@ def window_coords(halo: Halo, owner: np.ndarray, local: np.ndarray,
 
 def center_coord(halo: Halo, rank: int) -> int:
     """A always-valid in-window coordinate for padded plan entries."""
+    if halo.strategy == "replicated":
+        return 0
     if halo.strategy == "allgather":
         return rank * halo.cpad
     return halo.width * halo.cpad
@@ -105,7 +136,7 @@ def halo_window(x: Array, halo: Halo) -> Array:
     ``x`` itself (local).  Edge ranks receive zero slabs, which padded plan
     entries never address.
     """
-    if halo.strategy == "local":
+    if halo.strategy in ("local", "replicated"):
         return x
     if halo.strategy == "allgather":
         return lax.all_gather(x, AXIS, axis=0, tiled=True)
@@ -119,6 +150,39 @@ def halo_window(x: Array, halo: Halo) -> Array:
                 if 0 <= i - d < halo.ndev]
         parts.append(lax.ppermute(x, AXIS, perm))
     return jnp.concatenate(parts, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Gather-boundary plans (the sharded -> replicated switch)
+# ---------------------------------------------------------------------------
+
+def build_row_gather(part: RowPartition, pad: int) -> np.ndarray:
+    """Host: window id of every global block row in an all-gathered stack.
+
+    ``lax.all_gather(slab, tiled=True)`` of per-rank ``(pad, ...)`` slabs
+    yields ``(ndev*pad, ...)``; indexing it with the returned ``(nrows,)``
+    map reassembles the *global* unpadded vector — the one all-gather an
+    agglomerated level costs per V-cycle.
+    """
+    rows = np.arange(part.nrows)
+    owner = part.owner_of(rows)
+    return owner * pad + (rows - part.starts[owner])
+
+
+def build_payload_gather(indptr: np.ndarray, part: RowPartition,
+                         pad: int) -> np.ndarray:
+    """Host: window ids reassembling a global ``(nnzb, ...)`` payload from
+    all-gathered per-rank payload slabs (slab r holds the nnz of r's rows,
+    padded to ``pad``).  The recompute-side twin of ``build_row_gather`` —
+    used once per ``_rank_recompute`` at the switch level to hand the
+    first replicated operator its Galerkin payload.
+    """
+    nbr = len(indptr) - 1
+    rows = np.repeat(np.arange(nbr), np.diff(indptr))
+    nnz_starts = indptr[part.starts]
+    owner = part.owner_of(rows)
+    local = np.arange(len(rows), dtype=np.int64) - nnz_starts[owner]
+    return owner * pad + local
 
 
 # ---------------------------------------------------------------------------
@@ -148,12 +212,19 @@ class DistEll:
 def build_dist_ell(A: BlockCSR, row_part: RowPartition,
                    col_part: RowPartition, *,
                    payload_pad: Optional[int] = None,
-                   const_data: Optional[np.ndarray] = None) -> DistEll:
+                   const_data: Optional[np.ndarray] = None,
+                   replicated_cols: bool = False) -> DistEll:
     """Host: shard a BlockCSR's padded-ELL form over row slabs.
 
     Exactly one of ``payload_pad`` (runtime values, gather map into the
     rank's padded nnz slab whose last slot is zero) or ``const_data``
     (global (nnzb, br, bc) numpy payloads baked per rank) must be given.
+
+    ``replicated_cols=True`` declares the input vector *replicated* (an
+    agglomerated level's global correction): indices stay global block
+    coordinates, the halo is ``"replicated"`` (identity window, zero
+    traffic).  Only meaningful with ``const_data`` (the boundary
+    prolongator).
     """
     assert (payload_pad is None) != (const_data is None)
     ndev = row_part.ndev
@@ -166,11 +237,17 @@ def build_dist_ell(A: BlockCSR, row_part: RowPartition,
     idx[:, :plan.indices.shape[1]] = plan.indices
     msk[:, :plan.mask.shape[1]] = plan.mask
     gat[:, :plan.gather.shape[1]] = plan.gather
-    rank_of_row = row_part.owner_of(np.arange(nbr))
-    owner = col_part.owner_of(idx)
-    dist = np.abs(np.where(msk, owner - rank_of_row[:, None], 0))
-    width = int(dist.max()) if dist.size else 0
-    halo = make_halo(width, col_part.max_count, ndev)
+    if replicated_cols:
+        assert const_data is not None, \
+            "replicated_cols needs a constant payload"
+        halo = Halo(0, "replicated", A.nbc, ndev)
+        owner = np.zeros_like(idx)
+    else:
+        rank_of_row = row_part.owner_of(np.arange(nbr))
+        owner = col_part.owner_of(idx)
+        dist = np.abs(np.where(msk, owner - rank_of_row[:, None], 0))
+        width = int(dist.max()) if dist.size else 0
+        halo = make_halo(width, col_part.max_count, ndev)
     rpad = max(row_part.max_count, 1)
     col_local = idx - col_part.starts[owner]
 

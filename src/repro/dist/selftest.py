@@ -27,6 +27,18 @@ Checks, on an m^3 Q1 elasticity problem:
     solution.  The *parity* sections above always pin ``precision="f64"``
     — exact iteration parity is an fp64 contract, and the env override
     must not silently weaken it.
+  * with ``REPRO_SELFTEST_AGG=1``: the **agglomerated placement** — a
+    hierarchy with at least one mid level replicated (threshold forced
+    high) solves in *exactly* the same iteration count as the
+    sharded-only placement of the same setup and as the single-device
+    solver, to an allclose solution; with ``REPRO_SELFTEST_MRHS=1`` the
+    panel goes through the agglomerated program too (per-column parity).
+    The sharded baselines in the sections above pin
+    ``coarse_eq_limit=0`` so their coverage of the ppermute paths never
+    silently shrinks as placement defaults evolve.
+  * always: scatter staging dtypes are the *policy's*, not the caller's —
+    an f32-cast payload/rhs stages at the same dtype as the f64 one
+    (same compiled program, no retrace, no dtype poisoning).
 
 Prints ``OK`` on success (asserts otherwise).
 """
@@ -62,13 +74,23 @@ def main(m: int) -> int:
                              maxiter=200, precision="f64")
     ref0 = solver.solve(prob.b)
 
-    # distributed: cold staging + hot solve
+    # distributed: cold staging + hot solve (placement pinned fully
+    # sharded — the agglomerated placement is checked against this below)
     mesh = jax.make_mesh((ndev,), ("rank",))
-    dg = build_dist_gamg(setupd, ndev)
+    dg = build_dist_gamg(setupd, ndev, coarse_eq_limit=0)
     args = dg.sharded_args(setupd)
     run = make_dist_solver(dg, setupd, mesh, rtol=1e-8, maxiter=200)
     a0 = dg.scatter_fine_payloads(prob.A.data)
     b = dg.scatter_vector(prob.b)
+
+    # scatter staging is policy-dtyped, never caller-dtyped: an f32-cast
+    # update stages identically to the f64 one (no retrace, no poisoning)
+    a0_32 = dg.scatter_fine_payloads(np.asarray(prob.A.data, np.float32))
+    b_32 = dg.scatter_vector(np.asarray(prob.b, np.float32))
+    assert a0_32.dtype == a0.dtype == dg.payload_stage_dtype, \
+        (a0_32.dtype, a0.dtype, dg.payload_stage_dtype)
+    assert b_32.dtype == b.dtype == setupd.precision.krylov_dtype, \
+        (b_32.dtype, b.dtype)
     x, iters, relres, ok = jax.block_until_ready(run(args, a0, b))
     x_g = dg.gather_vector(x)
 
@@ -101,7 +123,7 @@ def main(m: int) -> int:
     # ungated: rebuild the prolongator-side staging from scratch; results
     # must be identical to the gated path (paper Table 3's ablation only
     # costs time, never accuracy)
-    dg2 = build_dist_gamg(setupd, ndev)
+    dg2 = build_dist_gamg(setupd, ndev, coarse_eq_limit=0)
     run2 = make_dist_solver(dg2, setupd, mesh, rtol=1e-8, maxiter=200)
     x2, it2, _, ok2 = jax.block_until_ready(
         run2(dg2.sharded_args(setupd), dg2.scatter_fine_payloads(a_new), b))
@@ -132,6 +154,71 @@ def main(m: int) -> int:
         print(f"mrhs (k={B3.shape[1]}) parity: "
               f"iters={np.asarray(itm[0]).tolist()}")
 
+    if os.environ.get("REPRO_SELFTEST_AGG") == "1":
+        # agglomerated placement: force the threshold high so every level
+        # above the finest is replicated, then demand *exact* iteration
+        # parity with the sharded-only placement of the same setup (an
+        # fp64 contract, like the sections above).  When the main setup
+        # has no mid level to replicate, coarsen deeper.
+        if len(setupd.levels) >= 2:
+            setup_a, a_vals, b_a = setupd, a_new, b
+            dg_sh, run_sh = dg, run
+            sh_x, sh_iters = x1, int(it1[0])
+        else:
+            setup_a = gamg.setup(prob.A, prob.B, coarse_size=12,
+                                 precision="f64")
+            assert len(setup_a.levels) >= 2, setup_a.stats["level_rows"]
+            a_vals = prob.A.data
+            dg_sh = build_dist_gamg(setup_a, ndev, coarse_eq_limit=0)
+            run_sh = make_dist_solver(dg_sh, setup_a, mesh, rtol=1e-8,
+                                      maxiter=200)
+            b_a = dg_sh.scatter_vector(prob.b)
+            xs, its, _, oks = jax.block_until_ready(
+                run_sh(dg_sh.sharded_args(setup_a),
+                       dg_sh.scatter_fine_payloads(a_vals), b_a))
+            assert bool(oks[0])
+            sh_x, sh_iters = xs, int(its[0])
+        dg_ag = build_dist_gamg(setup_a, ndev, coarse_eq_limit=1 << 30)
+        assert dg_ag.repl and len(dg_ag.levels) == 1, dg_ag.placement
+        assert not dg_sh.repl, dg_sh.placement
+        run_ag = make_dist_solver(dg_ag, setup_a, mesh, rtol=1e-8,
+                                  maxiter=200)
+        args_ag = dg_ag.sharded_args(setup_a)
+        a0_ag = dg_ag.scatter_fine_payloads(a_vals)
+        xa, ita, rra, oka = jax.block_until_ready(run_ag(args_ag, a0_ag,
+                                                         b_a))
+        assert bool(oka[0]), (ita, rra)
+        assert int(ita[0]) == sh_iters, \
+            f"agg parity: agglomerated={int(ita[0])} sharded={sh_iters}"
+        np.testing.assert_allclose(dg_ag.gather_vector(xa),
+                                   dg_sh.gather_vector(sh_x),
+                                   rtol=1e-6, atol=1e-9)
+        print(f"agglomerated parity: iters={int(ita[0])} "
+              f"placement={dg_ag.placement}")
+        if os.environ.get("REPRO_SELFTEST_MRHS") == "1":
+            # the panel through the agglomerated program: per-column
+            # parity with the sharded placement
+            rng_a = np.random.default_rng(0)
+            Ba = np.stack(
+                [np.asarray(prob.b),
+                 0.5 * np.asarray(prob.b) + rng_a.standard_normal(prob.n),
+                 rng_a.standard_normal(prob.n)], axis=1)
+            xm_s, itm_s, _, okm_s = jax.block_until_ready(
+                run_sh(dg_sh.sharded_args(setup_a),
+                       dg_sh.scatter_fine_payloads(a_vals),
+                       dg_sh.scatter_vector(Ba)))
+            xm_a, itm_a, _, okm_a = jax.block_until_ready(
+                run_ag(args_ag, a0_ag, dg_ag.scatter_vector(Ba)))
+            assert bool(np.asarray(okm_s[0]).all())
+            assert bool(np.asarray(okm_a[0]).all())
+            assert np.array_equal(np.asarray(itm_a[0]),
+                                  np.asarray(itm_s[0])), (itm_a, itm_s)
+            np.testing.assert_allclose(dg_ag.gather_vector(xm_a),
+                                       dg_sh.gather_vector(xm_s),
+                                       rtol=1e-6, atol=1e-9)
+            print(f"agglomerated mrhs (k={Ba.shape[1]}) parity: "
+                  f"iters={np.asarray(itm_a[0]).tolist()}")
+
     prec = os.environ.get("REPRO_PRECISION")
     if prec and prec not in ("f64", "fp64", "float64", "double"):
         # reduced-precision-resident distributed hierarchy: fp64 outer CG,
@@ -150,7 +237,11 @@ def main(m: int) -> int:
         np.testing.assert_allclose(dg_p.gather_vector(xp),
                                    np.asarray(ref0.x), rtol=1e-5, atol=1e-7)
         h_dt = setup_p.precision.hierarchy_dtype
-        assert dg_p.levels[0].p_op.data.dtype == h_dt
+        # level 0's prolongator moves to the switch boundary when the
+        # default placement agglomerates the first mid level
+        p_stage = (dg_p.levels[0].p_op if dg_p.levels[0].p_op is not None
+                   else dg_p.switch.p_b)
+        assert p_stage.data.dtype == h_dt
         print(f"reduced precision ({prec}): iters={int(itp[0])} "
               f"(f64 ref {int(ref0.iters)}) relres={float(rrp[0]):.3e}")
 

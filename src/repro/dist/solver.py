@@ -16,6 +16,27 @@ prolongator-side cache, including the pre-gathered off-process P rows
     solve       AMG-preconditioned CG with ``psum`` reductions and halo
                 windows for every level SpMV.
 
+Level placement (the coarse-grid agglomeration of PETSc GAMG's process
+reduction): coarse levels hold a few thousand rows per rank, where halo
+*latency* — not bandwidth — dominates, so sharding them across all ranks
+is a net loss.  ``build_dist_gamg`` therefore assigns every level a
+placement: levels above the ``coarse_eq_limit`` equations-per-rank
+threshold stay slab-sharded as before; levels at or below it are
+**agglomerated** — their operator payloads, P/R transfers and smoother
+data are reassembled once per recompute into a *replicated* global
+representation (``DistReplicatedLevel``) and the V-cycle runs them
+rank-redundantly with zero ppermute traffic.  The sharded->replicated
+boundary (``DistSwitch``) costs exactly one ``all_gather`` per V-cycle
+(the restriction of the fine residual) and one per recompute (the
+Galerkin payload of the first replicated operator); the prolongation
+re-slices the replicated correction back into row slabs with a
+zero-communication ``"replicated"``-halo operator.  The replicated tail
+runs the *single-device* core functions (``gamg.level_state``,
+``ptap_numeric_data``, ``vcycle``'s smoothers, dense ``cho_solve``)
+verbatim, so agglomerated-vs-single-device f64 parity is exact by
+construction — and therefore so is sharded-vs-agglomerated iteration
+parity, which ``repro.dist.selftest`` asserts.
+
 Parity with the single-device path is exact in structure (same contribution
 order per row, same plans) and floating-point-tight in value (the only
 reassociations are the ``psum`` dot products), which is what
@@ -33,16 +54,27 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec
 
-from repro.core.gamg import GAMGSetup
+from repro.core.block_csr import BlockCSR, BlockELL
+from repro.core.gamg import GAMGSetup, LevelSetup, coarse_cholesky, \
+    level_state
 from repro.core.krylov import wrap_precond
 from repro.core.precision import PrecisionPolicy
-from repro.core.vcycle import chebyshev_recurrence, pbjacobi_recurrence
+from repro.core.ptap import ptap_numeric_data
+from repro.core.spmv import apply_ell
+from repro.core.vcycle import (
+    LevelState,
+    apply_smoother,
+    chebyshev_recurrence,
+    pbjacobi_recurrence,
+)
 from repro.dist.pamg import (
     AXIS,
     DistEll,
     DistPairStage,
     build_diag_sel,
     build_dist_ell,
+    build_payload_gather,
+    build_row_gather,
     build_stage1,
     build_stage2,
     dist_ell_apply,
@@ -51,6 +83,12 @@ from repro.dist.pamg import (
 )
 from repro.dist.partition import RowPartition, partition_rows
 from repro.multirhs.block_krylov import block_pcg
+
+#: Default agglomeration threshold, in equations per rank (the PETSc
+#: ``-pc_gamg_process_eq_limit`` default): a level whose global equation
+#: count divided by ``ndev`` is at or below this leaves the fully-sharded
+#: path.  ``coarse_eq_limit=0`` disables agglomeration entirely.
+DEFAULT_COARSE_EQ_LIMIT = 50
 
 Array = jax.Array
 P = PartitionSpec
@@ -62,11 +100,16 @@ P = PartitionSpec
 
 @dataclasses.dataclass
 class DistLevel:
-    """Per-level rank-sharded plans (host numpy, stacked (ndev, ...))."""
+    """Per-level rank-sharded plans (host numpy, stacked (ndev, ...)).
+
+    ``p_op``/``r_op`` are ``None`` on the last sharded level when a
+    replicated tail follows — the transfers across the placement boundary
+    live in ``DistSwitch`` instead.
+    """
 
     a_op: DistEll
-    p_op: DistEll
-    r_op: DistEll
+    p_op: Optional[DistEll]
+    r_op: Optional[DistEll]
     stage1: DistPairStage
     stage2: DistPairStage
     diag_sel: np.ndarray
@@ -81,7 +124,12 @@ class DistLevel:
 
 @dataclasses.dataclass
 class DistCoarse:
-    """Replicated coarsest-level solve data (the level is tiny)."""
+    """Replicated coarsest-level solve data (the level is tiny).
+
+    Only staged when *no* AMG level is agglomerated — with a replicated
+    tail the coarsest payload is already global and the Cholesky needs no
+    gather of its own.
+    """
 
     part: RowPartition
     sel: np.ndarray               # (nnzb,) window ids into gathered payload
@@ -95,6 +143,44 @@ class DistCoarse:
 
 
 @dataclasses.dataclass
+class DistReplicatedLevel:
+    """One agglomerated level: the rank-redundant global representation.
+
+    The staging is deliberately thin — the level IS the single-device
+    level.  ``ls`` carries the global plans (A-ELL, PtAP cache, P/R
+    payloads) that ``gamg.level_state`` / ``ptap_numeric_data`` consume;
+    the hot path closes over them as replicated constants, so the V-cycle
+    on this level does zero communication.
+    """
+
+    ls: LevelSetup
+    n_eqs: int                    # global equations (the placement metric)
+
+
+@dataclasses.dataclass
+class DistSwitch:
+    """Gather-boundary staging where placement flips sharded->replicated.
+
+    ``payload_sel``/``row_sel`` are the gather-boundary plans
+    (``repro.dist.pamg.build_payload_gather`` / ``build_row_gather``):
+    window ids into one ``all_gather`` of the last sharded level's padded
+    slabs that reassemble the global Galerkin payload (recompute) and the
+    global fine residual (restriction).  ``r_ell`` is the global
+    restriction applied rank-redundantly after that gather; ``p_b`` is the
+    boundary prolongator — sharded fine rows whose plan indices address
+    the *replicated* coarse correction directly (``"replicated"`` halo,
+    zero traffic).
+    """
+
+    payload_sel: np.ndarray       # (nnzb,) into gathered stage2 payload slabs
+    row_sel: np.ndarray           # (nbr_fine,) into gathered residual slabs
+    r_ell: BlockELL               # global restriction at hierarchy dtype
+    p_b: DistEll                  # slab rows <- replicated coarse vector
+    nbr_c: int                    # replicated coarse vector block rows
+    bs_c: int
+
+
+@dataclasses.dataclass
 class DistGAMG:
     """Cold distributed staging — valid while the setup's structures hold.
 
@@ -103,29 +189,58 @@ class DistGAMG:
     ``hierarchy_dtype``, the rank-local recompute/V-cycle runs at that
     dtype (halving the halo/ppermute payload for f32), and the outer
     distributed PCG stays at ``krylov_dtype`` with the boundary cast.
+
+    Placement: ``levels`` holds only the slab-sharded levels; ``repl``
+    the agglomerated (replicated) tail, ``switch`` the gather boundary
+    between them (``None`` when nothing is agglomerated, in which case
+    ``coarse`` carries the legacy replicated-Cholesky staging).  Level 0
+    always stays sharded — the scatter/gather front doors and the outer
+    Krylov iteration are slab contracts.
     """
 
     ndev: int
     parts: List[RowPartition]     # per level, + the coarsest
-    levels: List[DistLevel]
-    coarse: DistCoarse
+    levels: List[DistLevel]       # the slab-sharded prefix
+    coarse: Optional[DistCoarse]  # legacy coarsest staging (no repl tail)
     smoother: str
     degree: int
     precision: PrecisionPolicy = dataclasses.field(
         default_factory=PrecisionPolicy.double)
+    repl: List[DistReplicatedLevel] = dataclasses.field(default_factory=list)
+    switch: Optional[DistSwitch] = None
+    coarse_struct: Optional[BlockCSR] = None   # coarsest structure (repl tail)
+    coarse_eq_limit: int = 0
+
+    @property
+    def n_levels(self) -> int:
+        """AMG levels (sharded + replicated), excluding the coarsest."""
+        return len(self.levels) + len(self.repl)
+
+    @property
+    def placement(self) -> List[str]:
+        """Per-level placement tags (+ the coarsest, always replicated)."""
+        return (["sharded"] * len(self.levels)
+                + ["replicated"] * len(self.repl) + ["replicated"])
 
     # ---- args bundle (the sharded operands of the hot program) ----------
     def sharded_args(self, setupd: Optional[GAMGSetup] = None):
         del setupd  # staged at build time; kept for the call-site shape
         lv_args = []
         for lv in self.levels:
+            if lv.p_op is not None:
+                transfers = dict(
+                    p_idx=jnp.asarray(lv.p_op.indices),
+                    p_data=jnp.asarray(lv.p_op.data),
+                    r_idx=jnp.asarray(lv.r_op.indices),
+                    r_data=jnp.asarray(lv.r_op.data))
+            else:   # switch boundary: the re-slicing prolongator's slabs
+                transfers = dict(
+                    pb_idx=jnp.asarray(self.switch.p_b.indices),
+                    pb_data=jnp.asarray(self.switch.p_b.data))
             lv_args.append(dict(
+                transfers,
                 a_idx=jnp.asarray(lv.a_op.indices),
                 a_gather=jnp.asarray(lv.a_op.gather),
-                p_idx=jnp.asarray(lv.p_op.indices),
-                p_data=jnp.asarray(lv.p_op.data),
-                r_idx=jnp.asarray(lv.r_op.indices),
-                r_data=jnp.asarray(lv.r_op.data),
                 s1_lhs=jnp.asarray(lv.stage1.lhs_gather),
                 s1_rhs=jnp.asarray(lv.stage1.rhs_data),
                 s1_seg=jnp.asarray(lv.stage1.seg),
@@ -139,11 +254,29 @@ class DistGAMG:
         return {"levels": lv_args}
 
     # ---- host-side scatter/gather (edges of the device-resident region) -
+    @property
+    def payload_stage_dtype(self) -> np.dtype:
+        """Staging dtype of the fine payload slabs: wide enough for both
+        the hierarchy chain (cast down once at the top of the rank
+        recompute) and the mixed-policy krylov-dtype operator copy
+        (``a_data_kr``).  Staging at the *policy's* dtype rather than the
+        caller's means an fp64 operator update into an fp32-resident
+        hierarchy neither retraces the jitted hot program nor poisons the
+        staged dtype."""
+        return np.dtype(jnp.promote_types(self.precision.hierarchy_dtype,
+                                          self.precision.krylov_dtype))
+
     def scatter_fine_payloads(self, data: Array) -> Array:
-        """Global (nnzb, bs, bs) fine values -> (ndev, a_pad, bs, bs)."""
+        """Global (nnzb, bs, bs) fine values -> (ndev, a_pad, bs, bs).
+
+        Slabs are allocated at ``payload_stage_dtype`` (policy-derived,
+        never the caller's dtype) so repeat updates at varying caller
+        dtypes hit the same compiled program.
+        """
         data = np.asarray(data)
         lv = self.levels[0]
-        out = np.zeros((self.ndev, lv.a_pad) + data.shape[1:], data.dtype)
+        out = np.zeros((self.ndev, lv.a_pad) + data.shape[1:],
+                       self.payload_stage_dtype)
         for r in range(self.ndev):
             s, e = int(lv.a_nnz_starts[r]), int(lv.a_nnz_starts[r + 1])
             out[r, :e - s] = data[s:e]
@@ -151,12 +284,14 @@ class DistGAMG:
 
     def scatter_vector(self, b: Array) -> Array:
         """Global fine vector (n,) or panel (n, k) -> (ndev, rpad, bs[, k])
-        padded slabs."""
+        padded slabs, staged at the policy's ``krylov_dtype`` (the dtype
+        the outer distributed PCG runs at — never the caller's)."""
         lv, part = self.levels[0], self.parts[0]
         b = np.asarray(b)
         trailing = b.shape[1:]
         b2 = b.reshape((part.nrows, lv.bs) + trailing)
-        out = np.zeros((self.ndev, lv.rpad, lv.bs) + trailing, b2.dtype)
+        out = np.zeros((self.ndev, lv.rpad, lv.bs) + trailing,
+                       np.dtype(self.precision.krylov_dtype))
         for r in range(self.ndev):
             sl = part.slab(r)
             out[r, :sl.stop - sl.start] = b2[sl]
@@ -171,20 +306,53 @@ class DistGAMG:
         return cat.reshape((-1,) + xs.shape[3:])
 
 
-def build_dist_gamg(setupd: GAMGSetup, ndev: int) -> DistGAMG:
+def _placement_split(setupd: GAMGSetup, ndev: int, limit: int) -> int:
+    """First level index that leaves the fully-sharded path.
+
+    A level is agglomerated when its global equation count per rank is at
+    or below ``limit`` (PETSc's ``-pc_gamg_process_eq_limit`` rule).
+    Level 0
+    never qualifies — the fine level is the scatter/gather and outer-Krylov
+    slab contract.  Level sizes shrink monotonically, so the split is a
+    single index: ``levels[:split]`` sharded, ``levels[split:]`` replicated.
+    """
+    n = len(setupd.levels)
+    if limit <= 0:
+        return n
+    for li in range(1, n):
+        ls = setupd.levels[li]
+        if ls.n_fine * ls.A0.br <= limit * ndev:
+            return li
+    return n
+
+
+def build_dist_gamg(setupd: GAMGSetup, ndev: int, *,
+                    coarse_eq_limit: Optional[int] = None) -> DistGAMG:
     """Cold distributed staging of a single-device GAMG setup.
 
     Constant payloads (P, R, the cached P_oth) are staged at the policy's
     ``hierarchy_dtype`` — the distributed rendering of "the hierarchy is
     stored at hierarchy_dtype".
+
+    ``coarse_eq_limit`` is the placement threshold in equations per rank:
+    levels at or below it are agglomerated into the replicated tail (see module
+    docstring).  ``None`` defers to ``setupd.coarse_eq_limit`` and then to
+    ``DEFAULT_COARSE_EQ_LIMIT``; ``0`` keeps every level slab-sharded (the
+    pre-placement behaviour).
     """
     assert setupd.levels, "distributed path needs at least one AMG level"
+    if coarse_eq_limit is None:
+        coarse_eq_limit = setupd.coarse_eq_limit
+    if coarse_eq_limit is None:
+        coarse_eq_limit = DEFAULT_COARSE_EQ_LIMIT
+    n_sharded = _placement_split(setupd, ndev, coarse_eq_limit)
     h_np = setupd.precision.hierarchy_dtype
     parts = [partition_rows(ls.n_fine, ndev) for ls in setupd.levels]
     parts.append(partition_rows(setupd.coarse_struct.nbr, ndev))
     levels: List[DistLevel] = []
-    for li, ls in enumerate(setupd.levels):
+    for li, ls in enumerate(setupd.levels[:n_sharded]):
         fine, coarse = parts[li], parts[li + 1]
+        boundary = li == n_sharded - 1 and n_sharded < len(setupd.levels)
         A0 = ls.A0
         a_nnz_starts = A0.indptr[fine.starts]
         a_pad = int(np.diff(a_nnz_starts).max()) + 1
@@ -198,34 +366,57 @@ def build_dist_gamg(setupd: GAMGSetup, ndev: int) -> DistGAMG:
         rpad = max(fine.max_count, 1)
         row_mask = (np.arange(rpad)[None, :]
                     < fine.counts[:, None])
+        # at the switch boundary P/R are replaced by the gather-boundary
+        # operators in DistSwitch; don't stage the unused sharded forms
         levels.append(DistLevel(
             a_op=build_dist_ell(A0, fine, fine, payload_pad=a_pad),
-            p_op=build_dist_ell(ls.P, fine, coarse, const_data=p_np),
-            r_op=build_dist_ell(ls.R, coarse, fine,
-                                const_data=np.asarray(
-                                    ls.R.data).astype(h_np)),
+            p_op=None if boundary else
+                build_dist_ell(ls.P, fine, coarse, const_data=p_np),
+            r_op=None if boundary else
+                build_dist_ell(ls.R, coarse, fine,
+                               const_data=np.asarray(
+                                   ls.R.data).astype(h_np)),
             stage1=s1, stage2=s2, diag_sel=diag_sel, diag_mask=diag_mask,
             row_mask=row_mask, a_nnz_starts=a_nnz_starts, a_pad=a_pad,
             bs=A0.br, rpad=rpad, n_fine=ls.n_fine))
-    # replicated coarsest-level maps
-    Ac = setupd.coarse_struct
-    c_part = parts[-1]
-    ac_pad = levels[-1].stage2.out_pad
-    c_rows = np.repeat(np.arange(Ac.nbr), np.diff(Ac.indptr))
-    owner = c_part.owner_of(c_rows)
-    nnz_starts = Ac.indptr[c_part.starts]
-    local = np.arange(Ac.nnzb, dtype=np.int64) - nnz_starts[owner]
-    c_rpad = max(c_part.max_count, 1)
-    all_rows = np.arange(Ac.nbr)
-    row_owner = c_part.owner_of(all_rows)
-    coarse = DistCoarse(
-        part=c_part, sel=owner * ac_pad + local, rows=c_rows,
-        cols=np.asarray(Ac.indices, dtype=np.int64),
-        row_sel=row_owner * c_rpad + c_part.local_of(all_rows),
-        nbr=Ac.nbr, bs=Ac.br, rpad=c_rpad, ac_pad=ac_pad)
-    return DistGAMG(ndev=ndev, parts=parts, levels=levels, coarse=coarse,
-                    smoother=setupd.smoother, degree=setupd.degree,
-                    precision=setupd.precision)
+    repl = [DistReplicatedLevel(ls=ls, n_eqs=ls.n_fine * ls.A0.br)
+            for ls in setupd.levels[n_sharded:]]
+    switch = None
+    coarse_staging = None
+    if repl:
+        bls = setupd.levels[n_sharded - 1]       # last sharded level
+        first = repl[0].ls                       # first replicated level
+        fine = parts[n_sharded - 1]
+        switch = DistSwitch(
+            payload_sel=build_payload_gather(
+                first.A0.indptr, parts[n_sharded],
+                levels[-1].stage2.out_pad),
+            row_sel=build_row_gather(fine, max(fine.max_count, 1)),
+            r_ell=bls.r_ell.astype(h_np),
+            p_b=build_dist_ell(bls.P, fine, parts[n_sharded],
+                               const_data=np.asarray(
+                                   bls.P.data).astype(h_np),
+                               replicated_cols=True),
+            nbr_c=first.A0.nbr, bs_c=first.A0.br)
+    else:
+        # legacy replicated coarsest-level maps (no agglomerated tail)
+        Ac = setupd.coarse_struct
+        c_part = parts[-1]
+        ac_pad = levels[-1].stage2.out_pad
+        c_rpad = max(c_part.max_count, 1)
+        coarse_staging = DistCoarse(
+            part=c_part,
+            sel=build_payload_gather(Ac.indptr, c_part, ac_pad),
+            rows=np.repeat(np.arange(Ac.nbr), np.diff(Ac.indptr)),
+            cols=np.asarray(Ac.indices, dtype=np.int64),
+            row_sel=build_row_gather(c_part, c_rpad),
+            nbr=Ac.nbr, bs=Ac.br, rpad=c_rpad, ac_pad=ac_pad)
+    return DistGAMG(ndev=ndev, parts=parts, levels=levels,
+                    coarse=coarse_staging, smoother=setupd.smoother,
+                    degree=setupd.degree, precision=setupd.precision,
+                    repl=repl, switch=switch,
+                    coarse_struct=setupd.coarse_struct if repl else None,
+                    coarse_eq_limit=int(coarse_eq_limit))
 
 
 # ---------------------------------------------------------------------------
@@ -264,7 +455,8 @@ def _rank_lambda_max(lv: DistLevel, a_idx: Array, dinva_data: Array,
 
     def body(_, x):
         y = spmv(x)
-        return y / jnp.maximum(_pnorm(y), 1e-300)
+        # finfo tiny, not a literal: 1e-300 underflows to 0 below f64
+        return y / jnp.maximum(_pnorm(y), jnp.finfo(y.dtype).tiny)
 
     x = lax.fori_loop(0, iters, body, x0)
     return _pnorm(spmv(x))
@@ -277,6 +469,13 @@ def _rank_recompute(dg: DistGAMG, args, a_slab: Array):
     fine slab is cast once at the top); under a mixed policy level 0
     additionally keeps a krylov-dtype payload gather (``a_data_kr``) for
     the outer CG's operator, mirroring ``Hierarchy.a_fine_ell``.
+
+    With a replicated tail the sharded chain stops at the switch: the last
+    sharded stage2 payload slabs are all-gathered once, the gather-boundary
+    plan reassembles the first replicated operator's *global* payload, and
+    the tail recompute is the single-device chain
+    (``gamg.level_state`` + ``ptap_numeric_data``) run rank-redundantly —
+    identical arithmetic to the single-device hot recompute.
     """
     policy = dg.precision
     h = jnp.dtype(policy.hierarchy_dtype)
@@ -310,7 +509,18 @@ def _rank_recompute(dg: DistGAMG, args, a_slab: Array):
         a_cur = dist_stage_apply(a["s2_lhs"], ap_win[a["s2_rhs"]],
                                  a["s2_seg"], lv.stage2.out_pad,
                                  accum_dtype=acc)
-    chol = _rank_coarse_chol(dg, a_cur)
+    if dg.repl:
+        g = lax.all_gather(a_cur, AXIS, axis=0, tiled=True)
+        a_data = g[jnp.asarray(dg.switch.payload_sel)]
+        for rl in dg.repl:
+            states.append(level_state(rl.ls, a_data, policy))
+            a_data = ptap_numeric_data(rl.ls.ptap_cache, a_data,
+                                       rl.ls.P.data.astype(h),
+                                       accum_dtype=acc)
+        Ac = dg.coarse_struct.with_data(a_data)
+        chol = coarse_cholesky(Ac.to_dense(), policy)
+    else:
+        chol = _rank_coarse_chol(dg, a_cur)
     return states, chol
 
 
@@ -377,14 +587,50 @@ def _rank_smooth(dg: DistGAMG, spmv, st, b: Array, x: Array) -> Array:
     return pbjacobi_recurrence(spmv, pbj, b, x, dg.degree)
 
 
-def _rank_vcycle(dg: DistGAMG, args, states, chol: Array, b: Array) -> Array:
-    """One V-cycle over the rank-sharded hierarchy (zero initial guess).
+def _repl_smooth(dg: DistGAMG, st: LevelState, b: Array, x: Array) -> Array:
+    """Smoother on a replicated level: literally the single-device one."""
+    return apply_smoother(st, b, x, dg.smoother, dg.degree)
 
-    Every operator apply threads the policy's kernel accumulator so
-    sub-fp32 hierarchies contract at ``accum_dtype`` (None — native — for
-    the stock f64/f32 policies).
+
+def _boundary_restrict(dg: DistGAMG, r: Array) -> Array:
+    """Cross sharded->replicated: one all-gather of the fine residual
+    slabs, reassemble the global vector, apply the global restriction
+    rank-redundantly.  The only V-cycle communication the replicated tail
+    costs."""
+    sw = dg.switch
+    g = lax.all_gather(r, AXIS, axis=0, tiled=True)   # (ndev*rpad, bs[, k])
+    rg = g[jnp.asarray(sw.row_sel)]                   # (nbr_f, bs[, k])
+    flat = rg.reshape((rg.shape[0] * rg.shape[1],) + rg.shape[2:])
+    return apply_ell(sw.r_ell, flat)
+
+
+def _boundary_prolong(dg: DistGAMG, a, xc: Array, accum=None) -> Array:
+    """Cross replicated->sharded: the boundary prolongator's plan indices
+    address the replicated correction directly (``"replicated"`` halo), so
+    re-slicing the correction back into row slabs moves zero bytes.
+    ``a`` is the boundary level's sharded-args dict (``pb_idx``/``pb_data``
+    are this rank's slab of the re-slicing prolongator)."""
+    sw = dg.switch
+    xcb = xc.reshape((sw.nbr_c, sw.bs_c) + xc.shape[1:])
+    return dist_ell_apply(a["pb_idx"], a["pb_data"], xcb, accum_dtype=accum)
+
+
+def _rank_vcycle(dg: DistGAMG, args, states, chol: Array, b: Array) -> Array:
+    """One V-cycle over the placed hierarchy (zero initial guess).
+
+    Sharded levels run the slab recurrences with halo-window SpMVs;
+    replicated levels run the single-device core recurrences on global
+    vectors, rank-redundantly, with zero communication.  The two layouts
+    meet at the switch: restriction crosses it with one all-gather
+    (``_boundary_restrict``), prolongation re-slices the replicated
+    correction back into slabs for free (``_boundary_prolong``).
+
+    Every sharded operator apply threads the policy's kernel accumulator
+    so sub-fp32 hierarchies contract at ``accum_dtype`` (None — native —
+    for the stock f64/f32 policies).
     """
     acc = dg.precision.kernel_accum_dtype
+    ns = len(dg.levels)
     bs_stack, x_stack = [], []
     rhs = b
     for li, lv in enumerate(dg.levels):
@@ -399,9 +645,27 @@ def _rank_vcycle(dg: DistGAMG, args, states, chol: Array, b: Array) -> Array:
         r = rhs - spmv_a(x)
         bs_stack.append(rhs)
         x_stack.append(x)
-        rhs = _rank_spmv(lv.r_op, a["r_idx"], a["r_data"], r, accum=acc)
-    xc = _rank_coarse_solve(dg, chol, rhs)
-    for li in reversed(range(len(dg.levels))):
+        if li == ns - 1 and dg.repl:
+            rhs = _boundary_restrict(dg, r)
+        else:
+            rhs = _rank_spmv(lv.r_op, a["r_idx"], a["r_data"], r, accum=acc)
+    if dg.repl:
+        # replicated tail: the single-device V-cycle on global vectors
+        for li in range(ns, ns + len(dg.repl)):
+            st = states[li]
+            x = _repl_smooth(dg, st, rhs, jnp.zeros_like(rhs))
+            r = rhs - apply_ell(st.a_ell, x)
+            bs_stack.append(rhs)
+            x_stack.append(x)
+            rhs = apply_ell(st.r_ell, r)
+        xc = jax.scipy.linalg.cho_solve((chol, True), rhs)
+        for li in reversed(range(ns, ns + len(dg.repl))):
+            st = states[li]
+            x = x_stack[li] + apply_ell(st.p_ell, xc)
+            xc = _repl_smooth(dg, st, bs_stack[li], x)
+    else:
+        xc = _rank_coarse_solve(dg, chol, rhs)
+    for li in reversed(range(ns)):
         a = args["levels"][li]
         st = states[li]
         lv = dg.levels[li]
@@ -410,8 +674,12 @@ def _rank_vcycle(dg: DistGAMG, args, states, chol: Array, b: Array) -> Array:
             return _rank_spmv(lv.a_op, a["a_idx"], st["a_data"], v,
                               accum=acc)
 
-        x = x_stack[li] + _rank_spmv(lv.p_op, a["p_idx"], a["p_data"], xc,
-                                     accum=acc)
+        if li == ns - 1 and dg.repl:
+            corr = _boundary_prolong(dg, a, xc, accum=acc)
+        else:
+            corr = _rank_spmv(lv.p_op, a["p_idx"], a["p_data"], xc,
+                              accum=acc)
+        x = x_stack[li] + corr
         xc = _rank_smooth(dg, spmv_a, st, bs_stack[li], x)
     return xc
 
@@ -440,7 +708,9 @@ def _rank_pcg(dg: DistGAMG, args, states, chol: Array, b: Array,
     z = apply_m(r)
     p = z
     rz = _pdot(r, z)
-    bnorm = jnp.maximum(_pnorm(b), 1e-300)
+    # dtype-aware breakdown floor (see core.krylov.pcg): an all-zero rhs
+    # reports converged=True, iters=0, relres=0 at any krylov dtype
+    bnorm = jnp.maximum(_pnorm(b), jnp.finfo(b.dtype).tiny)
     rnorm = _pnorm(r)
 
     def cond(state):
@@ -509,6 +779,10 @@ def make_dist_solver(dg: DistGAMG, setupd: GAMGSetup, mesh, *,
     scattered panel (``(rpad, bs, k)`` — ``dg.scatter_vector`` on an
     ``(n, k)`` payload): the panel case runs the masked multi-RHS PCG and
     iters/relres/converged come back per column (shape ``(k,)``).
+
+    Placement is baked into ``dg``: agglomerated levels (``dg.repl``) are
+    closed over as replicated constants, so the same program serves any
+    sharded/replicated split without signature changes.
     """
     del setupd  # structure is baked into dg; kept for call-site symmetry
 

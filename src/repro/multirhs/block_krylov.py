@@ -57,8 +57,11 @@ def block_pcg(apply_a: Callable[[Array], Array],
     frozen columns receive zero updates (``alpha = 0``) and keep their CG
     state, so the surviving columns' arithmetic is exactly the single-RHS
     recurrence.  The loop runs until every column converges or ``maxiter``.
-    Zero columns (``||b|| ~ 0``) are inactive from the start (iters 0) —
-    that is what makes the solve server's padding columns free.
+    Zero columns (``||b|| ~ 0``) are inactive from the start (iters 0,
+    converged, relres 0) — that is what makes the solve server's padding
+    columns free.  Their denominator floor is ``finfo(B.dtype).tiny``
+    (dtype-aware, like ``core.krylov.pcg``): a literal 1e-300 underflows
+    to 0 below f64 and would NaN the zero columns' relres.
 
     ``col_dot`` / ``col_norm`` are the per-column reductions (everything
     but the trailing panel axis -> ``(k,)``).  The distributed path
@@ -79,7 +82,7 @@ def block_pcg(apply_a: Callable[[Array], Array],
     z = apply_m(r)
     p = z
     rz = col_dot(r, z)
-    bnorm = jnp.maximum(col_norm(B), 1e-300)
+    bnorm = jnp.maximum(col_norm(B), jnp.finfo(B.dtype).tiny)
     rnorm = col_norm(r)
 
     def cond(state):

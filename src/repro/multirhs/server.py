@@ -46,9 +46,18 @@ class AMGSolveServer:
     def __init__(self, setupd: gamg.GAMGSetup, a_fine_data, *,
                  buckets: Sequence[int] = (1, 2, 4, 8, 16),
                  rtol: float = 1e-8, maxiter: int = 200):
-        buckets = tuple(sorted({int(k) for k in buckets}))
-        if not buckets or buckets[0] < 1:
-            raise ValueError(f"buckets must be positive ints, got {buckets}")
+        buckets_in = [int(k) for k in buckets]
+        if not buckets_in:
+            raise ValueError("buckets must be a non-empty sequence of "
+                             "panel widths")
+        if min(buckets_in) < 1:
+            raise ValueError(f"bucket widths must be positive ints, got "
+                             f"{buckets_in}")
+        if len(set(buckets_in)) != len(buckets_in):
+            raise ValueError(f"duplicate bucket widths in {buckets_in}: "
+                             f"each width traces one panel solve, list "
+                             f"each once")
+        buckets = tuple(sorted(buckets_in))
         self.setupd = setupd
         self.buckets = buckets
         self.n = int(setupd.stats["level_rows"][0])
@@ -90,10 +99,22 @@ class AMGSolveServer:
         return request_id
 
     def _bucket_for(self, count: int) -> int:
+        """Smallest bucket width holding ``count`` columns.
+
+        ``count > buckets[-1]`` raises: ``flush`` caps chunks at the
+        largest bucket, so a bigger count is a caller/bookkeeping bug —
+        silently truncating it would drop requests.
+        """
+        if count < 1:
+            raise ValueError(f"chunk must hold at least one request, "
+                             f"got {count}")
+        if count > self.buckets[-1]:
+            raise ValueError(f"chunk of {count} requests exceeds the "
+                             f"largest bucket width {self.buckets[-1]}")
         for k in self.buckets:
             if k >= count:
                 return k
-        return self.buckets[-1]
+        raise AssertionError("unreachable: count <= buckets[-1]")
 
     def flush(self) -> List[SolveReport]:
         """Drain the queue: bucketed, padded, batched solves; one report

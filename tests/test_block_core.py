@@ -127,6 +127,33 @@ def test_block_coo_assembly_sums_duplicates_and_ignores_negative():
     assert plan.plan_bytes < scalar_coo_plan_bytes(plan)
 
 
+def test_block_coo_rejects_out_of_range_coordinates():
+    # ValueError, not assert: validation must survive ``python -O``
+    with pytest.raises(ValueError, match="out of range"):
+        preallocate_coo(np.array([0, 3]), np.array([0, 0]),
+                        nbr=3, nbc=3, br=2, bc=2)
+    with pytest.raises(ValueError, match="out of range"):
+        preallocate_coo(np.array([0, 1]), np.array([0, 5]),
+                        nbr=3, nbc=3, br=2, bc=2)
+    with pytest.raises(ValueError, match="shape mismatch"):
+        preallocate_coo(np.array([0, 1]), np.array([0]),
+                        nbr=3, nbc=3, br=2, bc=2)
+    # negatives stay the PETSc ignore convention, never an error
+    plan = preallocate_coo(np.array([0, -1]), np.array([0, 2]),
+                           nbr=3, nbc=3, br=2, bc=2)
+    assert plan.nnzb == 1
+
+
+def test_block_coo_rejects_wrong_shape_value_stream():
+    rows = np.array([0, 1, 2])
+    cols = np.array([0, 1, 0])
+    plan = preallocate_coo(rows, cols, nbr=3, nbc=3, br=2, bc=3)
+    with pytest.raises(ValueError, match="value stream shape"):
+        set_values_coo(plan, jnp.zeros((2, 2, 3)))     # wrong n_input
+    with pytest.raises(ValueError, match="value stream shape"):
+        set_values_coo(plan, jnp.zeros((3, 3, 2)))     # transposed blocks
+
+
 def test_scalar_expansion_matches_and_costs_more():
     A = random_bcsr(RNG, 6, 6, 3, 3, ensure_diag=True)
     S = expand_bcsr(A)

@@ -48,6 +48,57 @@ def test_dist_amg_mrhs_parity():
     assert "mrhs (k=3) parity" in stdout, stdout
 
 
+def test_dist_amg_agglomerated_parity():
+    """Agglomerated placement (coarse levels replicated, zero ppermute
+    traffic below the switch) solves in exactly the same iteration count
+    as the sharded-only placement — the tentpole's f64 contract.  The
+    8-rank mid-level variant runs nightly."""
+    stdout = _run_selftest(2, 5, {"REPRO_SELFTEST_AGG": "1"})
+    assert "OK" in stdout
+    assert "agglomerated parity" in stdout, stdout
+    assert "'replicated'" in stdout, stdout
+
+
+def test_placement_and_scatter_staging_dtype():
+    """Host-only checks (build_dist_gamg is pure staging, no devices):
+
+    * the placement split obeys the equations-per-rank rule and level 0
+      never leaves the sharded path;
+    * scatter staging dtypes are the policy's, not the caller's — an
+      fp64 operator update into an fp32-resident dist hierarchy stages
+      at the same dtype as an fp32 one (no retrace, no dtype poisoning;
+      the krylov-dtype fine-operator copy keeps full precision).
+    """
+    import numpy as np
+    import repro.core  # noqa: F401
+    from repro.core import gamg
+    from repro.dist.solver import build_dist_gamg
+    from repro.fem.assemble import assemble_elasticity
+
+    prob = assemble_elasticity(5)
+    for precision, pay_dt in (("f64", np.float64), ("f32", np.float64)):
+        setupd = gamg.setup(prob.A, prob.B, coarse_size=12,
+                            precision=precision)
+        assert len(setupd.levels) >= 2, setupd.stats["level_rows"]
+        dg_sh = build_dist_gamg(setupd, 2, coarse_eq_limit=0)
+        dg_ag = build_dist_gamg(setupd, 2, coarse_eq_limit=1 << 30)
+        assert not dg_sh.repl and dg_sh.coarse is not None
+        assert dg_ag.repl and dg_ag.switch is not None
+        assert dg_ag.placement[0] == "sharded"       # level 0 pinned
+        assert dg_ag.placement[1:] == ["replicated"] * (dg_ag.n_levels)
+        assert dg_ag.switch.p_b.halo.strategy == "replicated"
+        assert dg_ag.switch.p_b.halo.exchanged_slabs == 0
+        for dg in (dg_sh, dg_ag):
+            a64 = dg.scatter_fine_payloads(np.asarray(prob.A.data))
+            a32 = dg.scatter_fine_payloads(
+                np.asarray(prob.A.data, np.float32))
+            assert a64.dtype == a32.dtype == np.dtype(pay_dt)
+            b64 = dg.scatter_vector(np.asarray(prob.b))
+            b32 = dg.scatter_vector(np.asarray(prob.b, np.float32))
+            assert b64.dtype == b32.dtype == \
+                np.dtype(setupd.precision.krylov_dtype)
+
+
 def test_main_process_sees_one_device():
     import jax
     assert len(jax.devices()) == 1, jax.devices()

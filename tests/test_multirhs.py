@@ -260,6 +260,36 @@ def test_server_rejects_bad_inputs(solver, prob):
         srv.submit(np.zeros(prob.n + 1))
 
 
+def test_server_validates_buckets(solver, prob):
+    """Bucket validation: empties, non-positive widths and duplicates all
+    raise at construction — a duplicate means the caller thinks two
+    distinct panel widths exist where only one solve would trace."""
+    for bad in ((), (0, 2), (-1,), (2, 4, 2)):
+        with pytest.raises(ValueError):
+            AMGSolveServer(solver.setup_data, prob.A.data, buckets=bad)
+    # unsorted input is fine; the server sorts
+    srv = AMGSolveServer(solver.setup_data, prob.A.data, buckets=(4, 1, 2))
+    assert srv.buckets == (1, 2, 4)
+
+
+def test_server_bucket_for_rejects_oversized_chunk(solver, prob):
+    """``_bucket_for`` must raise rather than silently truncate: ``flush``
+    caps chunks at the largest bucket, so a bigger count is a bookkeeping
+    bug that would drop requests."""
+    srv = AMGSolveServer(solver.setup_data, prob.A.data, buckets=(1, 4))
+    assert srv._bucket_for(3) == 4
+    with pytest.raises(ValueError, match="exceeds the largest bucket"):
+        srv._bucket_for(5)
+    with pytest.raises(ValueError, match="at least one"):
+        srv._bucket_for(0)
+
+
+def test_server_empty_queue_flush(solver, prob):
+    srv = AMGSolveServer(solver.setup_data, prob.A.data, buckets=(1, 2))
+    assert srv.flush() == []
+    assert srv.stats["batches"] == 0 and srv.stats["requests"] == 0
+
+
 # ---------------------------------------------------------------------------
 # Backend env-override dispatch (REPRO_BACKEND / REPRO_SPGEMM_PATH /
 # REPRO_SPMM_PATH flipped mid-process)

@@ -180,6 +180,50 @@ def test_f32_vs_f64_preconditioned_pcg_same_solution(seed):
 
 
 # ---------------------------------------------------------------------------
+# Krylov breakdown floor: b = 0 must never NaN, at any krylov dtype
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float64, jnp.float32, jnp.bfloat16],
+                         ids=["f64", "f32", "bf16"])
+def test_pcg_zero_rhs_converges_immediately(dtype):
+    """The relres denominator floor is ``finfo(b.dtype).tiny``: the old
+    1e-300 literal underflows to 0 below f64, turning b = 0 into a 0/0
+    NaN relres.  An all-zero rhs reports converged, iters 0, relres 0 —
+    one case per stock policy's candidate krylov dtype."""
+    rng = np.random.default_rng(7)
+    A = spd_bcsr(rng, 6, 3)
+    ell = A.to_ell().astype(dtype)
+    b = jnp.zeros(A.shape[0], dtype)
+    res = pcg(lambda v: apply_ell(ell, v), lambda r: r, b, rtol=1e-8)
+    assert bool(res.converged) and int(res.iters) == 0
+    assert float(res.relres) == 0.0          # not NaN
+    assert not np.any(np.isnan(np.asarray(res.x, np.float64)))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float64, jnp.float32, jnp.bfloat16],
+                         ids=["f64", "f32", "bf16"])
+def test_block_pcg_zero_columns_stay_finite(dtype):
+    """Panel twin: all-zero columns (the solve server's padding) are
+    inactive from iteration 0 with relres 0, while live columns in the
+    same panel still converge — at every candidate krylov dtype."""
+    from repro.multirhs.block_krylov import block_pcg
+    rng = np.random.default_rng(8)
+    A = spd_bcsr(rng, 6, 3)
+    ell = A.to_ell().astype(dtype)
+    n = A.shape[0]
+    B = jnp.stack([jnp.zeros(n, dtype),
+                   jnp.asarray(rng.standard_normal(n), dtype)], axis=1)
+    rtol = 1e-8 if dtype == jnp.float64 else 1e-2
+    res = block_pcg(lambda v: apply_ell(ell, v), lambda r: r, B, rtol=rtol,
+                    maxiter=200)
+    relres = np.asarray(res.relres, np.float64)
+    assert not np.any(np.isnan(relres)), relres
+    assert int(res.iters[0]) == 0 and relres[0] == 0.0
+    assert bool(res.converged[0])
+    assert int(res.iters[1]) > 0
+
+
+# ---------------------------------------------------------------------------
 # Mixed-precision panels + the solve server
 # ---------------------------------------------------------------------------
 
