@@ -16,11 +16,13 @@ def main() -> None:
         table4_nnz_row,
         table5_traffic,
         table6_multirhs,
+        table7_assembly,
     )
     print("name,us_per_call,derived")
     failures = 0
     for mod in (table1_weak_scaling, table2_backends, table3_ptap_ablation,
-                table4_nnz_row, table5_traffic, table6_multirhs):
+                table4_nnz_row, table5_traffic, table6_multirhs,
+                table7_assembly):
         try:
             mod.run()
         except Exception:

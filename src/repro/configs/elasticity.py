@@ -25,6 +25,10 @@ class ElasticityConfig:
     rtol: float = 1e-8           # unpreconditioned residual norm
     maxiter: int = 200
     reuse_interpolation: bool = True   # -pc_gamg_reuse_interpolation
+    # assembly path: "device" (JAX vmapped quadrature + DeviceAssembler —
+    # enables the jitted update_coefficients hot loop) or "host" (numpy
+    # golden reference)
+    assembly: str = "device"
     # distributed placement: agglomerate levels at or below this many equations
     # per rank (PETSc -pc_gamg_process_eq_limit; None = dist default,
     # 0 = keep every level slab-sharded)
@@ -35,13 +39,16 @@ class ElasticityConfig:
         from repro.core.gamg import GAMGSolver
         from repro.fem.assemble import assemble_elasticity
         prob = assemble_elasticity(self.m, order=self.order, E=self.E,
-                                   nu=self.nu)
+                                   nu=self.nu, path=self.assembly)
         solver = GAMGSolver(prob.A, prob.B, theta=self.theta,
                             smoother=self.smoother, degree=self.degree,
                             coarse_size=self.coarse_size,
                             coarsener=self.coarsener, rtol=self.rtol,
                             maxiter=self.maxiter,
                             coarse_eq_limit=self.coarse_eq_limit)
+        if prob.assembler is not None:
+            # device path: enable the jitted coefficient hot loop
+            solver.bind_assembler(prob.assembler)
         return prob, solver
 
 

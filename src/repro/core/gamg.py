@@ -271,6 +271,33 @@ def make_recompute(setupd: GAMGSetup):
     return jax.jit(partial(recompute, setupd))
 
 
+def make_coeff_recompute(setupd: GAMGSetup, assembler):
+    """Jitted coefficient hot path: ``(E, nu) -> Hierarchy``.
+
+    Fuses device FEM assembly (vmapped quadrature -> cached blocked-COO
+    scatter, ``repro.fem.device_stiffness.DeviceAssembler.coo_data``) with
+    the state-gated PtAP recompute into ONE traced program — the whole
+    ``update -> set_values_coo -> recompute`` step of the quasi-static hot
+    loop runs device-resident with zero host transfers.  The assembler's
+    plan and the setup's symbolic data are baked in as constants; the
+    program retraces only if those structures change.
+    """
+    nnzb = setupd.levels[0].A0.nnzb if setupd.levels \
+        else setupd.coarse_struct.nnzb
+    if assembler.plan.nnzb != nnzb:
+        # out-of-range gathers clamp silently under jit — a mismatched
+        # plan would "converge" against a garbage operator
+        raise ValueError(
+            f"assembler plan does not match the setup's fine operator: "
+            f"plan has {assembler.plan.nnzb} output blocks, the fine "
+            f"level has {nnzb}")
+
+    def coeff_recompute(E, nu):
+        return recompute(setupd, assembler.coo_data(E, nu))
+
+    return jax.jit(coeff_recompute)
+
+
 def make_solve(setupd: GAMGSetup, rtol: float = 1e-8, maxiter: int = 200):
     """Jitted hot KSPSolve: AMG-preconditioned CG on a Hierarchy pytree.
 
@@ -317,6 +344,27 @@ class GAMGSolver:
     def update_operator(self, a_fine_data: Array) -> None:
         """Hot path: new operator values, same structure (Newton step)."""
         self.hierarchy = self._recompute(a_fine_data)
+        self.n_recomputes += 1
+
+    def bind_assembler(self, assembler) -> None:
+        """Attach a ``repro.fem`` DeviceAssembler, enabling coefficient
+        updates: ``update_coefficients(E, nu)`` then runs assembly +
+        recompute as one jitted device program."""
+        self.assembler = assembler
+        self._coeff_recompute = make_coeff_recompute(self.setup_data,
+                                                     assembler)
+
+    def update_coefficients(self, E, nu) -> None:
+        """Hot path: new *material fields* (per-element E/nu arrays or
+        scalars), same mesh/structure — device assembly fused with the
+        state-gated PtAP chain (``make_coeff_recompute``)."""
+        if getattr(self, "assembler", None) is None:
+            raise ValueError(
+                "update_coefficients needs a bound DeviceAssembler: "
+                "call bind_assembler(problem.assembler) (device assembly "
+                "path) first")
+        E, nu = self.assembler.as_fields(E, nu)
+        self.hierarchy = self._coeff_recompute(E, nu)
         self.n_recomputes += 1
 
     def solve(self, b: Array) -> CGResult:

@@ -36,6 +36,16 @@ Checks, on an m^3 Q1 elasticity problem:
     The sharded baselines in the sections above pin
     ``coarse_eq_limit=0`` so their coverage of the ppermute paths never
     silently shrinks as placement defaults evolve.
+  * with ``REPRO_SELFTEST_COEFF=1``: the **coefficient hot loop** — per-slab
+    element coefficient fields scattered through the assembly staging
+    (``build_dist_assembly`` / ``DistAssembly.scatter_fields``) and
+    assembled rank-locally inside the shard_map program
+    (``make_dist_coeff_solver``) match (a) the value-stream path fed the
+    globally assembled operator, exactly, and (b) the single-device jitted
+    ``update_coefficients -> recompute -> solve`` loop on a heterogeneous
+    (two-material inclusion) problem — same iteration count, allclose
+    solution — with zero retraces across repeated updates
+    (``_cache_size() == 1``, including an f32-typed caller).
   * always: scatter staging dtypes are the *policy's*, not the caller's —
     an f32-cast payload/rhs stages at the same dtype as the f64 one
     (same compiled program, no retrace, no dtype poisoning).
@@ -218,6 +228,44 @@ def main(m: int) -> int:
                                        rtol=1e-6, atol=1e-9)
             print(f"agglomerated mrhs (k={Ba.shape[1]}) parity: "
                   f"iters={np.asarray(itm_a[0]).tolist()}")
+
+    if os.environ.get("REPRO_SELFTEST_COEFF") == "1":
+        # device-resident coefficient hot loop through the dist staging:
+        # heterogeneous fields -> rank-local assembly -> recompute -> solve
+        from repro.dist.solver import build_dist_assembly, \
+            make_dist_coeff_solver
+        from repro.fem.assemble import inclusion_fields
+        assert prob.assembler is not None      # device assembly default
+        da = build_dist_assembly(dg, prob.assembler)
+        run_c = make_dist_coeff_solver(dg, da, mesh, rtol=1e-8, maxiter=200)
+        aargs = da.sharded_args()
+        E_h, nu_h = inclusion_fields(prob.mesh)
+        solver.bind_assembler(prob.assembler)
+        solver.update_coefficients(E_h, nu_h)
+        ref_c = solver.solve(prob.b)
+        xc, itc, rrc, okc = jax.block_until_ready(
+            run_c(args, aargs, *da.scatter_fields(E_h, nu_h), b))
+        assert bool(okc[0]), (itc, rrc)
+        assert int(itc[0]) == int(ref_c.iters), \
+            f"coeff parity: dist={int(itc[0])} single={int(ref_c.iters)}"
+        np.testing.assert_allclose(dg.gather_vector(xc),
+                                   np.asarray(ref_c.x), rtol=1e-6,
+                                   atol=1e-9)
+        # rank-local assembly == globally assembled value stream, exactly
+        A_h = prob.coefficient_operator(E_h, nu_h)
+        xv, itv, _, okv = jax.block_until_ready(
+            run(args, dg.scatter_fine_payloads(A_h.data), b))
+        assert bool(okv[0]) and int(itv[0]) == int(itc[0])
+        np.testing.assert_allclose(dg.gather_vector(xv),
+                                   dg.gather_vector(xc), rtol=1e-12,
+                                   atol=1e-12)
+        # zero retraces across repeated updates — even f32-typed callers
+        # (fields stage at the policy dtype, mirroring the payload scatter)
+        run_c(args, aargs,
+              *da.scatter_fields(np.asarray(E_h, np.float32) * 1.5, nu_h), b)
+        assert run_c._cache_size() == 1, run_c._cache_size()
+        print(f"coefficient hot-loop parity: iters={int(itc[0])} "
+              f"(assembled rank-locally, no retrace)")
 
     prec = os.environ.get("REPRO_PRECISION")
     if prec and prec not in ("f64", "fp64", "float64", "double"):

@@ -306,6 +306,125 @@ class DistGAMG:
         return cat.reshape((-1,) + xs.shape[3:])
 
 
+@dataclasses.dataclass
+class DistAssembly:
+    """Per-rank device-assembly staging: the distributed rendering of the
+    cached ``BlockCOOPlan``.
+
+    ``plan.out_idx_sorted`` is monotone, so the contributions feeding rank
+    ``r``'s fine payload slab (global output blocks
+    ``a_nnz_starts[r]:a_nnz_starts[r+1]``) are one *contiguous* range of
+    the globally sorted contribution stream — each rank owns a slice of
+    the same scatter-sum the single-device ``set_values_coo`` runs, in the
+    same order, which is what makes assembled-slab parity exact.
+
+    A contribution is (element, node-pair); elements touching a slab
+    boundary appear on both ranks, so each rank stages the ids of the
+    elements it needs (``elem_ids``, padded) and recomputes their
+    stiffness blocks rank-locally — the scatter front door
+    (``scatter_fields``) then moves only two small per-element coefficient
+    slabs, never a value stream.
+    """
+
+    elem_ids: np.ndarray      # (ndev, epad) global element ids (pad -> 0)
+    contrib_elem: np.ndarray  # (ndev, cpad) rank-local element index
+    contrib_pa: np.ndarray    # (ndev, cpad) row-node within element
+    contrib_pb: np.ndarray    # (ndev, cpad) col-node within element
+    contrib_seg: np.ndarray   # (ndev, cpad) local slot in the payload slab
+    contrib_mask: np.ndarray  # (ndev, cpad) valid contributions
+    quad_b: np.ndarray        # shared quadrature arrays (replicated consts)
+    quad_w: np.ndarray
+    nn: int                   # nodes per element
+    bs: int
+    a_pad: int                # fine payload slab length (dg.levels[0])
+    n_elements: int
+    stage_dtype: np.dtype     # dg.payload_stage_dtype (policy's, not caller's)
+
+    @property
+    def ndev(self) -> int:
+        return self.elem_ids.shape[0]
+
+    def sharded_args(self):
+        """The (ndev, ...) stacked operands of the rank assembly."""
+        return dict(elem=jnp.asarray(self.contrib_elem),
+                    pa=jnp.asarray(self.contrib_pa),
+                    pb=jnp.asarray(self.contrib_pb),
+                    seg=jnp.asarray(self.contrib_seg),
+                    mask=jnp.asarray(self.contrib_mask))
+
+    def scatter_fields(self, E, nu):
+        """Global per-element fields (or scalars) -> (ndev, epad) slabs.
+
+        Staged at the policy-derived payload dtype (mirroring
+        ``DistGAMG.scatter_fine_payloads``): repeat updates at varying
+        caller dtypes hit the same compiled program.
+        """
+        ne = self.n_elements
+        E = np.broadcast_to(np.asarray(E, self.stage_dtype), (ne,))
+        nu = np.broadcast_to(np.asarray(nu, self.stage_dtype), (ne,))
+        return (jnp.asarray(E[self.elem_ids]),
+                jnp.asarray(nu[self.elem_ids]))
+
+
+def build_dist_assembly(dg: DistGAMG, assembler) -> DistAssembly:
+    """Cold staging of device FEM assembly over the fine payload slabs.
+
+    ``assembler`` is the problem's ``repro.fem.device_stiffness
+    .DeviceAssembler`` (its ``BlockCOOPlan`` must be the one the fine
+    operator of ``dg``'s setup was assembled with).
+    """
+    plan = assembler.plan
+    lv0 = dg.levels[0]
+    nn = assembler.nn
+    if int(lv0.a_nnz_starts[-1]) != plan.nnzb:
+        raise ValueError(
+            f"assembler plan does not match the staged fine operator: "
+            f"plan has {plan.nnzb} output blocks, the fine level has "
+            f"{int(lv0.a_nnz_starts[-1])}")
+    sorted_input = plan.keep[plan.order]          # declared-coordinate ids
+    elem = sorted_input // (nn * nn)
+    pair = sorted_input % (nn * nn)
+    seg = plan.out_idx_sorted                     # monotone output blocks
+    starts = lv0.a_nnz_starts
+    los = np.searchsorted(seg, starts[:-1], side="left")
+    his = np.searchsorted(seg, starts[1:], side="left")
+    per_elem, per_loc, per_uniq = [], [], []
+    for r in range(dg.ndev):
+        er = elem[los[r]:his[r]]
+        uniq, local = np.unique(er, return_inverse=True)
+        per_uniq.append(uniq)
+        per_elem.append(er)
+        per_loc.append(local)
+    epad = max(1, max(len(u) for u in per_uniq))
+    cpad = max(1, int((his - los).max()))
+    ndev = dg.ndev
+    elem_ids = np.zeros((ndev, epad), dtype=np.int64)
+    c_elem = np.zeros((ndev, cpad), dtype=np.int32)
+    c_pa = np.zeros((ndev, cpad), dtype=np.int32)
+    c_pb = np.zeros((ndev, cpad), dtype=np.int32)
+    # padded contributions land in the (always unused) last slab slot:
+    # slab lengths are at most a_pad - 1 by construction
+    c_seg = np.full((ndev, cpad), lv0.a_pad - 1, dtype=np.int32)
+    c_mask = np.zeros((ndev, cpad), dtype=bool)
+    for r in range(ndev):
+        lo, hi = los[r], his[r]
+        k = hi - lo
+        elem_ids[r, :len(per_uniq[r])] = per_uniq[r]
+        c_elem[r, :k] = per_loc[r]
+        c_pa[r, :k] = pair[lo:hi] // nn
+        c_pb[r, :k] = pair[lo:hi] % nn
+        c_seg[r, :k] = seg[lo:hi] - starts[r]
+        c_mask[r, :k] = True
+    return DistAssembly(elem_ids=elem_ids, contrib_elem=c_elem,
+                        contrib_pa=c_pa, contrib_pb=c_pb, contrib_seg=c_seg,
+                        contrib_mask=c_mask,
+                        quad_b=np.asarray(assembler.quad_b),
+                        quad_w=np.asarray(assembler.quad_w),
+                        nn=nn, bs=plan.br, a_pad=lv0.a_pad,
+                        n_elements=assembler.n_elements,
+                        stage_dtype=dg.payload_stage_dtype)
+
+
 def _placement_split(setupd: GAMGSetup, ndev: int, limit: int) -> int:
     """First level index that leaves the fully-sharded path.
 
@@ -564,6 +683,29 @@ def _rank_coarse_solve(dg: DistGAMG, chol: Array, rhs: Array) -> Array:
     return mine * mask.reshape((c.rpad,) + (1,) * (mine.ndim - 1))
 
 
+def _rank_assemble(da: DistAssembly, aargs, E: Array, nu: Array) -> Array:
+    """Rank-local device assembly: coefficient slabs -> fine payload slab.
+
+    Vmapped quadrature over this rank's (padded) element set, then the
+    rank's contiguous slice of the global scatter-sum — same contribution
+    order as the single-device ``set_values_coo``, so the assembled slabs
+    match ``scatter_fine_payloads`` of the globally assembled stream.
+    Padded elements compute element 0's block (valid arithmetic, no NaN)
+    and their contributions are masked out of the segment sum.
+    """
+    from repro.fem.device_stiffness import element_stiffness_blocks
+    dt = E.dtype
+    blocks = element_stiffness_blocks(da.quad_b.astype(dt),
+                                      da.quad_w.astype(dt), E, nu)
+    nn, bs = da.nn, da.bs
+    bl = blocks.reshape(-1, nn, bs, nn, bs).transpose(0, 1, 3, 2, 4)
+    contrib = bl[aargs["elem"], aargs["pa"], aargs["pb"]]
+    contrib = contrib * aargs["mask"][:, None, None].astype(dt)
+    return jax.ops.segment_sum(contrib, aargs["seg"],
+                               num_segments=da.a_pad,
+                               indices_are_sorted=True)
+
+
 def _rank_spmv(op: DistEll, idx: Array, data: Array, x: Array,
                accum=None) -> Array:
     return dist_ell_apply(idx, data, halo_window(x, op.halo),
@@ -795,5 +937,34 @@ def make_dist_solver(dg: DistGAMG, setupd: GAMGSetup, mesh, *,
         return (x[None], k[None], relres[None], ok[None])
 
     sharded = shard_map(rank_fn, mesh, in_specs=(P(AXIS), P(AXIS), P(AXIS)),
+                        out_specs=P(AXIS), check_rep=False)
+    return jax.jit(sharded)
+
+
+def make_dist_coeff_solver(dg: DistGAMG, da: DistAssembly, mesh, *,
+                           rtol: float = 1e-8, maxiter: int = 200):
+    """Jitted distributed *coefficient* hot path:
+    ``(args, aargs, E, nu, b) -> (x, iters, relres, ok)``.
+
+    The quasi-static front door: instead of a pre-assembled value stream
+    (``make_dist_solver``'s ``a0``), each rank receives its coefficient
+    slabs (``da.scatter_fields``) and runs device FEM assembly, the
+    state-gated recompute and the CG solve as one shard_map program —
+    the distributed twin of ``gamg.make_coeff_recompute``.  ``aargs``
+    from ``da.sharded_args()``; everything else as ``make_dist_solver``
+    (panel ``b`` supported the same way).
+    """
+
+    def rank_fn(args, aargs, E, nu, b):
+        args, aargs, E, nu, b = jax.tree.map(
+            lambda t: t[0], (args, aargs, E, nu, b))
+        a_slab = _rank_assemble(da, aargs, E, nu)
+        states, chol = _rank_recompute(dg, args, a_slab)
+        run_pcg = _rank_block_pcg if b.ndim == 3 else _rank_pcg
+        x, k, relres, ok = run_pcg(dg, args, states, chol, b,
+                                   rtol, maxiter)
+        return (x[None], k[None], relres[None], ok[None])
+
+    sharded = shard_map(rank_fn, mesh, in_specs=(P(AXIS),) * 5,
                         out_specs=P(AXIS), check_rep=False)
     return jax.jit(sharded)

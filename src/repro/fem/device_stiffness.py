@@ -1,0 +1,137 @@
+"""Device-resident element stiffness — vmapped quadrature over elements.
+
+The host golden path (``hex_elasticity.element_stiffness``) builds one
+numpy ``Ke`` per distinct material and broadcasts it, which caps the
+reachable operator updates at a global scalar ``reassemble(scale)``.  This
+module computes **per-element** stiffness blocks in JAX from material
+fields ``E(x), nu(x)`` given as per-element arrays, so the whole
+quasi-static hot loop
+
+    update_coefficients(E, nu) -> set_values_coo -> gamg.recompute -> solve
+
+is one traced, zero-host-transfer device program (the paper's
+recurring-recompute scenario with the *assembly* finally on device too).
+
+Structure/value split mirrors the rest of the stack:
+
+* ``DeviceAssembler`` is the cold, host-built symbolic object: the shared
+  quadrature arrays (``hex_elasticity.element_quadrature`` — identical B
+  matrices to the golden path), the element count and the cached
+  ``BlockCOOPlan``.  Built once per mesh + boundary conditions.
+* ``element_stiffness_blocks`` / ``DeviceAssembler.value_stream`` /
+  ``DeviceAssembler.coo_data`` are pure jittable functions of the
+  coefficient fields.  The constitutive matrix is linear in the Lame
+  parameters (``D = lam*D_LAM + mu*D_MU``), so heterogeneity costs one
+  broadcast, not a per-element D rebuild.
+
+Everything runs at the value dtype (f64 by default — the existing
+precision policy casts *down* inside ``gamg.recompute``, never here, so
+the assembled stream is a full-precision golden input under every
+policy).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.block_coo import BlockCOOPlan, set_values_coo_data
+from repro.fem.hex_elasticity import (
+    D_LAM,
+    D_MU,
+    HexMesh,
+    element_quadrature,
+    lame_parameters,
+)
+
+Array = jax.Array
+BS = 3  # displacement components per node
+
+
+def element_stiffness_blocks(Bq, wq, E: Array, nu: Array) -> Array:
+    """Per-element stiffness matrices by vmapped quadrature.
+
+    ``Bq (nq, 6, 3*nn)`` / ``wq (nq,)`` are the shared quadrature arrays;
+    ``E``/``nu`` are per-element coefficient arrays ``(ne,)``.  Returns
+    ``(ne, 3*nn, 3*nn)`` symmetric element matrices:
+
+        Ke_e = sum_q w_q B_q^T (lam_e D_LAM + mu_e D_MU) B_q
+    """
+    Bq = jnp.asarray(Bq)
+    wq = jnp.asarray(wq)
+    dl = jnp.asarray(D_LAM, Bq.dtype)
+    dm = jnp.asarray(D_MU, Bq.dtype)
+    lam, mu = lame_parameters(E, nu)
+
+    def one(lam_e, mu_e):
+        D = lam_e * dl + mu_e * dm                        # (6, 6)
+        Ke = jnp.einsum("q,qia,ij,qjb->ab", wq, Bq, D, Bq)
+        return 0.5 * (Ke + Ke.T)                          # mirror host path
+
+    return jax.vmap(one)(lam, mu)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class DeviceAssembler:
+    """Cold symbolic side of device assembly (host-built, hashable-by-id:
+    ``eq=False`` keeps the identity hash — the array fields aren't
+    field-hashable and two assemblers are never interchangeable anyway).
+
+    Owns the quadrature arrays, the element/block bookkeeping and the
+    cached ``BlockCOOPlan`` of the reduced (BC-eliminated) operator; the
+    numeric side is the pure ``value_stream``/``coo_data`` functions of
+    the coefficient fields.  Closures over an assembler (e.g.
+    ``gamg.make_coeff_recompute``) bake the plan in as constants, exactly
+    like the PtAP caches.
+    """
+
+    plan: BlockCOOPlan
+    quad_b: np.ndarray      # (nq, 6, 3*nn) strain matrices
+    quad_w: np.ndarray      # (nq,) weights * detJ
+    n_elements: int
+    nn: int                 # nodes per element
+    dtype: np.dtype = np.dtype(np.float64)
+
+    @staticmethod
+    def build(mesh: HexMesh, plan: BlockCOOPlan,
+              dtype=np.float64) -> "DeviceAssembler":
+        Bq, wq = element_quadrature(mesh.order, mesh.h)
+        return DeviceAssembler(plan=plan, quad_b=Bq, quad_w=wq,
+                               n_elements=mesh.n_elements,
+                               nn=mesh.connectivity.shape[1],
+                               dtype=np.dtype(dtype))
+
+    # ---- field plumbing -------------------------------------------------
+    def as_fields(self, E, nu):
+        """Scalars/arrays -> per-element ``(ne,)`` fields at the assembly
+        dtype (force-cast, so callers at any dtype hit one traced program —
+        the same no-retrace contract as the scatter staging in
+        ``repro.dist``)."""
+        ne = self.n_elements
+        E = np.broadcast_to(np.asarray(E, self.dtype), (ne,))
+        nu = np.broadcast_to(np.asarray(nu, self.dtype), (ne,))
+        return jnp.asarray(E), jnp.asarray(nu)
+
+    # ---- jittable numeric phase ----------------------------------------
+    def element_blocks(self, E: Array, nu: Array) -> Array:
+        """(ne, 3*nn, 3*nn) element matrices of the coefficient fields."""
+        return element_stiffness_blocks(
+            np.asarray(self.quad_b, self.dtype),
+            np.asarray(self.quad_w, self.dtype), E, nu)
+
+    def value_stream(self, E: Array, nu: Array) -> Array:
+        """(n_input, 3, 3) blocked COO value stream in declaration order
+        (element-major, then row-node, then col-node) — exactly the
+        MatSetValuesCOO stream ``self.plan`` was preallocated for."""
+        nn = self.nn
+        Ke = self.element_blocks(E, nu)
+        blocks = Ke.reshape(-1, nn, BS, nn, BS).transpose(0, 1, 3, 2, 4)
+        return blocks.reshape(-1, BS, BS)
+
+    def coo_data(self, E: Array, nu: Array) -> Array:
+        """Assembled (nnzb, 3, 3) operator payload: value stream through
+        the cached plan's scatter-sum.  Pure and jittable — compose with
+        ``gamg.recompute`` for the one-program hot loop."""
+        return set_values_coo_data(self.plan, self.value_stream(E, nu))

@@ -65,33 +65,60 @@ def _gauss_1d(npts: int):
     raise ValueError(npts)
 
 
-def isotropic_d_matrix(E: float, nu: float) -> np.ndarray:
-    """6x6 constitutive matrix (Voigt: xx, yy, zz, xy, yz, zx)."""
+def lame_parameters(E, nu):
+    """Lame (lambda, mu) from Young's modulus / Poisson ratio.
+
+    Plain arithmetic, so it serves numpy scalars, numpy arrays *and* traced
+    jax arrays alike — the single source of the constitutive map for the
+    host golden path and the device assembly path.
+    """
     lam = E * nu / ((1 + nu) * (1 - 2 * nu))
     mu = E / (2 * (1 + nu))
-    D = np.zeros((6, 6))
-    D[:3, :3] = lam
-    D[:3, :3] += 2 * mu * np.eye(3)
-    D[3:, 3:] = mu * np.eye(3)
-    return D
+    return lam, mu
+
+
+#: Constitutive basis (Voigt: xx, yy, zz, xy, yz, zx): the isotropic D
+#: matrix is linear in the Lame parameters, D = lam*D_LAM + mu*D_MU.
+#: The device assembly path exploits this to keep material fields as bare
+#: (lam, mu) arrays contracted against two constant matrices.
+D_LAM = np.zeros((6, 6))
+D_LAM[:3, :3] = 1.0
+D_MU = np.zeros((6, 6))
+D_MU[:3, :3] = 2 * np.eye(3)
+D_MU[3:, 3:] = np.eye(3)
+for _c in (D_LAM, D_MU):
+    _c.flags.writeable = False
+
+
+def isotropic_d_matrix(E: float, nu: float) -> np.ndarray:
+    """6x6 constitutive matrix (Voigt: xx, yy, zz, xy, yz, zx)."""
+    lam, mu = lame_parameters(E, nu)
+    return lam * D_LAM + mu * D_MU
 
 
 @lru_cache(maxsize=8)
-def element_stiffness(order: int, h: float, E: float = 1.0,
-                      nu: float = 0.3) -> np.ndarray:
-    """(3*nn x 3*nn) stiffness of a cube element with edge ``h``.
+def element_quadrature(order: int, h: float
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Quadrature-point strain matrices of the cube reference element.
 
-    Uniform grids make the Jacobian constant (h/2 * I), so one element
-    matrix serves the whole mesh — the same economy ex56 exploits.
+    Returns ``(B, w)``: ``B`` is ``(nq, 6, 3*nn)`` — the strain-displacement
+    matrix at every Gauss point — and ``w`` the ``(nq,)`` quadrature weights
+    with the (constant, uniform-grid) Jacobian determinant folded in, so
+
+        Ke(E, nu) = sum_q w[q] * B[q].T @ D(E, nu) @ B[q].
+
+    This is the shared structural half of element assembly: the host golden
+    path (``element_stiffness``) and the device path
+    (``repro.fem.device_stiffness``) both contract exactly these arrays,
+    differing only in where the contraction runs.
     """
     pts1d, shape1d = _lagrange_1d(order)
     nn1 = len(pts1d)
     nn = nn1 ** 3
     gp, gw = _gauss_1d(order + 1)
-    D = isotropic_d_matrix(E, nu)
-    Ke = np.zeros((3 * nn, 3 * nn))
     scale = 2.0 / h                       # d(ref)/d(phys)
     detJ = (h / 2.0) ** 3
+    Bs, ws = [], []
     for ig, (xi, wx) in enumerate(zip(gp, gw)):
         Nx, dNx = shape1d(np.array([xi]))
         for jg, (eta, wy) in enumerate(zip(gp, gw)):
@@ -116,7 +143,29 @@ def element_stiffness(order: int, h: float, E: float = 1.0,
                 B[4, 2::3] = grad[1]
                 B[5, 0::3] = grad[2]
                 B[5, 2::3] = grad[0]
-                Ke += (wx * wy * wz * detJ) * (B.T @ D @ B)
+                Bs.append(B)
+                ws.append(wx * wy * wz * detJ)
+    Bq, wq = np.stack(Bs, axis=0), np.asarray(ws)
+    Bq.flags.writeable = False
+    wq.flags.writeable = False
+    return Bq, wq
+
+
+@lru_cache(maxsize=8)
+def element_stiffness(order: int, h: float, E: float = 1.0,
+                      nu: float = 0.3) -> np.ndarray:
+    """(3*nn x 3*nn) stiffness of a cube element with edge ``h``.
+
+    Uniform grids make the Jacobian constant (h/2 * I), so one element
+    matrix serves every element sharing (E, nu) — the same economy ex56
+    exploits.  This is the host-numpy **golden reference** the device
+    assembly path is pinned against (``tests/test_assembly.py``).
+    """
+    Bq, wq = element_quadrature(order, h)
+    D = isotropic_d_matrix(E, nu)
+    Ke = np.zeros((Bq.shape[2], Bq.shape[2]))
+    for B, w in zip(Bq, wq):
+        Ke += w * (B.T @ D @ B)
     return 0.5 * (Ke + Ke.T)              # symmetrize roundoff
 
 

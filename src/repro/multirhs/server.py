@@ -45,7 +45,8 @@ class AMGSolveServer:
 
     def __init__(self, setupd: gamg.GAMGSetup, a_fine_data, *,
                  buckets: Sequence[int] = (1, 2, 4, 8, 16),
-                 rtol: float = 1e-8, maxiter: int = 200):
+                 rtol: float = 1e-8, maxiter: int = 200,
+                 assembler=None):
         buckets_in = [int(k) for k in buckets]
         if not buckets_in:
             raise ValueError("buckets must be a non-empty sequence of "
@@ -72,11 +73,18 @@ class AMGSolveServer:
         self._recompute = gamg.make_recompute(setupd)
         self._solve = make_block_solve(setupd, rtol=rtol, maxiter=maxiter)
         self.hierarchy = self._recompute(jnp.asarray(a_fine_data))
+        # optional device-assembly binding: coefficient updates (material
+        # fields, not value streams) run assembly + recompute as one
+        # jitted program; built at construction so a mismatched plan
+        # fails here, not at the first update.
+        self.assembler = assembler
+        self._coeff_recompute = None if assembler is None else \
+            gamg.make_coeff_recompute(setupd, assembler)
         self._pending: List[tuple] = []
         self._next_id = 0
         self.stats = {
             "requests": 0, "batches": 0, "padded_columns": 0,
-            "recomputes": 0,
+            "recomputes": 0, "coefficient_updates": 0,
             "solves_per_k": {k: 0 for k in buckets},
         }
 
@@ -85,6 +93,25 @@ class AMGSolveServer:
         """Hot path: new fine values, same structure (state-gated PtAP)."""
         self.hierarchy = self._recompute(jnp.asarray(a_fine_data))
         self.stats["recomputes"] += 1
+
+    def update_coefficients(self, E, nu) -> None:
+        """Hot path: new material fields (per-element arrays or scalars).
+
+        Device assembly (vmapped quadrature through the cached COO plan)
+        fused with the state-gated recompute — the server's quasi-static
+        client contract: ship two small coefficient arrays, not an
+        ``(nnzb, 3, 3)`` value stream.  Fields are force-cast to the
+        assembler dtype, so mixed-dtype clients share one traced program.
+        """
+        if self.assembler is None:
+            raise ValueError(
+                "update_coefficients needs an assembler: construct the "
+                "server with assembler=problem.assembler (device assembly "
+                "path)")
+        E, nu = self.assembler.as_fields(E, nu)
+        self.hierarchy = self._coeff_recompute(E, nu)
+        self.stats["recomputes"] += 1
+        self.stats["coefficient_updates"] += 1
 
     # ---- request stream --------------------------------------------------
     def submit(self, b, request_id: Optional[Hashable] = None) -> Hashable:

@@ -59,6 +59,18 @@ def test_dist_amg_agglomerated_parity():
     assert "'replicated'" in stdout, stdout
 
 
+def test_dist_coefficient_update_parity():
+    """ISSUE 5 acceptance: the jitted coefficient hot loop
+    (update_coefficients -> rank-local device assembly -> recompute ->
+    solve) through the DistGAMG staging at 2 fake ranks — exact iteration
+    parity with the single-device loop and with the value-stream path on
+    a heterogeneous (inclusion) problem, zero retraces across updates."""
+    stdout = _run_selftest(2, 4, {"REPRO_SELFTEST_COEFF": "1"})
+    assert "OK" in stdout
+    assert "coefficient hot-loop parity" in stdout, stdout
+    assert "no retrace" in stdout, stdout
+
+
 def test_placement_and_scatter_staging_dtype():
     """Host-only checks (build_dist_gamg is pure staging, no devices):
 

@@ -184,6 +184,42 @@ def test_f32_and_f64_preconditioned_pcg_agree(seed):
                                rtol=1e-6, atol=1e-8)
 
 
+_COEFF_PROBLEM = []
+
+
+def _coeff_problem():
+    """Build the m=3 device-assembled elasticity problem once per session
+    (hypothesis re-runs the test body per example)."""
+    if not _COEFF_PROBLEM:
+        from repro.fem.assemble import assemble_elasticity
+        _COEFF_PROBLEM.append(assemble_elasticity(3))
+    return _COEFF_PROBLEM[0]
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_random_material_fields_spd_and_consistent(seed):
+    """ISSUE 5 satellite: any positive per-element E/nu fields yield a
+    symmetric positive definite reduced operator through the device
+    assembly path, and the constant-field coefficient update agrees with
+    the legacy scalar ``reassemble`` (its special case)."""
+    prob = _coeff_problem()
+    ne = prob.mesh.n_elements
+    rng = np.random.default_rng(seed)
+    E = rng.uniform(0.2, 8.0, ne)
+    nu = rng.uniform(0.05, 0.45, ne)
+    D = np.asarray(prob.coefficient_operator(E, nu).to_dense())
+    np.testing.assert_allclose(D, D.T, atol=1e-11)
+    w = np.linalg.eigvalsh(0.5 * (D + D.T))
+    assert w.min() > 0, f"not SPD: min eig {w.min()}"
+
+    scale = float(rng.uniform(0.5, 4.0))
+    A_c = prob.coefficient_operator(np.full(ne, scale), np.full(ne, 0.3))
+    A_r = prob.reassemble(scale)
+    np.testing.assert_allclose(np.asarray(A_c.data), np.asarray(A_r.data),
+                               rtol=1e-12, atol=1e-13)
+
+
 @given(st.integers(1, 1000), st.integers(1, 64))
 @settings(max_examples=50, deadline=None)
 def test_partition_covers_and_balances(nbr, ndev):
