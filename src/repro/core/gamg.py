@@ -48,6 +48,7 @@ from repro.core.tentative import tentative_prolongator
 from repro.core.vcycle import Hierarchy, LevelState, fine_operator, vcycle
 from repro.core.spmv import spmv_ell
 from repro.core.krylov import CGResult, pcg
+from repro.robust import inject
 
 Array = jax.Array
 
@@ -218,19 +219,51 @@ def level_state(ls: LevelSetup, a_data: Array,
                       r_ell=ls.r_ell.astype(h), dinv=dinv, lam_max=lam)
 
 
+def jittered_cholesky(densef: Array, base_scale: float,
+                      retry_scale: float) -> Array:
+    """Dense Cholesky with a one-shot jitter-escalation retry (jittable).
+
+    The base factorization adds ``base_scale * trace/n`` to the diagonal
+    (the legacy guard, bitwise when it succeeds — ``lax.cond`` evaluates
+    only the taken branch and adds no host sync).  A NaN factor — XLA's
+    Cholesky reports an indefinite or rank-deficient matrix as NaNs, it
+    never aborts — triggers one retry with the much larger
+    ``retry_scale * |trace|/n`` shift, which lifts any eigenvalue the
+    base jitter could not.  A factor that is NaN even after the retry
+    (corrupted payloads) is returned as-is: the V-cycle propagates it,
+    the Krylov health flags catch it within one iteration, and the
+    recovery ladder escalates to a re-setup.
+
+    Single source of truth for the coarse factorization — shared by
+    ``coarse_cholesky`` here and the distributed ``_rank_coarse_chol``.
+    """
+    n = densef.shape[0]
+    eye = jnp.eye(n, dtype=densef.dtype)
+    jitter = base_scale * jnp.trace(densef) / n
+    chol = jnp.linalg.cholesky(densef + jitter * eye)
+    # |trace|: an indefinite operator can have a tiny or negative trace,
+    # and a negative "jitter" would dig the retry deeper
+    retry_jitter = retry_scale * jnp.abs(jnp.trace(densef)) / n
+    return jax.lax.cond(
+        jnp.isfinite(chol).all(),
+        lambda: chol,
+        lambda: jnp.linalg.cholesky(densef + retry_jitter * eye))
+
+
 def coarse_cholesky(dense: Array, policy: PrecisionPolicy) -> Array:
     """Jittered dense Cholesky of the coarsest operator.
 
     fp64 keeps the legacy 1e-12 relative jitter bitwise; reduced-precision
     chains carry O(eps) rounding into the coarse operator, so the guard
     scales with the hierarchy eps (``PrecisionPolicy.coarse_jitter_scale``)
-    and the factorization runs at ``factor_dtype``.
+    and the factorization runs at ``factor_dtype``.  A NaN base factor
+    (indefinite/rank-deficient coarse operator) is retried once at the
+    escalated ``coarse_retry_scale`` jitter — see ``jittered_cholesky``.
     """
-    n = dense.shape[0]
     fd = jnp.dtype(policy.factor_dtype)
-    densef = dense.astype(fd)
-    jitter = policy.coarse_jitter_scale() * jnp.trace(densef) / n
-    chol = jnp.linalg.cholesky(densef + jitter * jnp.eye(n, dtype=fd))
+    chol = jittered_cholesky(dense.astype(fd),
+                             policy.coarse_jitter_scale(),
+                             policy.coarse_retry_scale())
     return chol.astype(policy.hierarchy_dtype)
 
 
@@ -251,11 +284,15 @@ def recompute(setupd: GAMGSetup, a_fine_data: Array) -> Hierarchy:
     a_in = jnp.asarray(a_fine_data)
     states = []
     a_data = a_in.astype(h)
-    for ls in setupd.levels:
+    for li, ls in enumerate(setupd.levels):
+        # level-gated payload-corruption site (trace-time identity unless
+        # a fault schedule is installed — repro.robust.inject)
+        a_data = inject.maybe("hierarchy", a_data, level=li)
         states.append(level_state(ls, a_data, policy))
         a_data = ptap_numeric_data(ls.ptap_cache, a_data,
                                    ls.P.data.astype(h),
                                    accum_dtype=policy.kernel_accum_dtype)
+    a_data = inject.maybe("hierarchy", a_data, level=len(setupd.levels))
     Ac = setupd.coarse_struct.with_data(a_data)
     chol = coarse_cholesky(Ac.to_dense(), policy)
     a_fine_ell = None

@@ -4,6 +4,13 @@ Convergence is monitored on the *unpreconditioned* residual norm, matching
 the paper's Sec. 4.1 ("with this norm the two formats converge in the same
 iteration count to the same true residual") — which makes the blocked/scalar
 iteration-parity test exact.
+
+Health monitoring (ISSUE 6): the while-loop carry additionally tracks
+NaN/Inf, CG-breakdown and stagnation flags plus the best (minimum-residual)
+iterate, surfaced as a structured ``SolveHealth`` on ``CGResult``.  All of
+it is derived from reductions the recurrence already computes, so the
+healthy path stays bitwise identical to the unmonitored loop (no extra
+syncs, no retraces — pinned by ``tests/test_robust.py``).
 """
 from __future__ import annotations
 
@@ -11,6 +18,9 @@ from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.robust import inject
+from repro.robust.health import SolveHealth, status_of
 
 Array = jax.Array
 
@@ -20,6 +30,7 @@ class CGResult(NamedTuple):
     iters: Array
     relres: Array
     converged: Array
+    health: SolveHealth
 
 
 def wrap_precond(apply_m: Callable[[Array], Array], precond_dtype,
@@ -49,7 +60,7 @@ def pcg(apply_a: Callable[[Array], Array],
         apply_m: Callable[[Array], Array],
         b: Array, x0: Array | None = None, rtol: float = 1e-8,
         maxiter: int = 200, record_history: bool = False,
-        precond_dtype=None):
+        precond_dtype=None, stall_window: int = 40):
     """Standard PCG; fixed SPD preconditioner (one AMG V-cycle).
 
     ``record_history=True`` (a static, trace-time switch — the default
@@ -72,6 +83,16 @@ def pcg(apply_a: Callable[[Array], Array],
     into a 0/0 NaN ``relres``.  An all-zero right-hand side therefore
     reports ``converged=True, iters=0, relres=0`` at every Krylov dtype
     (``x = 0`` is its exact solution).
+
+    Health (``CGResult.health``, a ``SolveHealth``): the loop exits early
+    on a NaN/Inf residual, on CG breakdown (non-positive ``p·Ap`` or
+    ``r·z`` on an active step — e.g. an indefinite reduced-precision
+    preconditioner) or after ``stall_window`` iterations without a new
+    best residual (stagnation/divergence).  A broken step's update is
+    discarded, and any non-converged exit returns the *minimum-residual*
+    iterate — never a diverged or NaN one.  On a clean converging run
+    every flag stays false and the iterates, iteration count and relres
+    are bitwise those of the unmonitored recurrence.
     """
     apply_m = wrap_precond(apply_m, precond_dtype, b.dtype)
     x = jnp.zeros_like(b) if x0 is None else x0
@@ -81,30 +102,75 @@ def pcg(apply_a: Callable[[Array], Array],
     rz = jnp.vdot(r, z)
     bnorm = jnp.maximum(jnp.linalg.norm(b), jnp.finfo(b.dtype).tiny)
     rnorm = jnp.linalg.norm(r)
+    # a poison rhs / x0 or a NaN first preconditioner apply is flagged
+    # before the first iteration; an indefinite M shows as r·z <= 0
+    nonf0 = ~jnp.isfinite(rnorm) | ~jnp.isfinite(rz)
+    brk0 = ~nonf0 & (rz <= 0) & (rnorm > rtol * bnorm)
 
     def cond(state):
-        x, r, z, p, rz, rnorm, k, hist = state
-        return (rnorm > rtol * bnorm) & (k < maxiter)
+        (x, r, z, p, rz, rnorm, k, hist, best, stall, brk, nonf) = state
+        return ((rnorm > rtol * bnorm) & (k < maxiter)
+                & ~brk & ~nonf & (stall < stall_window))
 
     def body(state):
-        x, r, z, p, rz, rnorm, k, hist = state
-        Ap = apply_a(p)
-        alpha = rz / jnp.vdot(p, Ap)
-        x = x + alpha * p
-        r = r - alpha * Ap
-        z = apply_m(r)
-        rz_new = jnp.vdot(r, z)
+        (x, r, z, p, rz, rnorm, k, hist,
+         (best_x, best_rnorm, best_k), stall, brk, nonf) = state
+        Ap = inject.maybe("spmv", apply_a(p), step=k)
+        pAp = jnp.vdot(p, Ap)
+        alpha = rz / pAp
+        x_new = x + alpha * p
+        r_new = r - alpha * Ap
+        z_new = inject.maybe("precond", apply_m(r_new), step=k)
+        rz_new = jnp.vdot(r_new, z_new)
         beta = rz_new / rz
-        p = z + beta * p
-        rnorm = jnp.linalg.norm(r)
+        p_new = z_new + beta * p
+        rnorm_new = jnp.linalg.norm(r_new)
+        nonf_new = (~jnp.isfinite(pAp) | ~jnp.isfinite(rnorm_new)
+                    | ~jnp.isfinite(rz_new))
+        brk_new = ~nonf_new & ((pAp <= 0)
+                               | ((rz_new <= 0)
+                                  & (rnorm_new > rtol * bnorm)))
+        ok_step = ~(nonf_new | brk_new)
+        # a broken step's update is discarded — the carry keeps the last
+        # healthy state and the loop exits through the flag
+        x = jnp.where(ok_step, x_new, x)
+        r = jnp.where(ok_step, r_new, r)
+        z = jnp.where(ok_step, z_new, z)
+        p = jnp.where(ok_step, p_new, p)
+        rz = jnp.where(ok_step, rz_new, rz)
+        rnorm = jnp.where(ok_step, rnorm_new, rnorm)
         if record_history:
             hist = hist.at[k].set(rnorm)
-        return x, r, z, p, rz_new, rnorm, k + 1, hist
+        improved = ok_step & (rnorm_new < best_rnorm)
+        best_x = jnp.where(improved, x_new, best_x)
+        best_rnorm = jnp.where(improved, rnorm_new, best_rnorm)
+        best_k = jnp.where(improved, k + 1, best_k)
+        stall = jnp.where(improved, 0, stall + 1)
+        return (x, r, z, p, rz, rnorm, k + 1, hist,
+                (best_x, best_rnorm, best_k), stall,
+                brk | brk_new, nonf | nonf_new)
 
     hist0 = (jnp.full((maxiter,), jnp.nan, rnorm.dtype) if record_history
              else jnp.zeros((0,), rnorm.dtype))
-    state = (x, r, z, p, rz, rnorm, jnp.asarray(0), hist0)
-    x, r, z, p, rz, rnorm, k, hist = jax.lax.while_loop(cond, body, state)
-    res = CGResult(x=x, iters=k, relres=rnorm / bnorm,
-                   converged=rnorm <= rtol * bnorm)
+    # a NaN initial residual must not poison the best-so-far tracking
+    # (identity when rnorm is finite, i.e. on every healthy run)
+    best_rnorm0 = jnp.where(jnp.isfinite(rnorm), rnorm, jnp.inf)
+    state = (x, r, z, p, rz, rnorm, jnp.asarray(0), hist0,
+             (x, best_rnorm0, jnp.asarray(0)), jnp.asarray(0), brk0, nonf0)
+    (x, r, z, p, rz, rnorm, k, hist,
+     (best_x, best_rnorm, best_k), stall, brk, nonf) = \
+        jax.lax.while_loop(cond, body, state)
+    converged = rnorm <= rtol * bnorm
+    # early termination (breakdown, stagnation, max-iters) returns the
+    # minimum-residual iterate, not the last one
+    x_out = jnp.where(converged, x, best_x)
+    rnorm_out = jnp.where(converged, rnorm, best_rnorm)
+    stag = ~converged & ~brk & ~nonf & (stall >= stall_window)
+    health = SolveHealth(
+        status=status_of(converged, brk, nonf, stag),
+        breakdown=brk, nonfinite=nonf, stagnation=stag,
+        best_iter=jnp.asarray(best_k, jnp.int32),
+        best_relres=best_rnorm / bnorm)
+    res = CGResult(x=x_out, iters=k, relres=rnorm_out / bnorm,
+                   converged=converged, health=health)
     return (res, hist) if record_history else res

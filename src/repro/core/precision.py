@@ -142,6 +142,17 @@ class PrecisionPolicy:
             return 1e-12
         return 100.0 * float(np.finfo(self.factor_dtype).eps)
 
+    def coarse_retry_scale(self) -> float:
+        """Escalated relative jitter for the coarse-Cholesky *retry* rung:
+        when the base-jitter factorization comes back NaN (an indefinite
+        or rank-deficient coarse operator — aggregation collapse, payload
+        corruption), the factorization is retried once with this larger
+        ``sqrt(eps)``-of-the-factor-dtype shift, which regularizes any
+        eigenvalue the first jitter could not lift while perturbing the
+        preconditioner (not the solution — CG re-monitors the true
+        residual) by only O(sqrt(eps))."""
+        return float(np.sqrt(np.finfo(self.factor_dtype).eps))
+
     def describe(self) -> str:
         return (f"hierarchy={self.hierarchy_dtype.name} "
                 f"smoother={self.smoother_dtype.name} "

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.core.block_csr import BlockELL
 from repro.core.spmv import apply_ell
+from repro.robust import inject
 
 Array = jax.Array
 
@@ -172,13 +173,17 @@ def vcycle(hier: Hierarchy, b: Array, smoother: str = "chebyshev",
     bs_stack = []
     x_stack = []
     rhs = b
-    for lv in hier.levels:
+    for li, lv in enumerate(hier.levels):
         x = apply_smoother(lv, rhs, jnp.zeros_like(rhs), smoother, degree)
         r = rhs - apply_ell(lv.a_ell, x)
         bs_stack.append(rhs)
         x_stack.append(x)
-        rhs = apply_ell(lv.r_ell, r)          # restrict
-    xc = jax.scipy.linalg.cho_solve((hier.coarse_chol, True), rhs)
+        # restrict; inject.maybe is a trace-time identity unless a fault
+        # schedule is installed (repro.robust.inject)
+        rhs = inject.maybe("vcycle", apply_ell(lv.r_ell, r), level=li)
+    xc = inject.maybe(
+        "coarse",
+        jax.scipy.linalg.cho_solve((hier.coarse_chol, True), rhs))
     for lv, rhs_l, x in zip(reversed(hier.levels), reversed(bs_stack),
                             reversed(x_stack)):
         x = x + apply_ell(lv.p_ell, xc)       # prolong + correct

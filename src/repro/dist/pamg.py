@@ -57,6 +57,7 @@ from jax import lax
 from repro.core.block_csr import BlockCSR
 from repro.core.spgemm import SpGEMMPlan
 from repro.dist.partition import RowPartition
+from repro.robust import inject
 
 Array = jax.Array
 
@@ -138,8 +139,13 @@ def halo_window(x: Array, halo: Halo) -> Array:
     """
     if halo.strategy in ("local", "replicated"):
         return x
+    # "halo" fault-injection site: corrupts the *communicated* window
+    # payload (trace-time identity unless a schedule is installed —
+    # repro.robust.inject); local/replicated strategies move no bytes and
+    # are exempt by construction.
     if halo.strategy == "allgather":
-        return lax.all_gather(x, AXIS, axis=0, tiled=True)
+        return inject.maybe(
+            "halo", lax.all_gather(x, AXIS, axis=0, tiled=True))
     parts = []
     for d in range(-halo.width, halo.width + 1):
         if d == 0:
@@ -149,7 +155,7 @@ def halo_window(x: Array, halo: Halo) -> Array:
         perm = [(i, i - d) for i in range(halo.ndev)
                 if 0 <= i - d < halo.ndev]
         parts.append(lax.ppermute(x, AXIS, perm))
-    return jnp.concatenate(parts, axis=0)
+    return inject.maybe("halo", jnp.concatenate(parts, axis=0))
 
 
 # ---------------------------------------------------------------------------

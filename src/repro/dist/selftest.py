@@ -46,9 +46,18 @@ Checks, on an m^3 Q1 elasticity problem:
     (two-material inclusion) problem — same iteration count, allclose
     solution — with zero retraces across repeated updates
     (``_cache_size() == 1``, including an f32-typed caller).
-  * always: scatter staging dtypes are the *policy's*, not the caller's —
-    an f32-cast payload/rhs stages at the same dtype as the f64 one
-    (same compiled program, no retrace, no dtype poisoning).
+  * with ``REPRO_SELFTEST_FAULT=1``: the **fault battery over the wire** —
+    a NaN planted into the halo-exchange windows (``repro.robust.inject``,
+    site ``"halo"``) of a freshly traced program trips the collective
+    health flags (not-ok, status != healthy) while the returned best
+    iterate stays finite (no silent NaN escapes a rank); an Inf planted
+    into the distributed CG's operator apply at a chosen step is flagged
+    within one outer iteration; and a clean re-staging afterwards restores
+    exact (bitwise) parity with the unfaulted solve.
+  * always: the healthy-path status is ``HEALTHY`` on every section's
+    solve, and scatter staging dtypes are the *policy's*, not the
+    caller's — an f32-cast payload/rhs stages at the same dtype as the
+    f64 one (same compiled program, no retrace, no dtype poisoning).
 
 Prints ``OK`` on success (asserts otherwise).
 """
@@ -101,8 +110,9 @@ def main(m: int) -> int:
         (a0_32.dtype, a0.dtype, dg.payload_stage_dtype)
     assert b_32.dtype == b.dtype == setupd.precision.krylov_dtype, \
         (b_32.dtype, b.dtype)
-    x, iters, relres, ok = jax.block_until_ready(run(args, a0, b))
+    x, iters, relres, ok, status = jax.block_until_ready(run(args, a0, b))
     x_g = dg.gather_vector(x)
+    assert int(status[0]) == 0, f"healthy solve flagged: {status}"
 
     halo = dg.levels[0].a_op.halo
     widths = [lv.a_op.halo.width for lv in dg.levels]
@@ -122,7 +132,7 @@ def main(m: int) -> int:
     a_new = prob.A.data * 1.5
     solver.update_operator(a_new)
     ref1 = solver.solve(prob.b)
-    x1, it1, rr1, ok1 = jax.block_until_ready(
+    x1, it1, rr1, ok1, _ = jax.block_until_ready(
         run(args, dg.scatter_fine_payloads(a_new), b))
     assert bool(ok1[0])
     assert int(it1[0]) == int(ref1.iters), (int(it1[0]), int(ref1.iters))
@@ -135,7 +145,7 @@ def main(m: int) -> int:
     # costs time, never accuracy)
     dg2 = build_dist_gamg(setupd, ndev, coarse_eq_limit=0)
     run2 = make_dist_solver(dg2, setupd, mesh, rtol=1e-8, maxiter=200)
-    x2, it2, _, ok2 = jax.block_until_ready(
+    x2, it2, _, ok2, _ = jax.block_until_ready(
         run2(dg2.sharded_args(setupd), dg2.scatter_fine_payloads(a_new), b))
     assert bool(ok2[0]) and int(it2[0]) == int(it1[0])
     np.testing.assert_allclose(dg.gather_vector(x2),
@@ -151,9 +161,10 @@ def main(m: int) -> int:
                        0.5 * np.asarray(prob.b) + rng.standard_normal(prob.n),
                        rng.standard_normal(prob.n)], axis=1)
         ref_mr = solver.solve_many(jax.numpy.asarray(B3))
-        xm, itm, rrm, okm = jax.block_until_ready(
+        xm, itm, rrm, okm, stm = jax.block_until_ready(
             run(args, dg.scatter_fine_payloads(a_new),
                 dg.scatter_vector(B3)))
+        assert (np.asarray(stm[0]) == 0).all(), stm
         assert bool(np.asarray(okm[0]).all()), (itm, rrm)
         assert np.array_equal(np.asarray(itm[0]), np.asarray(ref_mr.iters)), \
             f"mrhs iters: dist={np.asarray(itm[0])} " \
@@ -183,7 +194,7 @@ def main(m: int) -> int:
             run_sh = make_dist_solver(dg_sh, setup_a, mesh, rtol=1e-8,
                                       maxiter=200)
             b_a = dg_sh.scatter_vector(prob.b)
-            xs, its, _, oks = jax.block_until_ready(
+            xs, its, _, oks, _ = jax.block_until_ready(
                 run_sh(dg_sh.sharded_args(setup_a),
                        dg_sh.scatter_fine_payloads(a_vals), b_a))
             assert bool(oks[0])
@@ -195,8 +206,8 @@ def main(m: int) -> int:
                                   maxiter=200)
         args_ag = dg_ag.sharded_args(setup_a)
         a0_ag = dg_ag.scatter_fine_payloads(a_vals)
-        xa, ita, rra, oka = jax.block_until_ready(run_ag(args_ag, a0_ag,
-                                                         b_a))
+        xa, ita, rra, oka, _ = jax.block_until_ready(run_ag(args_ag, a0_ag,
+                                                            b_a))
         assert bool(oka[0]), (ita, rra)
         assert int(ita[0]) == sh_iters, \
             f"agg parity: agglomerated={int(ita[0])} sharded={sh_iters}"
@@ -213,11 +224,11 @@ def main(m: int) -> int:
                 [np.asarray(prob.b),
                  0.5 * np.asarray(prob.b) + rng_a.standard_normal(prob.n),
                  rng_a.standard_normal(prob.n)], axis=1)
-            xm_s, itm_s, _, okm_s = jax.block_until_ready(
+            xm_s, itm_s, _, okm_s, _ = jax.block_until_ready(
                 run_sh(dg_sh.sharded_args(setup_a),
                        dg_sh.scatter_fine_payloads(a_vals),
                        dg_sh.scatter_vector(Ba)))
-            xm_a, itm_a, _, okm_a = jax.block_until_ready(
+            xm_a, itm_a, _, okm_a, _ = jax.block_until_ready(
                 run_ag(args_ag, a0_ag, dg_ag.scatter_vector(Ba)))
             assert bool(np.asarray(okm_s[0]).all())
             assert bool(np.asarray(okm_a[0]).all())
@@ -243,8 +254,9 @@ def main(m: int) -> int:
         solver.bind_assembler(prob.assembler)
         solver.update_coefficients(E_h, nu_h)
         ref_c = solver.solve(prob.b)
-        xc, itc, rrc, okc = jax.block_until_ready(
+        xc, itc, rrc, okc, stc = jax.block_until_ready(
             run_c(args, aargs, *da.scatter_fields(E_h, nu_h), b))
+        assert int(stc[0]) == 0, stc
         assert bool(okc[0]), (itc, rrc)
         assert int(itc[0]) == int(ref_c.iters), \
             f"coeff parity: dist={int(itc[0])} single={int(ref_c.iters)}"
@@ -253,7 +265,7 @@ def main(m: int) -> int:
                                    atol=1e-9)
         # rank-local assembly == globally assembled value stream, exactly
         A_h = prob.coefficient_operator(E_h, nu_h)
-        xv, itv, _, okv = jax.block_until_ready(
+        xv, itv, _, okv, _ = jax.block_until_ready(
             run(args, dg.scatter_fine_payloads(A_h.data), b))
         assert bool(okv[0]) and int(itv[0]) == int(itc[0])
         np.testing.assert_allclose(dg.gather_vector(xv),
@@ -267,6 +279,63 @@ def main(m: int) -> int:
         print(f"coefficient hot-loop parity: iters={int(itc[0])} "
               f"(assembled rank-locally, no retrace)")
 
+    if os.environ.get("REPRO_SELFTEST_FAULT") == "1":
+        # fault battery over the wire.  The schedule must be live while
+        # the program under test is TRACED (injection is trace-time), so
+        # each case stages and jits a fresh program inside the context.
+        from repro.robust import inject
+        from repro.robust.health import HEALTHY, STATUS_NAMES
+
+        # (a) NaN into the halo-exchange windows: every ppermute/allgather
+        # window in the program (CG spmv halos, recompute stage-2 windows,
+        # power-iteration halos) is poisoned; the collective flags must
+        # trip on every rank and the returned best iterate stays finite.
+        with inject.active(inject.parse_schedule("halo:nan")):
+            dg_f = build_dist_gamg(setupd, ndev, coarse_eq_limit=0)
+            run_f = make_dist_solver(dg_f, setupd, mesh, rtol=1e-8,
+                                     maxiter=200)
+            xf, itf, rrf, okf, stf = jax.block_until_ready(
+                run_f(dg_f.sharded_args(setupd),
+                      dg_f.scatter_fine_payloads(prob.A.data), b))
+        st_f = int(np.asarray(stf)[0])
+        assert not bool(okf[0]), "halo fault must prevent convergence"
+        assert st_f != HEALTHY, STATUS_NAMES.get(st_f, st_f)
+        assert np.isfinite(dg_f.gather_vector(xf)).all(), \
+            "a silent NaN escaped the flagged halo-faulted solve"
+        print(f"halo fault detected: status={STATUS_NAMES[st_f]} "
+              f"iters={int(itf[0])}")
+
+        # (b) Inf into the distributed CG's operator apply at step 2:
+        # flagged within one outer iteration of the injection.
+        with inject.active(inject.parse_schedule("spmv:inf@2")):
+            dg_f2 = build_dist_gamg(setupd, ndev, coarse_eq_limit=0)
+            run_f2 = make_dist_solver(dg_f2, setupd, mesh, rtol=1e-8,
+                                      maxiter=200)
+            xf2, itf2, _, okf2, stf2 = jax.block_until_ready(
+                run_f2(dg_f2.sharded_args(setupd),
+                       dg_f2.scatter_fine_payloads(prob.A.data), b))
+        st_f2 = int(np.asarray(stf2)[0])
+        assert not bool(okf2[0]) and st_f2 != HEALTHY
+        assert int(itf2[0]) <= 3, \
+            f"step-2 spmv fault flagged late: iters={int(itf2[0])}"
+        assert np.isfinite(dg_f2.gather_vector(xf2)).all()
+        print(f"spmv@2 fault detected: status={STATUS_NAMES[st_f2]} "
+              f"iters={int(itf2[0])}")
+
+        # (c) recovery: a clean re-staging (no schedule installed) must
+        # restore exact parity with the unfaulted cold solve.
+        assert inject.current() is None
+        dg_r = build_dist_gamg(setupd, ndev, coarse_eq_limit=0)
+        run_r = make_dist_solver(dg_r, setupd, mesh, rtol=1e-8, maxiter=200)
+        xr, itr, _, okr, str_ = jax.block_until_ready(
+            run_r(dg_r.sharded_args(setupd),
+                  dg_r.scatter_fine_payloads(prob.A.data), b))
+        assert bool(okr[0]) and int(np.asarray(str_)[0]) == HEALTHY
+        assert int(itr[0]) == int(iters[0]), (int(itr[0]), int(iters[0]))
+        np.testing.assert_allclose(dg_r.gather_vector(xr), x_g,
+                                   rtol=0, atol=0)
+        print("post-fault re-staging parity: identical")
+
     prec = os.environ.get("REPRO_PRECISION")
     if prec and prec not in ("f64", "fp64", "float64", "double"):
         # reduced-precision-resident distributed hierarchy: fp64 outer CG,
@@ -275,7 +344,7 @@ def main(m: int) -> int:
         setup_p = gamg.setup(prob.A, prob.B, coarse_size=30, precision=prec)
         dg_p = build_dist_gamg(setup_p, ndev)
         run_p = make_dist_solver(dg_p, setup_p, mesh, rtol=1e-8, maxiter=200)
-        xp, itp, rrp, okp = jax.block_until_ready(
+        xp, itp, rrp, okp, _ = jax.block_until_ready(
             run_p(dg_p.sharded_args(setup_p),
                   dg_p.scatter_fine_payloads(prob.A.data), b))
         assert bool(okp[0]), (itp, rrp)

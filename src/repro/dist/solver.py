@@ -56,7 +56,7 @@ from jax.sharding import PartitionSpec
 
 from repro.core.block_csr import BlockCSR, BlockELL
 from repro.core.gamg import GAMGSetup, LevelSetup, coarse_cholesky, \
-    level_state
+    jittered_cholesky, level_state
 from repro.core.krylov import wrap_precond
 from repro.core.precision import PrecisionPolicy
 from repro.core.ptap import ptap_numeric_data
@@ -83,6 +83,8 @@ from repro.dist.pamg import (
 )
 from repro.dist.partition import RowPartition, partition_rows
 from repro.multirhs.block_krylov import block_pcg
+from repro.robust import inject
+from repro.robust.health import status_of
 
 #: Default agglomeration threshold, in equations per rank (the PETSc
 #: ``-pc_gamg_process_eq_limit`` default): a level whose global equation
@@ -644,7 +646,12 @@ def _rank_recompute(dg: DistGAMG, args, a_slab: Array):
 
 
 def _rank_coarse_chol(dg: DistGAMG, ac_slab: Array) -> Array:
-    """Replicated dense Cholesky of the (tiny) coarsest operator."""
+    """Replicated dense Cholesky of the (tiny) coarsest operator.
+
+    Shares ``gamg.jittered_cholesky`` — including its NaN-detect
+    jitter-escalation retry — so the dist path hardens against an
+    indefinite coarse operator exactly like the single-device one.
+    """
     c = dg.coarse
     policy = dg.precision
     g = lax.all_gather(ac_slab, AXIS, axis=0, tiled=True)
@@ -653,10 +660,9 @@ def _rank_coarse_chol(dg: DistGAMG, ac_slab: Array) -> Array:
     dense4 = dense4.at[jnp.asarray(c.rows), jnp.asarray(c.cols)].add(blocks)
     n = c.nbr * c.bs
     dense = dense4.transpose(0, 2, 1, 3).reshape(n, n)
-    fd = jnp.dtype(policy.factor_dtype)
-    densef = dense.astype(fd)
-    jitter = policy.coarse_jitter_scale() * jnp.trace(densef) / n
-    chol = jnp.linalg.cholesky(densef + jitter * jnp.eye(n, dtype=fd))
+    chol = jittered_cholesky(dense.astype(jnp.dtype(policy.factor_dtype)),
+                             policy.coarse_jitter_scale(),
+                             policy.coarse_retry_scale())
     return chol.astype(policy.hierarchy_dtype)
 
 
@@ -827,12 +833,21 @@ def _rank_vcycle(dg: DistGAMG, args, states, chol: Array, b: Array) -> Array:
 
 
 def _rank_pcg(dg: DistGAMG, args, states, chol: Array, b: Array,
-              rtol: float, maxiter: int):
+              rtol: float, maxiter: int, stall_window: int = 40):
     """Distributed PCG — mirrors ``repro.core.krylov.pcg`` with psum dots.
 
     Under a mixed policy the operator uses level 0's krylov-dtype payload
     copy and the V-cycle runs at the smoother dtype behind the same
     boundary cast as ``pcg(precond_dtype=...)``.
+
+    Health mirrors ``pcg`` too: NaN/Inf, breakdown and stagnation flags
+    folded into the int32 status the solver returns alongside
+    (x, iters, relres, ok).  The flags read the psum reductions the
+    recurrence already performs, and every rank computes them from the
+    same replicated scalars — the exit decision is collective for free,
+    no extra communication.  A faulted halo/spmv on ONE rank still trips
+    every rank's flag within one iteration, because the corrupted value
+    enters the global psum.  Clean runs are bitwise the pre-health loop.
     """
     a0 = args["levels"][0]
     st0 = states[0]
@@ -854,26 +869,57 @@ def _rank_pcg(dg: DistGAMG, args, states, chol: Array, b: Array,
     # reports converged=True, iters=0, relres=0 at any krylov dtype
     bnorm = jnp.maximum(_pnorm(b), jnp.finfo(b.dtype).tiny)
     rnorm = _pnorm(r)
+    nonf0 = ~jnp.isfinite(rnorm) | ~jnp.isfinite(rz)
+    brk0 = ~nonf0 & (rz <= 0) & (rnorm > rtol * bnorm)
 
     def cond(state):
-        _, _, _, _, _, rnorm, k = state
-        return (rnorm > rtol * bnorm) & (k < maxiter)
+        (x, r, z, p, rz, rnorm, k, best, stall, brk, nonf) = state
+        return ((rnorm > rtol * bnorm) & (k < maxiter)
+                & ~brk & ~nonf & (stall < stall_window))
 
     def body(state):
-        x, r, z, p, rz, rnorm, k = state
-        Ap = apply_a(p)
-        alpha = rz / _pdot(p, Ap)
-        x = x + alpha * p
-        r = r - alpha * Ap
-        z = apply_m(r)
-        rz_new = _pdot(r, z)
+        (x, r, z, p, rz, rnorm, k,
+         (best_x, best_rnorm), stall, brk, nonf) = state
+        Ap = inject.maybe("spmv", apply_a(p), step=k)
+        pAp = _pdot(p, Ap)
+        alpha = rz / pAp
+        x_new = x + alpha * p
+        r_new = r - alpha * Ap
+        z_new = inject.maybe("precond", apply_m(r_new), step=k)
+        rz_new = _pdot(r_new, z_new)
         beta = rz_new / rz
-        p = z + beta * p
-        return x, r, z, p, rz_new, _pnorm(r), k + 1
+        p_new = z_new + beta * p
+        rnorm_new = _pnorm(r_new)
+        nonf_new = (~jnp.isfinite(pAp) | ~jnp.isfinite(rnorm_new)
+                    | ~jnp.isfinite(rz_new))
+        brk_new = ~nonf_new & ((pAp <= 0)
+                               | ((rz_new <= 0)
+                                  & (rnorm_new > rtol * bnorm)))
+        ok_step = ~(nonf_new | brk_new)
+        x = jnp.where(ok_step, x_new, x)
+        r = jnp.where(ok_step, r_new, r)
+        z = jnp.where(ok_step, z_new, z)
+        p = jnp.where(ok_step, p_new, p)
+        rz = jnp.where(ok_step, rz_new, rz)
+        rnorm = jnp.where(ok_step, rnorm_new, rnorm)
+        improved = ok_step & (rnorm_new < best_rnorm)
+        best_x = jnp.where(improved, x_new, best_x)
+        best_rnorm = jnp.where(improved, rnorm_new, best_rnorm)
+        stall = jnp.where(improved, 0, stall + 1)
+        return (x, r, z, p, rz, rnorm, k + 1, (best_x, best_rnorm),
+                stall, brk | brk_new, nonf | nonf_new)
 
-    state = (x, r, z, p, rz, rnorm, jnp.asarray(0))
-    x, r, z, p, rz, rnorm, k = lax.while_loop(cond, body, state)
-    return x, k, rnorm / bnorm, rnorm <= rtol * bnorm
+    best_rnorm0 = jnp.where(jnp.isfinite(rnorm), rnorm, jnp.inf)
+    state = (x, r, z, p, rz, rnorm, jnp.asarray(0), (x, best_rnorm0),
+             jnp.asarray(0), brk0, nonf0)
+    (x, r, z, p, rz, rnorm, k, (best_x, best_rnorm), stall, brk, nonf) = \
+        lax.while_loop(cond, body, state)
+    converged = rnorm <= rtol * bnorm
+    x_out = jnp.where(converged, x, best_x)
+    rnorm_out = jnp.where(converged, rnorm, best_rnorm)
+    stag = ~converged & ~brk & ~nonf & (stall >= stall_window)
+    status = status_of(converged, brk, nonf, stag)
+    return x_out, k, rnorm_out / bnorm, converged, status
 
 
 def _rank_block_pcg(dg: DistGAMG, args, states, chol: Array, b: Array,
@@ -900,7 +946,7 @@ def _rank_block_pcg(dg: DistGAMG, args, states, chol: Array, b: Array,
     res = block_pcg(apply_a, apply_m, b, rtol=rtol, maxiter=maxiter,
                     col_dot=_pdot_cols, col_norm=_pnorm_cols,
                     precond_dtype=dg.precision.smoother_dtype)
-    return res.x, res.iters, res.relres, res.converged
+    return res.x, res.iters, res.relres, res.converged, res.health.status
 
 
 # ---------------------------------------------------------------------------
@@ -909,13 +955,16 @@ def _rank_block_pcg(dg: DistGAMG, args, states, chol: Array, b: Array,
 
 def make_dist_solver(dg: DistGAMG, setupd: GAMGSetup, mesh, *,
                      rtol: float = 1e-8, maxiter: int = 200):
-    """Jitted distributed hot path: (args, a0, b) -> (x, iters, relres, ok).
+    """Jitted distributed hot path:
+    ``(args, a0, b) -> (x, iters, relres, ok, status)``.
 
     ``args`` from ``dg.sharded_args``, ``a0`` from
     ``dg.scatter_fine_payloads`` (new fine operator values — the Newton
     step), ``b`` from ``dg.scatter_vector``.  One shard_map program:
     recompute the hierarchy, then CG-solve.  Outputs are stacked per rank;
-    iters/relres/converged are replicated, take index 0.
+    iters/relres/converged/status are replicated, take index 0.
+    ``status`` is the int32 health code of ``repro.robust.health``
+    (``STATUS_NAMES``), scalar for a vector solve, per-column for a panel.
 
     ``b`` may be a single scattered vector (slabs ``(rpad, bs)``) or a
     scattered panel (``(rpad, bs, k)`` — ``dg.scatter_vector`` on an
@@ -932,9 +981,9 @@ def make_dist_solver(dg: DistGAMG, setupd: GAMGSetup, mesh, *,
         args, a0, b = jax.tree.map(lambda t: t[0], (args, a0, b))
         states, chol = _rank_recompute(dg, args, a0)
         run_pcg = _rank_block_pcg if b.ndim == 3 else _rank_pcg
-        x, k, relres, ok = run_pcg(dg, args, states, chol, b,
-                                   rtol, maxiter)
-        return (x[None], k[None], relres[None], ok[None])
+        x, k, relres, ok, status = run_pcg(dg, args, states, chol, b,
+                                           rtol, maxiter)
+        return (x[None], k[None], relres[None], ok[None], status[None])
 
     sharded = shard_map(rank_fn, mesh, in_specs=(P(AXIS), P(AXIS), P(AXIS)),
                         out_specs=P(AXIS), check_rep=False)
@@ -944,7 +993,7 @@ def make_dist_solver(dg: DistGAMG, setupd: GAMGSetup, mesh, *,
 def make_dist_coeff_solver(dg: DistGAMG, da: DistAssembly, mesh, *,
                            rtol: float = 1e-8, maxiter: int = 200):
     """Jitted distributed *coefficient* hot path:
-    ``(args, aargs, E, nu, b) -> (x, iters, relres, ok)``.
+    ``(args, aargs, E, nu, b) -> (x, iters, relres, ok, status)``.
 
     The quasi-static front door: instead of a pre-assembled value stream
     (``make_dist_solver``'s ``a0``), each rank receives its coefficient
@@ -961,9 +1010,9 @@ def make_dist_coeff_solver(dg: DistGAMG, da: DistAssembly, mesh, *,
         a_slab = _rank_assemble(da, aargs, E, nu)
         states, chol = _rank_recompute(dg, args, a_slab)
         run_pcg = _rank_block_pcg if b.ndim == 3 else _rank_pcg
-        x, k, relres, ok = run_pcg(dg, args, states, chol, b,
-                                   rtol, maxiter)
-        return (x[None], k[None], relres[None], ok[None])
+        x, k, relres, ok, status = run_pcg(dg, args, states, chol, b,
+                                           rtol, maxiter)
+        return (x[None], k[None], relres[None], ok[None], status[None])
 
     sharded = shard_map(rank_fn, mesh, in_specs=(P(AXIS),) * 5,
                         out_specs=P(AXIS), check_rep=False)

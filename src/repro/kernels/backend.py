@@ -23,6 +23,15 @@ interpreter.  This module centralizes the decision:
 * ``resolve_precision``  — the solver-stack ``PrecisionPolicy``:
                            ``None`` falls back to ``REPRO_PRECISION``
                            ("f64" | "f32" | "bf16"), default full fp64.
+* ``resolve_faults``     — the fault-injection ``FaultSchedule``:
+                           ``None`` falls back to ``REPRO_FAULTS``
+                           (semicolon-separated
+                           ``site:kind[@step][:level=N][:index=N]
+                           [:persistent]`` specs), default no injection.
+* ``resolve_recover``    — the breakdown-recovery ``RecoveryPolicy``:
+                           ``None`` falls back to ``REPRO_RECOVER``
+                           ("off" | "on" | max-attempts integer),
+                           default off (``None``).
 
 Every front door (``spmv``, ``spgemm_numeric_data``, ``set_values_coo``)
 accepts ``None`` for these knobs and resolves them here, so the same call
@@ -139,3 +148,50 @@ def resolve_precision(precision=None):
     if precision is None:
         return PrecisionPolicy.double()
     return PrecisionPolicy.from_name(precision)
+
+
+def resolve_faults(spec=None):
+    """Default fault-injection schedule; honours ``REPRO_FAULTS``.
+
+    ``spec`` may be a ``repro.robust.inject.FaultSchedule``, a spec string
+    in the ``REPRO_FAULTS`` mini-language, or ``None`` — which reads
+    ``REPRO_FAULTS`` (re-read per call, mirroring the other knobs) and
+    falls back to no injection (``None``).  Invalid specs raise
+    ``ValueError``.
+    """
+    from repro.robust import inject
+    if spec is None:
+        spec = os.environ.get("REPRO_FAULTS")
+    if spec is None or isinstance(spec, inject.FaultSchedule):
+        return spec
+    return inject.parse_schedule(spec)
+
+
+def resolve_recover(policy=None):
+    """Default breakdown-recovery policy; honours ``REPRO_RECOVER``.
+
+    ``policy`` may be a ``repro.robust.recover.RecoveryPolicy``, a knob
+    string ("off"/"0" -> disabled, "on"/"1" -> defaults, an integer ->
+    that many ladder attempts), or ``None`` — which reads
+    ``REPRO_RECOVER`` (re-read per call) and falls back to disabled
+    (``None``).  Invalid values raise ``ValueError``.
+    """
+    from repro.robust.recover import RecoveryPolicy
+    if isinstance(policy, RecoveryPolicy):
+        return policy
+    if policy is None:
+        policy = os.environ.get("REPRO_RECOVER")
+    if policy is None:
+        return None
+    key = str(policy).strip().lower()
+    if key in ("0", "off", "false", "none", ""):
+        return None
+    if key in ("1", "on", "true", "default"):
+        return RecoveryPolicy()
+    try:
+        return RecoveryPolicy(max_attempts=int(key))
+    except ValueError as e:
+        raise ValueError(
+            f"invalid recovery knob {policy!r}: expected 'off', 'on' or a "
+            f"max-attempts integer (from REPRO_RECOVER or the recover= "
+            f"knob)") from e

@@ -12,6 +12,13 @@ iteration counts, the same solutions to fp tolerance
 Convergence is monitored on the unpreconditioned residual norm per column,
 matching ``repro.core.krylov.pcg`` — iteration-count parity with the
 single-RHS path depends on the two monitors being identical.
+
+Health monitoring rides the same per-column masks: a column whose
+recurrence goes NaN/Inf, breaks down or stagnates is *quarantined* — its
+updates freeze exactly like a converged column's, its flags are recorded
+per column in ``BlockCGResult.health``, and its panel neighbours keep
+iterating untouched.  This is the mechanism the solve server's per-request
+``degraded``/``failed`` statuses are built on.
 """
 from __future__ import annotations
 
@@ -24,6 +31,8 @@ import jax.numpy as jnp
 from repro.core.krylov import wrap_precond
 from repro.core.vcycle import Hierarchy, fine_operator, vcycle
 from repro.core.spmv import apply_ell
+from repro.robust import inject
+from repro.robust.health import SolveHealth, status_of
 
 Array = jax.Array
 
@@ -33,6 +42,7 @@ class BlockCGResult(NamedTuple):
     iters: Array      # (k,)   iterations applied to each column
     relres: Array     # (k,)   final per-column relative residual
     converged: Array  # (k,)   bool
+    health: SolveHealth  # per-column (k,) health record
 
 
 def _col_dot(a: Array, b: Array) -> Array:
@@ -50,13 +60,14 @@ def block_pcg(apply_a: Callable[[Array], Array],
               maxiter: int = 200, *,
               col_dot: Callable[[Array, Array], Array] = _col_dot,
               col_norm: Callable[[Array], Array] = _col_norm,
-              precond_dtype=None) -> BlockCGResult:
+              precond_dtype=None, stall_window: int = 40) -> BlockCGResult:
     """PCG on a panel ``B: (..., k)`` with per-column masking.
 
-    A column is *active* while its residual exceeds ``rtol * ||b_col||``;
-    frozen columns receive zero updates (``alpha = 0``) and keep their CG
-    state, so the surviving columns' arithmetic is exactly the single-RHS
-    recurrence.  The loop runs until every column converges or ``maxiter``.
+    A column is *active* while its residual exceeds ``rtol * ||b_col||``
+    and no health flag has tripped; frozen columns receive zero updates
+    (``alpha = 0``) and keep their CG state, so the surviving columns'
+    arithmetic is exactly the single-RHS recurrence.  The loop runs until
+    every column converges or is flagged, or ``maxiter``.
     Zero columns (``||b|| ~ 0``) are inactive from the start (iters 0,
     converged, relres 0) — that is what makes the solve server's padding
     columns free.  Their denominator floor is ``finfo(B.dtype).tiny``
@@ -75,6 +86,13 @@ def block_pcg(apply_a: Callable[[Array], Array],
     ``core.krylov.pcg``: the panel residual is cast down before
     ``apply_m`` and the result cast back, so the masked outer recurrence
     stays at the Krylov dtype over a reduced-precision hierarchy.
+
+    Health (``BlockCGResult.health``, per-column ``SolveHealth``): the
+    operator and the V-cycle are column-independent, so corruption stays
+    in its column; a flagged column is quarantined (frozen like a
+    converged one, its broken step discarded) and its minimum-residual
+    iterate is what the panel returns for it.  Clean columns' arithmetic,
+    iteration counts and relres are bitwise unchanged.
     """
     apply_m = wrap_precond(apply_m, precond_dtype, B.dtype)
     x = jnp.zeros_like(B) if x0 is None else x0
@@ -84,34 +102,75 @@ def block_pcg(apply_a: Callable[[Array], Array],
     rz = col_dot(r, z)
     bnorm = jnp.maximum(col_norm(B), jnp.finfo(B.dtype).tiny)
     rnorm = col_norm(r)
+    nonf0 = ~jnp.isfinite(rnorm) | ~jnp.isfinite(rz)
+    brk0 = ~nonf0 & (rz <= 0) & (rnorm > rtol * bnorm)
 
     def cond(state):
-        x, r, z, p, rz, rnorm, iters, k = state
-        return jnp.any(rnorm > rtol * bnorm) & (k < maxiter)
+        (x, r, z, p, rz, rnorm, iters, k, best, stall, brk, nonf) = state
+        active = ((rnorm > rtol * bnorm) & ~brk & ~nonf
+                  & (stall < stall_window))
+        return jnp.any(active) & (k < maxiter)
 
     def body(state):
-        x, r, z, p, rz, rnorm, iters, k = state
-        active = rnorm > rtol * bnorm
-        Ap = apply_a(p)
+        (x, r, z, p, rz, rnorm, iters, k,
+         (best_x, best_rnorm, best_iter), stall, brk, nonf) = state
+        active = ((rnorm > rtol * bnorm) & ~brk & ~nonf
+                  & (stall < stall_window))
+        Ap = inject.maybe("spmv", apply_a(p), step=k)
         pAp = col_dot(p, Ap)
         # frozen columns: guard the denominators, zero the step
         alpha = jnp.where(active, rz / jnp.where(active, pAp, 1.0), 0.0)
-        x = x + alpha * p
-        r = r - alpha * Ap
-        z = apply_m(r)
-        rz_new = col_dot(r, z)
+        x_new = x + alpha * p
+        r_new = r - alpha * Ap
+        z_new = inject.maybe("precond", apply_m(r_new), step=k)
+        rz_new = col_dot(r_new, z_new)
         beta = jnp.where(active, rz_new / jnp.where(active, rz, 1.0), 0.0)
-        p = jnp.where(active, z + beta * p, p)
-        rz = jnp.where(active, rz_new, rz)
-        rnorm = col_norm(r)       # frozen columns: r unchanged -> unchanged
+        rnorm_new = col_norm(r_new)
+        nonf_new = active & (~jnp.isfinite(pAp) | ~jnp.isfinite(rnorm_new)
+                             | ~jnp.isfinite(rz_new))
+        brk_new = active & ~nonf_new & ((pAp <= 0)
+                                        | ((rz_new <= 0)
+                                           & (rnorm_new > rtol * bnorm)))
+        ok_step = active & ~nonf_new & ~brk_new
+        # a broken column's step is discarded — it keeps its last healthy
+        # state, is quarantined by its flag, and its neighbours continue
+        x = jnp.where(ok_step | ~active, x_new, x)
+        r = jnp.where(ok_step | ~active, r_new, r)
+        z = jnp.where(ok_step, z_new, z)
+        p = jnp.where(ok_step, z_new + beta * p, p)
+        rz = jnp.where(ok_step, rz_new, rz)
+        rnorm = jnp.where(ok_step, rnorm_new, rnorm)
+        improved = ok_step & (rnorm_new < best_rnorm)
+        best_x = jnp.where(improved, x_new, best_x)
+        best_rnorm = jnp.where(improved, rnorm_new, best_rnorm)
+        best_iter = jnp.where(improved, k + 1, best_iter)
+        stall = jnp.where(improved, 0, stall + active.astype(stall.dtype))
         iters = iters + active.astype(iters.dtype)
-        return x, r, z, p, rz, rnorm, iters, k + 1
+        return (x, r, z, p, rz, rnorm, iters, k + 1,
+                (best_x, best_rnorm, best_iter), stall,
+                brk | brk_new, nonf | nonf_new)
 
     iters0 = jnp.zeros(B.shape[-1], jnp.int32)
-    state = (x, r, z, p, rz, rnorm, iters0, jnp.asarray(0))
-    x, r, z, p, rz, rnorm, iters, k = jax.lax.while_loop(cond, body, state)
-    return BlockCGResult(x=x, iters=iters, relres=rnorm / bnorm,
-                         converged=rnorm <= rtol * bnorm)
+    # a NaN initial residual must not poison the best-so-far tracking
+    best_rnorm0 = jnp.where(jnp.isfinite(rnorm), rnorm, jnp.inf)
+    state = (x, r, z, p, rz, rnorm, iters0, jnp.asarray(0),
+             (x, best_rnorm0, jnp.zeros(B.shape[-1], jnp.int32)),
+             jnp.zeros(B.shape[-1], jnp.int32), brk0, nonf0)
+    (x, r, z, p, rz, rnorm, iters, k,
+     (best_x, best_rnorm, best_iter), stall, brk, nonf) = \
+        jax.lax.while_loop(cond, body, state)
+    converged = rnorm <= rtol * bnorm
+    # a non-converged column reports its minimum-residual iterate
+    x_out = jnp.where(converged, x, best_x)
+    rnorm_out = jnp.where(converged, rnorm, best_rnorm)
+    stag = ~converged & ~brk & ~nonf & (stall >= stall_window)
+    health = SolveHealth(
+        status=status_of(converged, brk, nonf, stag),
+        breakdown=brk, nonfinite=nonf, stagnation=stag,
+        best_iter=best_iter.astype(jnp.int32),
+        best_relres=best_rnorm / bnorm)
+    return BlockCGResult(x=x_out, iters=iters, relres=rnorm_out / bnorm,
+                         converged=converged, health=health)
 
 
 def make_block_solve(setupd, rtol: float = 1e-8, maxiter: int = 200):

@@ -16,6 +16,21 @@ right-hand sides against the cached hierarchy and drains it in panels:
 * ``update_operator`` refreshes the hierarchy through the state-gated hot
   recompute (new values, same structure) without touching the buckets.
 
+Robustness contract (ISSUE 6): a malformed request — wrong shape, a
+payload that cannot convert to the panel dtype, or non-finite values —
+is rejected at ``submit`` with a ``ValueError`` before it can poison a
+panel.  Corruption that arises *in flight* (a faulted kernel, a poisoned
+hierarchy) is quarantined per column by the masked PCG's health flags:
+the broken column freezes, its neighbours finish untouched, and its
+report carries ``status="degraded"`` (usable best iterate) or
+``status="failed"`` (solution zeroed — an explicit failure must never
+look like an answer).  A flush therefore *never* raises because one
+request went bad, and never returns an unflagged NaN.  With a
+``recover=`` policy (or ``REPRO_RECOVER``), failed/degraded columns get
+one bounded retry on freshly traced closures under
+``inject.suppress_transient()`` — transient faults vanish from the fresh
+traces, persistent ones keep the explicit failure.
+
 ``examples/serve_amg.py`` drives this end to end;
 ``benchmarks/table6_multirhs.py`` measures the per-RHS amortization the
 bucketing buys.
@@ -29,6 +44,13 @@ import numpy as np
 
 from repro.core import gamg
 from repro.multirhs.block_krylov import make_block_solve
+from repro.robust import inject
+from repro.robust.health import (
+    BREAKDOWN,
+    HEALTHY,
+    NONFINITE,
+    STATUS_NAMES,
+)
 
 
 class SolveReport(NamedTuple):
@@ -38,6 +60,8 @@ class SolveReport(NamedTuple):
     relres: float
     converged: bool
     k_bucket: int         # panel width the request was served in
+    status: str = "ok"    # "ok" | "degraded" | "failed" | "recovered"
+    health: int = HEALTHY  # raw health code (repro.robust.STATUS_NAMES)
 
 
 class AMGSolveServer:
@@ -46,7 +70,8 @@ class AMGSolveServer:
     def __init__(self, setupd: gamg.GAMGSetup, a_fine_data, *,
                  buckets: Sequence[int] = (1, 2, 4, 8, 16),
                  rtol: float = 1e-8, maxiter: int = 200,
-                 assembler=None):
+                 assembler=None, recover=None):
+        from repro.kernels.backend import resolve_recover
         buckets_in = [int(k) for k in buckets]
         if not buckets_in:
             raise ValueError("buckets must be a non-empty sequence of "
@@ -70,9 +95,15 @@ class AMGSolveServer:
         # cast to the hierarchy dtype happening only at the masked PCG's
         # preconditioner boundary.
         self.dtype = np.dtype(setupd.precision.krylov_dtype)
+        self._rtol = rtol
+        self._maxiter = maxiter
         self._recompute = gamg.make_recompute(setupd)
         self._solve = make_block_solve(setupd, rtol=rtol, maxiter=maxiter)
-        self.hierarchy = self._recompute(jnp.asarray(a_fine_data))
+        self._a_fine_data = jnp.asarray(a_fine_data)
+        self.hierarchy = self._recompute(self._a_fine_data)
+        # bounded per-column retry on flagged columns (None disables);
+        # resolve_recover honours the REPRO_RECOVER env knob
+        self.recover = resolve_recover(recover)
         # optional device-assembly binding: coefficient updates (material
         # fields, not value streams) run assembly + recompute as one
         # jitted program; built at construction so a mismatched plan
@@ -80,18 +111,22 @@ class AMGSolveServer:
         self.assembler = assembler
         self._coeff_recompute = None if assembler is None else \
             gamg.make_coeff_recompute(setupd, assembler)
+        self._coeff_fields = None       # last (E, nu), for clean retries
         self._pending: List[tuple] = []
         self._next_id = 0
         self.stats = {
             "requests": 0, "batches": 0, "padded_columns": 0,
             "recomputes": 0, "coefficient_updates": 0,
             "solves_per_k": {k: 0 for k in buckets},
+            "rejected": 0, "degraded": 0, "failed": 0, "recovered": 0,
         }
 
     # ---- operator lifecycle ---------------------------------------------
     def update_operator(self, a_fine_data) -> None:
         """Hot path: new fine values, same structure (state-gated PtAP)."""
-        self.hierarchy = self._recompute(jnp.asarray(a_fine_data))
+        self._a_fine_data = jnp.asarray(a_fine_data)
+        self._coeff_fields = None
+        self.hierarchy = self._recompute(self._a_fine_data)
         self.stats["recomputes"] += 1
 
     def update_coefficients(self, E, nu) -> None:
@@ -109,16 +144,35 @@ class AMGSolveServer:
                 "server with assembler=problem.assembler (device assembly "
                 "path)")
         E, nu = self.assembler.as_fields(E, nu)
+        self._coeff_fields = (E, nu)
         self.hierarchy = self._coeff_recompute(E, nu)
         self.stats["recomputes"] += 1
         self.stats["coefficient_updates"] += 1
 
     # ---- request stream --------------------------------------------------
     def submit(self, b, request_id: Optional[Hashable] = None) -> Hashable:
-        """Queue one right-hand side; returns its request id."""
-        b = np.asarray(b, dtype=self.dtype)
+        """Queue one right-hand side; returns its request id.
+
+        The validation gate: a rhs that is the wrong shape, cannot convert
+        to the panel dtype, or carries NaN/Inf is rejected HERE with a
+        ``ValueError`` — one poison request must never reach a shared
+        panel (where rejecting it would mean re-solving its neighbours).
+        """
+        try:
+            b = np.asarray(b, dtype=self.dtype)
+        except (TypeError, ValueError) as e:
+            self.stats["rejected"] += 1
+            raise ValueError(
+                f"rhs does not convert to the panel dtype "
+                f"{self.dtype}: {e}") from e
         if b.shape != (self.n,):
+            self.stats["rejected"] += 1
             raise ValueError(f"rhs shape {b.shape} != ({self.n},)")
+        if not np.isfinite(b).all():
+            self.stats["rejected"] += 1
+            raise ValueError(
+                f"rhs contains {int((~np.isfinite(b)).sum())} non-finite "
+                f"values — rejected before panel assembly")
         if request_id is None:
             request_id = self._next_id
             self._next_id += 1
@@ -143,9 +197,42 @@ class AMGSolveServer:
                 return k
         raise AssertionError("unreachable: count <= buckets[-1]")
 
+    # ---- flagged-column recovery ----------------------------------------
+    def _retry_column(self, b: np.ndarray):
+        """One bounded retry of a flagged column: fresh jitted closures +
+        fresh hierarchy under ``suppress_transient`` (one-off corruption
+        vanishes from fresh traces; persistent faults survive and keep
+        the explicit failure)."""
+        with inject.suppress_transient():
+            recompute = gamg.make_recompute(self.setupd)
+            solve = make_block_solve(self.setupd, rtol=self._rtol,
+                                     maxiter=self._maxiter)
+            if self._coeff_fields is not None:
+                coeff = gamg.make_coeff_recompute(self.setupd,
+                                                  self.assembler)
+                hier = coeff(*self._coeff_fields)
+            else:
+                hier = recompute(self._a_fine_data)
+            return solve(hier, jnp.asarray(b[:, None]))
+
+    def _classify(self, code: int, converged: bool) -> str:
+        if code == HEALTHY and converged:
+            return "ok"
+        if code in (BREAKDOWN, NONFINITE):
+            return "failed"
+        return "degraded"       # maxiter / stagnation: best iterate usable
+
     def flush(self) -> List[SolveReport]:
         """Drain the queue: bucketed, padded, batched solves; one report
-        per request, in submission order."""
+        per request, in submission order.
+
+        Per-column health classification — a flagged column degrades or
+        fails *its own report only* (the masked PCG froze it without
+        touching its panel neighbours).  Failed columns return zeros,
+        degraded columns their best iterate; neither ever carries a NaN.
+        With ``self.recover`` set, flagged columns get one retry via
+        ``_retry_column`` first.
+        """
         reports: List[SolveReport] = []
         kmax = self.buckets[-1]
         while self._pending:
@@ -160,11 +247,36 @@ class AMGSolveServer:
             iters = np.asarray(res.iters)
             relres = np.asarray(res.relres)
             conv = np.asarray(res.converged)
-            for j, (rid, _) in enumerate(chunk):
+            codes = np.asarray(res.health.status)
+            for j, (rid, b_j) in enumerate(chunk):
+                code = int(codes[j])
+                status = self._classify(code, bool(conv[j]))
+                x_j, it_j = x[:, j], int(iters[j])
+                rr_j = float(relres[j])
+                if status != "ok" and self.recover is not None:
+                    r1 = self._retry_column(b_j)
+                    c1 = int(np.asarray(r1.health.status)[0])
+                    if c1 == HEALTHY and bool(np.asarray(r1.converged)[0]):
+                        status, code = "recovered", c1
+                        x_j = np.asarray(r1.x)[:, 0]
+                        it_j = int(np.asarray(r1.iters)[0])
+                        rr_j = float(np.asarray(r1.relres)[0])
+                if status == "failed":
+                    # explicit failure: never hand back a maybe-iterate
+                    x_j = np.zeros_like(x_j)
+                elif not np.isfinite(x_j).all():  # pragma: no cover
+                    # belt-and-braces: the masked PCG's best-iterate
+                    # tracking keeps flagged columns finite by
+                    # construction; if that invariant ever breaks,
+                    # fail the report rather than leak a NaN
+                    status, x_j = "failed", np.zeros_like(x_j)
+                if status in ("degraded", "failed", "recovered"):
+                    self.stats[status] += 1
                 reports.append(SolveReport(
-                    request_id=rid, x=x[:, j], iters=int(iters[j]),
-                    relres=float(relres[j]), converged=bool(conv[j]),
-                    k_bucket=k))
+                    request_id=rid, x=x_j, iters=it_j,
+                    relres=rr_j, converged=bool(conv[j]) or
+                    status == "recovered",
+                    k_bucket=k, status=status, health=code))
             self.stats["requests"] += len(chunk)
             self.stats["batches"] += 1
             self.stats["padded_columns"] += k - len(chunk)
@@ -176,3 +288,6 @@ class AMGSolveServer:
         for b in rhs_list:
             self.submit(b)
         return self.flush()
+
+
+__all__ = ["AMGSolveServer", "SolveReport", "STATUS_NAMES"]

@@ -1,0 +1,56 @@
+"""Solver robustness: health monitoring, fault injection, recovery.
+
+Three layers (ISSUE 6):
+
+``repro.robust.health``
+    device-side, jit-compatible health flags (``SolveHealth``) threaded
+    through the Krylov carries (``pcg`` / ``block_pcg`` / ``_rank_pcg``):
+    NaN/Inf detection on the residual, CG breakdown detection
+    (non-positive ``p·Ap`` / ``r·z`` — an indefinite preconditioner under
+    reduced precision), stagnation detection, and best-iterate tracking so
+    a diverging solve returns its best point rather than its last.
+
+``repro.robust.inject``
+    deterministic, schedule-driven fault injection into kernel outputs,
+    hierarchy payloads and dist halo payloads — the testing harness for
+    the layer above (``REPRO_FAULTS`` env knob).
+
+``repro.robust.recover``
+    the policy-driven escalation ladder (``RobustSolver``): stale
+    hierarchy -> full re-setup, reduced-precision hierarchy -> fp64
+    rebuild, fused kernel path -> reference path — with bounded attempts
+    and explicit ``ok``/``recovered``/``degraded``/``failed`` statuses
+    (``REPRO_RECOVER`` env knob).
+
+``recover`` is exported lazily: it imports the solver stack, which itself
+imports ``health``/``inject`` (the monitoring hooks live inside the hot
+loops), and an eager import here would cycle.
+"""
+from repro.robust import inject  # noqa: F401
+from repro.robust.health import (  # noqa: F401
+    BREAKDOWN,
+    HEALTHY,
+    MAXITER,
+    NONFINITE,
+    STAGNATION,
+    STATUS_NAMES,
+    SolveHealth,
+    describe,
+    hierarchy_finite,
+    status_of,
+)
+
+_LAZY = ("RecoveryPolicy", "RecoverOutcome", "RobustSolver", "ladder_solve")
+
+
+def __getattr__(name):
+    if name == "recover" or name in _LAZY:
+        # importlib, not ``from repro.robust import recover``: the from-
+        # import's hasattr probe re-enters this __getattr__ before the
+        # submodule is bound and recurses forever
+        import importlib
+        recover = importlib.import_module("repro.robust.recover")
+        if name == "recover":
+            return recover
+        return getattr(recover, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,105 @@
+"""Device-side solver health flags (jit-compatible, zero-sync).
+
+The monitoring contract (ISSUE 6): the Krylov loops carry a handful of
+scalar (or per-column) flags alongside their CG state —
+
+* ``nonfinite``   — NaN/Inf reached the residual norm, ``p·Ap`` or
+                    ``r·z`` (a corrupted kernel output, poisoned payload
+                    or Inf overflow is visible there within one outer
+                    iteration, because every quantity of the recurrence
+                    flows through those reductions);
+* ``breakdown``   — CG breakdown proper: non-positive ``p·Ap`` or
+                    ``r·z`` on an active step, i.e. the operator or the
+                    preconditioner stopped being SPD (the classic
+                    reduced-precision failure mode of an indefinite fp32
+                    V-cycle);
+* ``stagnation``  — no new best residual norm for ``stall_window``
+                    consecutive iterations: the solve is flat-lining or
+                    diverging and further iterations are wasted work.
+
+All of it is computed from reductions the recurrence already performs
+(dot products and norms), so the healthy path pays no extra device->host
+syncs and no retraces — ``tests/test_robust.py`` pins the healthy trace
+bitwise against the unmonitored recurrence and the jit cache size at 1.
+
+Severity order for the structured status code: ``NONFINITE`` >
+``BREAKDOWN`` > ``STAGNATION`` > ``MAXITER`` > ``HEALTHY``.  Best-iterate
+tracking rides in the same carry: on any early or failed termination the
+solve returns its minimum-residual iterate (never the last, possibly
+diverged, one), so a flagged result is still the best available answer.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+#: Structured status codes (int32, device-side).
+HEALTHY = 0      # converged, no flags
+MAXITER = 1      # ran out of iterations, no breakdown — best iterate returned
+STAGNATION = 2   # no residual progress over the stall window
+BREAKDOWN = 3    # non-positive p·Ap / r·z: lost positive-definiteness
+NONFINITE = 4    # NaN/Inf reached the recurrence
+
+STATUS_NAMES = {HEALTHY: "healthy", MAXITER: "maxiter",
+                STAGNATION: "stagnation", BREAKDOWN: "breakdown",
+                NONFINITE: "nonfinite"}
+
+
+class SolveHealth(NamedTuple):
+    """Structured health record on a ``CGResult`` / ``BlockCGResult``.
+
+    Scalar per solve for ``pcg`` / ``_rank_pcg``; per-column ``(k,)``
+    arrays for the masked panel solves (a broken column is frozen and
+    flagged without touching its panel neighbours — the quarantine the
+    solve server's per-request statuses are built on).
+    """
+
+    status: Array       # int32 code (see STATUS_NAMES)
+    breakdown: Array    # bool
+    nonfinite: Array    # bool
+    stagnation: Array   # bool
+    best_iter: Array    # int32 iteration index of the best iterate
+    best_relres: Array  # minimum relative residual seen
+
+
+def status_of(converged: Array, breakdown: Array, nonfinite: Array,
+              stagnation: Array) -> Array:
+    """Fold the flags into one int32 code, most severe wins.
+
+    Elementwise, so the per-column panel case is the same call.
+    """
+    code = jnp.where(converged, HEALTHY, MAXITER)
+    code = jnp.where(stagnation, STAGNATION, code)
+    code = jnp.where(breakdown, BREAKDOWN, code)
+    code = jnp.where(nonfinite, NONFINITE, code)
+    return code.astype(jnp.int32)
+
+
+def describe(health: SolveHealth) -> str:
+    """Host-side, human-readable one-liner (syncs; not for the hot loop)."""
+    import numpy as np
+    status = np.asarray(health.status)
+    names = [STATUS_NAMES.get(int(s), f"?{int(s)}")
+             for s in np.atleast_1d(status)]
+    best = np.atleast_1d(np.asarray(health.best_relres))
+    return " ".join(f"{n}(best_relres={float(b):.3e})"
+                    for n, b in zip(names, best))
+
+
+def hierarchy_finite(hier) -> Array:
+    """Device bool: every floating payload of a hierarchy pytree is finite.
+
+    Not part of the per-iteration hot loop (the in-loop flags already see
+    payload corruption through ``r·z``) — used by the recovery driver to
+    classify a corrupted-hierarchy failure before re-setup.
+    """
+    ok = jnp.asarray(True)
+    for leaf in jax.tree_util.tree_leaves(hier):
+        leaf = jnp.asarray(leaf)
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            ok = ok & jnp.isfinite(leaf).all()
+    return ok

@@ -1,0 +1,228 @@
+"""Deterministic, schedule-driven fault injection (the testing harness).
+
+The health monitoring and the recovery ladder need failures on demand:
+this module plants NaN/Inf values or bit-flips into well-defined sites of
+the solver stack, deterministically, inside the jitted programs.
+
+Sites (each hot loop calls ``maybe(site, x, ...)`` at these points):
+
+=============  ============================================================
+``"spmv"``     operator-apply output in ``pcg``/``block_pcg``/``_rank_pcg``
+               (step-gated: fires at CG iteration ``step``)
+``"precond"``  preconditioner (V-cycle) output in the same loops
+               (step-gated)
+``"vcycle"``   restricted residual inside the V-cycle (level-gated)
+``"coarse"``   coarse-level direct-solve output inside the V-cycle
+``"hierarchy"``level operator payloads inside ``gamg.recompute``
+               (level-gated; the coarsest payload is level ``n_levels-1``)
+``"halo"``     dist halo-exchange windows (``repro.dist.pamg.halo_window``
+               ppermute/allgather results; fires on every exchange)
+=============  ============================================================
+
+Zero-overhead contract: with no schedule installed, ``maybe`` returns its
+input *at trace time* — the healthy jaxpr is bitwise identical to an
+uninstrumented build and nothing retraces (pinned by
+``tests/test_robust.py``).  Installing or clearing a schedule changes
+what new traces contain; programs jitted *before* ``install`` keep their
+(clean) traces, so a schedule must be installed before the solver under
+test is built.
+
+Determinism: a fault is a pure function of (site, step/level, index) —
+no RNG, no wall clock — so a faulted run is exactly reproducible, which
+is what lets the battery assert detection instead of flakiness.
+
+``REPRO_FAULTS`` env knob (parsed at import): semicolon-separated specs
+``site:kind[@step][:level=N][:index=N][:persistent]``, e.g.
+``REPRO_FAULTS="precond:nan@3;halo:bitflip:index=7"``.  Faults default to
+*transient* (the recovery ladder's retries run with them suppressed —
+the SDC model of a one-off flipped bit); ``:persistent`` keeps a fault
+live across retries, forcing the explicit-``failed`` path.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+
+KINDS = ("nan", "inf", "bitflip")
+SITES = ("spmv", "precond", "vcycle", "coarse", "hierarchy", "halo")
+
+_UINT = {2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One deterministic corruption.
+
+    ``step``/``level`` gate step-aware and level-aware sites; a gate of
+    ``None`` (or a site that carries no counter) fires unconditionally.
+    ``index`` is the flat element index corrupted (modulo the array size,
+    so any index is valid for any site).
+    """
+
+    site: str
+    kind: str
+    step: Optional[int] = None
+    level: Optional[int] = None
+    index: int = 0
+    transient: bool = True
+
+    def __post_init__(self):
+        if self.site not in SITES:
+            raise ValueError(f"invalid fault site {self.site!r}: "
+                             f"expected one of {SITES}")
+        if self.kind not in KINDS:
+            raise ValueError(f"invalid fault kind {self.kind!r}: "
+                             f"expected one of {KINDS}")
+
+    def corrupt(self, x: Array, step) -> Array:
+        """Corrupted copy of ``x``; gated on ``step`` when both sides
+        carry one.  jit-compatible (runs inside while_loop bodies)."""
+        flat = x.reshape(-1)
+        idx = self.index % flat.shape[0]
+        if self.kind == "bitflip":
+            uint = _UINT[jnp.dtype(x.dtype).itemsize]
+            bits = lax.bitcast_convert_type(flat[idx], uint)
+            # flip the exponent MSB: a small value becomes a huge one —
+            # the classic silent-data-corruption rendering of an SEU
+            flipped = bits ^ jnp.asarray(
+                1 << (8 * jnp.dtype(x.dtype).itemsize - 2), uint)
+            bad_val = lax.bitcast_convert_type(flipped, x.dtype)
+        else:
+            bad_val = jnp.asarray(
+                jnp.nan if self.kind == "nan" else jnp.inf, x.dtype)
+        bad = flat.at[idx].set(bad_val).reshape(x.shape)
+        if self.step is None or step is None:
+            return bad
+        return jnp.where(jnp.asarray(step) == self.step, bad, x)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSchedule:
+    """An ordered set of faults; applied wherever site/level match."""
+
+    faults: Tuple[Fault, ...]
+
+    def apply(self, site: str, x: Array, step=None, level=None) -> Array:
+        for f in self.faults:
+            if f.site != site:
+                continue
+            if f.level is not None and level is not None \
+                    and f.level != level:
+                continue
+            x = f.corrupt(x, step)
+        return x
+
+    def without_transient(self) -> Optional["FaultSchedule"]:
+        keep = tuple(f for f in self.faults if not f.transient)
+        return FaultSchedule(keep) if keep else None
+
+
+def parse_schedule(spec: str) -> FaultSchedule:
+    """Parse the ``REPRO_FAULTS`` mini-language (module docstring)."""
+    faults = []
+    for part in spec.split(";"):
+        part = part.strip()
+        if not part:
+            continue
+        fields = part.split(":")
+        if len(fields) < 2:
+            raise ValueError(
+                f"invalid fault spec {part!r}: expected "
+                f"site:kind[@step][:level=N][:index=N][:persistent]")
+        site = fields[0].strip()
+        kind = fields[1].strip()
+        step = None
+        if "@" in kind:
+            kind, step_s = kind.split("@", 1)
+            step = int(step_s)
+        kw = dict(site=site, kind=kind, step=step)
+        for opt in fields[2:]:
+            opt = opt.strip()
+            if opt == "persistent":
+                kw["transient"] = False
+            elif "=" in opt:
+                key, val = opt.split("=", 1)
+                if key not in ("level", "index"):
+                    raise ValueError(f"invalid fault option {opt!r} in "
+                                     f"{part!r}")
+                kw[key] = int(val)
+            else:
+                raise ValueError(f"invalid fault option {opt!r} in {part!r}")
+        faults.append(Fault(**kw))
+    if not faults:
+        raise ValueError(f"empty fault spec {spec!r}")
+    return FaultSchedule(tuple(faults))
+
+
+# ---------------------------------------------------------------------------
+# The (single, module-global) active schedule
+# ---------------------------------------------------------------------------
+
+_SCHEDULE: Optional[FaultSchedule] = None
+
+
+def install(schedule: Optional[FaultSchedule]) -> None:
+    """Activate a schedule for *subsequently traced* programs."""
+    global _SCHEDULE
+    if schedule is not None and not isinstance(schedule, FaultSchedule):
+        raise ValueError(f"expected a FaultSchedule or None, got "
+                         f"{schedule!r}")
+    _SCHEDULE = schedule
+
+
+def clear() -> None:
+    install(None)
+
+
+def current() -> Optional[FaultSchedule]:
+    return _SCHEDULE
+
+
+@contextlib.contextmanager
+def active(schedule: FaultSchedule):
+    """Scoped installation — the battery's idiom (always restores)."""
+    prev = _SCHEDULE
+    install(schedule)
+    try:
+        yield schedule
+    finally:
+        install(prev)
+
+
+@contextlib.contextmanager
+def suppress_transient():
+    """Scoped transient-fault suppression: the recovery ladder's retries
+    run under this, modelling one-off corruption (persistent faults stay
+    live and force the explicit-``failed`` path)."""
+    prev = _SCHEDULE
+    if prev is not None:
+        install(prev.without_transient())
+    try:
+        yield
+    finally:
+        install(prev)
+
+
+def maybe(site: str, x: Array, *, step=None, level=None) -> Array:
+    """The hook the hot loops call.  Identity (at trace time — zero jaxpr
+    residue) unless a schedule is installed."""
+    if _SCHEDULE is None:
+        return x
+    return _SCHEDULE.apply(site, x, step=step, level=level)
+
+
+# env knob: a set REPRO_FAULTS arms the schedule for the whole process
+# (the dist selftest's REPRO_SELFTEST_FAULT sections and ad-hoc runs);
+# tier-1 never sets it, so tier-1 traces stay injection-free.
+_env_spec = os.environ.get("REPRO_FAULTS")
+if _env_spec:
+    install(parse_schedule(_env_spec))
+del _env_spec

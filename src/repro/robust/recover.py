@@ -1,0 +1,239 @@
+"""Policy-driven breakdown recovery — the escalation ladder.
+
+When a monitored solve comes back flagged (``SolveHealth.status != 0``),
+the failure is usually one of four things, each with a cheapest-possible
+fix.  ``RobustSolver`` walks them in order, bounded by
+``RecoveryPolicy.max_attempts``:
+
+``"recompute"``
+    transient fault / corrupted or stale hierarchy.  Rebuild the jitted
+    closures *fresh* and recompute the hierarchy from the stored fine
+    operator values.  Retries run under ``inject.suppress_transient()``:
+    injection is baked into traces at trace time, so a fresh trace is
+    clean of transient faults — the SDC model of a one-off flipped bit —
+    while *persistent* faults survive and force the explicit-``failed``
+    path.
+
+``"re-setup"``
+    corrupted symbolic state (aggregation, prolongator smoothing, PtAP
+    plans).  Run the full cold ``gamg.setup`` again from the stored
+    operator and rebuild everything above it.
+
+``"f64-rebuild"``
+    reduced-precision breakdown: an fp32/bf16-resident hierarchy whose
+    V-cycle went indefinite (the classic ``BREAKDOWN`` source).  Re-setup
+    at full fp64 via ``PrecisionPolicy.double()`` — slower, but the
+    bitwise-legacy configuration that is known-good.
+
+``"reference-path"``
+    suspected fused-kernel miscompile.  Rebuild with the kernel dispatch
+    forced to the jnp reference paths (``REPRO_SPGEMM_PATH=reference``,
+    ``REPRO_SPMM_PATH=reference`` — the ``repro.kernels.backend``
+    resolvers re-read the env per call, so scoping the env around the
+    rung's tracing is sufficient and process-global state is restored
+    after).
+
+A recovered solve reports ``"recovered"``; an exhausted ladder reports
+``"degraded"`` when the best iterate still made progress
+(finite ``best_relres < 1`` — the minimum-residual iterate is returned,
+never a diverged or NaN one) and ``"failed"`` otherwise (the solution is
+zeroed: an explicit failure must never look like an answer).
+
+``REPRO_RECOVER`` env knob (via ``repro.kernels.backend.resolve_recover``):
+``off`` disables the ladder, ``on`` enables the defaults, an integer sets
+``max_attempts``.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gamg
+from repro.core.krylov import CGResult
+from repro.core.precision import PrecisionPolicy
+from repro.robust import inject
+from repro.robust.health import HEALTHY, STATUS_NAMES, hierarchy_finite
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryPolicy:
+    """Which rungs the ladder may climb, and how many in total."""
+
+    max_attempts: int = 3
+    allow_recompute: bool = True
+    allow_resetup: bool = True
+    allow_f64_rebuild: bool = True
+    allow_reference_path: bool = True
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(f"max_attempts must be >= 1, got "
+                             f"{self.max_attempts}")
+
+
+@dataclasses.dataclass
+class RecoverOutcome:
+    """One ladder-mediated solve.
+
+    ``status``: ``"ok"`` (healthy first try), ``"recovered"`` (a rung
+    fixed it), ``"degraded"`` (exhausted, best iterate returned) or
+    ``"failed"`` (exhausted, no usable iterate — ``result.x`` is zeroed).
+    ``attempts`` lists the rung names tried, in order.
+    """
+
+    status: str
+    result: CGResult
+    attempts: Tuple[str, ...] = ()
+
+    @property
+    def x(self):
+        return self.result.x
+
+
+@contextlib.contextmanager
+def _env_scope(overrides: dict):
+    """Scoped os.environ overrides (the backend resolvers re-read per
+    call, so scoping the env around a rung's tracing is sufficient)."""
+    saved = {k: os.environ.get(k) for k in overrides}
+    os.environ.update(overrides)
+    try:
+        yield
+    finally:
+        for k, v in saved.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+
+
+class RobustSolver:
+    """``GAMGSolver`` with health-gated solves and the recovery ladder.
+
+    Same front door (setup once, ``update_operator`` hot, ``solve`` many)
+    but ``solve`` returns a ``RecoverOutcome`` whose ``result`` is the
+    underlying ``CGResult``.  The healthy path is exactly one monitored
+    solve on the cached jitted closures — the ladder only wakes up on a
+    flagged result.
+    """
+
+    def __init__(self, A, B, *, recovery: Optional[RecoveryPolicy] = None,
+                 rtol: float = 1e-8, maxiter: int = 200, **setup_opts):
+        from repro.kernels.backend import resolve_recover
+        self._A = A
+        self._B = jnp.asarray(B)
+        self.recovery = resolve_recover(recovery) or RecoveryPolicy()
+        self._rtol = rtol
+        self._maxiter = maxiter
+        self._setup_opts = dict(setup_opts)
+        self._a_fine_data = jnp.asarray(A.data)
+        self.n_recoveries = 0
+        self.last_attempts: Tuple[str, ...] = ()
+        self._stage(self._setup_opts)
+
+    # ---- staging (everything a rung may need to rebuild) ----------------
+    def _stage(self, setup_opts: dict) -> None:
+        """Cold setup + fresh jitted closures + hierarchy recompute."""
+        self.setupd = gamg.setup(self._A.with_data(self._a_fine_data),
+                                 self._B, **setup_opts)
+        self._recompute = gamg.make_recompute(self.setupd)
+        self._solve = gamg.make_solve(self.setupd, rtol=self._rtol,
+                                      maxiter=self._maxiter)
+        self.hierarchy = self._recompute(self._a_fine_data)
+
+    def _refresh(self) -> None:
+        """Fresh traces + hierarchy from the *existing* setup."""
+        self._recompute = gamg.make_recompute(self.setupd)
+        self._solve = gamg.make_solve(self.setupd, rtol=self._rtol,
+                                      maxiter=self._maxiter)
+        self.hierarchy = self._recompute(self._a_fine_data)
+
+    # ---- operator lifecycle ---------------------------------------------
+    def update_operator(self, a_fine_data) -> None:
+        self._a_fine_data = jnp.asarray(a_fine_data)
+        self.hierarchy = self._recompute(self._a_fine_data)
+
+    # ---- the ladder ------------------------------------------------------
+    def _rungs(self):
+        pol = self.recovery
+        rungs = []
+        if pol.allow_recompute:
+            rungs.append(("recompute", {}, self._refresh))
+        if pol.allow_resetup:
+            rungs.append(("re-setup", {},
+                          lambda: self._stage(self._setup_opts)))
+        if pol.allow_f64_rebuild and \
+                self.setupd.precision != PrecisionPolicy.double():
+            opts = dict(self._setup_opts, precision="f64")
+            rungs.append(("f64-rebuild", {}, lambda: self._stage(opts)))
+        if pol.allow_reference_path:
+            env = {"REPRO_SPGEMM_PATH": "reference",
+                   "REPRO_SPMM_PATH": "reference"}
+            rungs.append(("reference-path", env,
+                          lambda: self._stage(self._setup_opts)))
+        return rungs[:pol.max_attempts]
+
+    def solve(self, b) -> RecoverOutcome:
+        b = jnp.asarray(b)
+        res = self._solve(self.hierarchy, b)
+        if int(np.asarray(res.health.status)) == HEALTHY:
+            self.last_attempts = ()
+            return RecoverOutcome("ok", res)
+        attempts = []
+        best = res
+        for name, env, rebuild in self._rungs():
+            attempts.append(name)
+            # fresh traces under suppress_transient: one-off faults are
+            # gone from the rebuilt programs, persistent ones survive
+            with _env_scope(env), inject.suppress_transient():
+                rebuild()
+                res = self._solve(self.hierarchy, b)
+            if int(np.asarray(res.health.status)) == HEALTHY:
+                self.n_recoveries += 1
+                self.last_attempts = tuple(attempts)
+                return RecoverOutcome("recovered", res, tuple(attempts))
+            if self._better(res, best):
+                best = res
+        self.last_attempts = tuple(attempts)
+        best_rel = float(np.asarray(best.health.best_relres))
+        if np.isfinite(best_rel) and best_rel < 1.0 \
+                and bool(np.isfinite(np.asarray(best.x)).all()):
+            return RecoverOutcome("degraded", best, tuple(attempts))
+        # an explicit failure must never look like an answer
+        zero = best._replace(x=jnp.zeros_like(best.x))
+        return RecoverOutcome("failed", zero, tuple(attempts))
+
+    @staticmethod
+    def _better(a: CGResult, b: CGResult) -> bool:
+        ra = float(np.asarray(a.health.best_relres))
+        rb = float(np.asarray(b.health.best_relres))
+        if not np.isfinite(ra):
+            return False
+        return (not np.isfinite(rb)) or ra < rb
+
+    # ---- diagnostics ----------------------------------------------------
+    def hierarchy_ok(self) -> bool:
+        """Host bool: no NaN/Inf anywhere in the cached hierarchy (used to
+        classify corrupted-hierarchy failures before a re-setup)."""
+        return bool(np.asarray(hierarchy_finite(self.hierarchy)))
+
+    def describe_last(self) -> str:
+        return " -> ".join(self.last_attempts) if self.last_attempts \
+            else "(no recovery needed)"
+
+
+def ladder_solve(A, B, b, *, recovery: Optional[RecoveryPolicy] = None,
+                 rtol: float = 1e-8, maxiter: int = 200,
+                 **setup_opts) -> RecoverOutcome:
+    """One-shot convenience: setup + monitored solve + ladder on ``b``."""
+    solver = RobustSolver(A, B, recovery=recovery, rtol=rtol,
+                          maxiter=maxiter, **setup_opts)
+    return solver.solve(b)
+
+
+__all__ = ["RecoveryPolicy", "RecoverOutcome", "RobustSolver",
+           "ladder_solve", "STATUS_NAMES"]

@@ -71,6 +71,21 @@ def test_dist_coefficient_update_parity():
     assert "no retrace" in stdout, stdout
 
 
+@pytest.mark.slow
+def test_dist_fault_injection_detected():
+    """ISSUE 6 (nightly): the fault-injection section of the selftest —
+    a NaN planted in one rank's halo window and an Inf in one rank's SpMV
+    output are both detected *collectively* (every rank exits with the
+    same non-healthy status within one iteration, via the psum-replicated
+    health flags), solutions stay finite, and a clean re-staging
+    afterwards is bitwise identical to the never-faulted run."""
+    stdout = _run_selftest(2, 4, {"REPRO_SELFTEST_FAULT": "1"})
+    assert "OK" in stdout
+    assert "halo fault detected: status=nonfinite" in stdout, stdout
+    assert "spmv@2 fault detected: status=nonfinite" in stdout, stdout
+    assert "post-fault re-staging parity: identical" in stdout, stdout
+
+
 def test_placement_and_scatter_staging_dtype():
     """Host-only checks (build_dist_gamg is pure staging, no devices):
 

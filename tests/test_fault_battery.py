@@ -1,0 +1,306 @@
+"""The fault battery (slow / nightly): injected faults across every site
+of the solver stack must be *detected* (health flag within one outer
+iteration of firing), then *recovered* (ladder) or *explicitly failed* —
+and a corrupted solve must never hand back an unflagged NaN.
+
+Tier-1 stays injection-free (``tests/test_robust.py`` pins the healthy
+path bitwise); this module is where schedules actually fire.  The halo
+site is distributed-only and exercised by the ``REPRO_SELFTEST_FAULT=1``
+section of ``repro.dist.selftest`` (driven from ``tests/test_dist_amg.py``
+and the nightly workflow).
+
+Determinism note on ``bitflip``: the exponent-MSB flip turns a value in
+``[1, 2)`` into Inf and a value below 1 into a finite-huge one — both
+detectable.  But a value >= 2 flips *down* to a denormal-tiny one, a
+genuinely benign SDC indistinguishable from rounding noise; the
+deterministic cases below pick sites/steps where the flip is verified
+detectable, and the property sweep sticks to nan/inf.
+"""
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401  (x64 on)
+import jax.numpy as jnp
+
+from repro.core import gamg
+from repro.fem.assemble import assemble_elasticity
+from repro.multirhs import AMGSolveServer
+from repro.robust import health, inject
+from repro.robust.recover import RecoveryPolicy, RobustSolver
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container without hypothesis: property sweep skips,
+    HAVE_HYPOTHESIS = False  # the deterministic battery still runs
+
+pytestmark = pytest.mark.slow
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return assemble_elasticity(4)
+
+
+def _fresh_solver(prob, **kw):
+    """A solver whose traces capture the *currently installed* schedule
+    (injection is baked in at trace time)."""
+    opts = dict(coarse_size=30, rtol=1e-8, maxiter=100, precision="f64")
+    opts.update(kw)
+    return gamg.GAMGSolver(prob.A, prob.B, **opts)
+
+
+def _assert_contained(res):
+    """The no-silent-NaN contract: flagged, not converged, finite x."""
+    assert int(np.asarray(res.health.status)) != health.HEALTHY
+    assert not bool(np.asarray(res.converged))
+    assert np.isfinite(np.asarray(res.x)).all(), \
+        "a faulted solve must never return a non-finite iterate"
+    assert np.isfinite(np.asarray(res.relres)) or \
+        int(np.asarray(res.health.status)) == health.NONFINITE
+
+
+# ---------------------------------------------------------------------------
+# Deterministic per-site battery
+# ---------------------------------------------------------------------------
+
+CASES = [
+    # step-gated Krylov-loop sites, all three kinds (bitflip steps are
+    # verified-detectable: the corrupted slots hold sub-1 magnitudes, so
+    # the exponent flip lands huge)
+    ("spmv:nan@1", health.NONFINITE),
+    ("spmv:inf@1", health.NONFINITE),
+    ("spmv:bitflip@1", None),
+    ("precond:nan@2", health.NONFINITE),
+    ("precond:inf@2", health.NONFINITE),
+    ("precond:bitflip@2", None),
+    # V-cycle interior sites (fire on every application)
+    ("vcycle:nan", health.NONFINITE),
+    ("vcycle:inf", health.NONFINITE),
+    ("coarse:nan", health.NONFINITE),
+    ("coarse:inf", health.NONFINITE),
+    # hierarchy payload corruption (fires inside recompute)
+    ("hierarchy:nan", health.NONFINITE),
+    ("hierarchy:inf", health.NONFINITE),
+    ("hierarchy:nan:level=1", health.NONFINITE),
+]
+
+
+@pytest.mark.parametrize("spec,expect", CASES,
+                         ids=[c[0] for c in CASES])
+def test_fault_detected_and_contained(prob, spec, expect):
+    with inject.active(inject.parse_schedule(spec)):
+        s = _fresh_solver(prob)
+        res = s.solve(jnp.asarray(prob.b))
+    _assert_contained(res)
+    if expect is not None:
+        assert int(np.asarray(res.health.status)) == expect, \
+            health.describe(res.health)
+
+
+@pytest.mark.parametrize("spec,step", [
+    ("spmv:nan@1", 1), ("spmv:inf@3", 3), ("precond:nan@2", 2),
+])
+def test_step_gated_fault_detected_within_one_iteration(prob, spec, step):
+    """The ISSUE-6 detection-latency contract: a fault at CG step ``s``
+    trips the flag in that very iteration — the loop exits with
+    ``iters <= s + 1`` instead of burning the remaining budget."""
+    with inject.active(inject.parse_schedule(spec)):
+        s = _fresh_solver(prob)
+        res = s.solve(jnp.asarray(prob.b))
+    assert int(np.asarray(res.iters)) <= step + 1
+    _assert_contained(res)
+
+
+def test_clean_run_after_battery_is_bitwise_clean(prob):
+    """Schedules never leak: a fresh solver built after the contexts above
+    have exited matches a never-faulted solve bitwise."""
+    assert inject.current() is None
+    s1 = _fresh_solver(prob)
+    r1 = s1.solve(jnp.asarray(prob.b))
+    with inject.active(inject.parse_schedule("vcycle:nan")):
+        pass  # installed and restored, never traced against
+    s2 = _fresh_solver(prob)
+    r2 = s2.solve(jnp.asarray(prob.b))
+    assert int(r1.health.status) == int(r2.health.status) == health.HEALTHY
+    assert int(r1.iters) == int(r2.iters)
+    np.testing.assert_array_equal(np.asarray(r1.x), np.asarray(r2.x))
+
+
+# ---------------------------------------------------------------------------
+# Recovery ladder semantics
+# ---------------------------------------------------------------------------
+
+def test_ladder_recovers_transient_fault(prob):
+    """A transient hierarchy corruption: the first rung's fresh traces
+    (under ``suppress_transient``) are clean, so one recompute heals it."""
+    with inject.active(inject.parse_schedule("hierarchy:nan")):
+        rs = RobustSolver(prob.A, prob.B, coarse_size=30, rtol=1e-8,
+                          maxiter=100, precision="f64")
+        out = rs.solve(jnp.asarray(prob.b))
+    assert out.status == "recovered"
+    assert out.attempts == ("recompute",)
+    assert rs.n_recoveries == 1
+    assert float(out.result.relres) <= 1e-8
+    assert np.isfinite(np.asarray(out.x)).all()
+    assert rs.describe_last() == "recompute"
+
+
+def test_ladder_explicit_failure_on_persistent_fault(prob):
+    """A persistent V-cycle NaN survives every rung's retrace: the ladder
+    exhausts and reports an explicit ``failed`` with a zeroed solution —
+    never a NaN dressed up as an answer."""
+    with inject.active(inject.parse_schedule("vcycle:nan:persistent")):
+        rs = RobustSolver(prob.A, prob.B, coarse_size=30, rtol=1e-8,
+                          maxiter=100, precision="f64")
+        out = rs.solve(jnp.asarray(prob.b))
+    assert out.status == "failed"
+    assert out.attempts == ("recompute", "re-setup", "reference-path")
+    np.testing.assert_array_equal(np.asarray(out.x),
+                                  np.zeros_like(np.asarray(out.x)))
+    assert int(out.result.health.status) != health.HEALTHY
+
+
+def test_ladder_degraded_keeps_best_iterate(prob):
+    """A persistent fault that fires *after* real progress leaves a
+    usable minimum-residual iterate: the exhausted ladder reports
+    ``degraded`` and returns it (finite, relres < 1), not zeros."""
+    with inject.active(inject.parse_schedule("spmv:nan@4:persistent")):
+        rs = RobustSolver(prob.A, prob.B, coarse_size=30, rtol=1e-8,
+                          maxiter=100, precision="f64")
+        out = rs.solve(jnp.asarray(prob.b))
+    assert out.status == "degraded"
+    rel = float(np.asarray(out.result.health.best_relres))
+    assert np.isfinite(rel) and 0.0 < rel < 1.0
+    assert np.isfinite(np.asarray(out.x)).all()
+
+
+def test_ladder_bounded_attempts(prob):
+    with inject.active(inject.parse_schedule("vcycle:nan:persistent")):
+        rs = RobustSolver(prob.A, prob.B, coarse_size=30, rtol=1e-8,
+                          maxiter=100, precision="f64",
+                          recovery=RecoveryPolicy(max_attempts=1))
+        out = rs.solve(jnp.asarray(prob.b))
+    assert out.status == "failed"
+    assert out.attempts == ("recompute",)
+
+
+# ---------------------------------------------------------------------------
+# Server panel quarantine + per-request recovery
+# ---------------------------------------------------------------------------
+
+def test_panel_quarantine_isolates_poison_column(prob):
+    """A fault pinned to one panel column freezes and fails that request
+    only; its neighbours converge to their dedicated-solve answers."""
+    setupd = gamg.setup(prob.A, prob.B, coarse_size=30, precision="f64")
+    clean = AMGSolveServer(setupd, prob.A.data, buckets=(4,),
+                           rtol=1e-8, maxiter=100)
+    [want] = clean.serve([np.asarray(prob.b)])
+    with inject.active(inject.parse_schedule("precond:nan@2:index=1")):
+        srv = AMGSolveServer(setupd, prob.A.data, buckets=(4,),
+                             rtol=1e-8, maxiter=100)
+        reps = srv.serve([np.asarray(prob.b)] * 3)
+    assert [r.status for r in reps] == ["ok", "failed", "ok"]
+    assert reps[1].health == health.NONFINITE
+    np.testing.assert_array_equal(reps[1].x, np.zeros_like(reps[1].x))
+    for r in (reps[0], reps[2]):
+        assert r.converged and r.iters == want.iters
+        np.testing.assert_allclose(r.x, want.x, rtol=1e-12, atol=1e-14)
+    assert srv.stats["failed"] == 1 and srv.stats["degraded"] == 0
+
+
+def test_server_recovers_transient_column_fault(prob):
+    setupd = gamg.setup(prob.A, prob.B, coarse_size=30, precision="f64")
+    with inject.active(inject.parse_schedule("precond:nan@2:index=1")):
+        srv = AMGSolveServer(setupd, prob.A.data, buckets=(4,),
+                             rtol=1e-8, maxiter=100, recover="on")
+        reps = srv.serve([np.asarray(prob.b)] * 3)
+    assert [r.status for r in reps] == ["ok", "recovered", "ok"]
+    rec = reps[1]
+    assert rec.converged and rec.relres <= 1e-8
+    assert np.isfinite(rec.x).all()
+    np.testing.assert_allclose(rec.x, reps[0].x, rtol=1e-9)
+    assert srv.stats["recovered"] == 1 and srv.stats["failed"] == 0
+
+
+def test_server_persistent_column_fault_stays_failed(prob):
+    setupd = gamg.setup(prob.A, prob.B, coarse_size=30, precision="f64")
+    spec = "precond:nan@2:index=1:persistent"
+    with inject.active(inject.parse_schedule(spec)):
+        srv = AMGSolveServer(setupd, prob.A.data, buckets=(4,),
+                             rtol=1e-8, maxiter=100, recover="on")
+        reps = srv.serve([np.asarray(prob.b)] * 3)
+    assert [r.status for r in reps] == ["ok", "failed", "ok"]
+    np.testing.assert_array_equal(reps[1].x, np.zeros_like(reps[1].x))
+    assert srv.stats["failed"] == 1 and srv.stats["recovered"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Property sweep (hypothesis): detection latency + ladder containment
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    def _dense_spd(seed, n=24, logcond=3.0):
+        rng = np.random.default_rng(seed)
+        Q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+        eigs = np.logspace(0, logcond, n)
+        A = (Q * eigs) @ Q.T
+        return jnp.asarray(A), jnp.asarray(rng.standard_normal(n))
+
+    @given(site=st.sampled_from(["spmv", "precond"]),
+           kind=st.sampled_from(["nan", "inf"]),
+           step=st.integers(0, 5),
+           index=st.integers(0, 1000),
+           seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_property_detection_within_one_iteration(site, kind, step,
+                                                     index, seed):
+        """Any nan/inf fault at CG step ``s`` is flagged in that very
+        iteration (``iters <= s + 1``), the loop exits, and the returned
+        iterate is finite — for random operators, sites, steps and
+        corrupted slots."""
+        from repro.core.krylov import pcg
+        A, b = _dense_spd(seed)
+        dinv = 1.0 / jnp.diag(A)
+        spec = f"{site}:{kind}@{step}:index={index}"
+        with inject.active(inject.parse_schedule(spec)):
+            res = pcg(lambda v: A @ v, lambda v: dinv * v, b,
+                      rtol=1e-10, maxiter=100)
+        assert int(np.asarray(res.iters)) <= step + 1
+        assert int(np.asarray(res.health.status)) == health.NONFINITE
+        assert np.isfinite(np.asarray(res.x)).all()
+
+    @given(site=st.sampled_from(["spmv", "precond", "vcycle",
+                                 "hierarchy"]),
+           kind=st.sampled_from(["nan", "inf"]),
+           persistent=st.booleans(),
+           step=st.integers(0, 6))
+    @settings(max_examples=8, deadline=None)
+    def test_property_ladder_contains_every_fault(site, kind, persistent,
+                                                  step):
+        """The containment property: whatever is injected, the ladder
+        either recovers (relres <= rtol), degrades (finite best iterate,
+        relres < 1) or *explicitly* fails (zeroed x) — never a silent
+        NaN, never an unflagged bad answer."""
+        prob = assemble_elasticity(4)
+        spec = f"{site}:{kind}@{step}" if site in ("spmv", "precond") \
+            else f"{site}:{kind}"
+        if persistent:
+            spec += ":persistent"
+        with inject.active(inject.parse_schedule(spec)):
+            rs = RobustSolver(prob.A, prob.B, coarse_size=30, rtol=1e-8,
+                              maxiter=100, precision="f64")
+            out = rs.solve(jnp.asarray(prob.b))
+        assert np.isfinite(np.asarray(out.x)).all()
+        if out.status in ("ok", "recovered"):
+            assert float(np.asarray(out.result.relres)) <= 1e-8
+        elif out.status == "degraded":
+            rel = float(np.asarray(out.result.health.best_relres))
+            assert np.isfinite(rel) and rel < 1.0
+        else:
+            assert out.status == "failed"
+            np.testing.assert_array_equal(
+                np.asarray(out.x), np.zeros_like(np.asarray(out.x)))
+        if not persistent:
+            # a transient fault must never exhaust the ladder
+            assert out.status in ("ok", "recovered")

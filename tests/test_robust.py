@@ -1,0 +1,577 @@
+"""Robustness subsystem, tier-1 (injection-free) contracts.
+
+What this module pins:
+
+* the monitored ``pcg`` is **bitwise** the unmonitored recurrence on a
+  healthy run (same primitives, the health ``where``-guards all-pass);
+* zero retraces: the jitted solve closure's cache stays at 1 across
+  repeated healthy solves, and ``inject.maybe`` leaves **zero jaxpr
+  residue** when no schedule is installed;
+* breakdown / stagnation / non-finite detection on constructed failures
+  (no injection needed — an indefinite operator or an impossible rtol);
+* best-iterate contract: any non-converged exit returns the
+  minimum-residual iterate, at f32 and f64;
+* ``jittered_cholesky`` hardening: a near-rank-deficient coarse grid that
+  defeats the base jitter factorizes on the escalated retry;
+* the fault-spec mini-language and the ``REPRO_FAULTS`` /
+  ``REPRO_RECOVER`` resolvers;
+* ``AMGSolveServer.submit`` validation (bad shape / dtype / non-finite
+  rejected before panel assembly) and the recovery-ladder plumbing.
+
+Injection *semantics* (faults actually firing) live in the slow-marked
+``tests/test_fault_battery.py`` — tier-1 traces stay injection-free.
+"""
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401  (x64 on)
+import jax
+import jax.numpy as jnp
+
+from repro.core import gamg
+from repro.core.krylov import pcg
+from repro.core.precision import PrecisionPolicy
+from repro.fem.assemble import assemble_elasticity
+from repro.kernels import backend
+from repro.multirhs import AMGSolveServer
+from repro.multirhs.block_krylov import block_pcg
+from repro.robust import health, inject
+from repro.robust.recover import (
+    RecoveryPolicy,
+    RobustSolver,
+    ladder_solve,
+)
+
+RNG = np.random.default_rng(23)
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return assemble_elasticity(4)
+
+
+@pytest.fixture(scope="module")
+def solver(prob):
+    return gamg.GAMGSolver(prob.A, prob.B, coarse_size=30, rtol=1e-8,
+                           maxiter=100, precision="f64")
+
+
+def _spd(n, dtype=np.float64, cond=1e4):
+    """Dense SPD test operator with controlled conditioning."""
+    Q, _ = np.linalg.qr(RNG.standard_normal((n, n)))
+    eigs = np.logspace(0, np.log10(cond), n)
+    return (Q * eigs) @ Q.T.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Healthy path: bitwise parity, zero retraces, zero jaxpr residue
+# ---------------------------------------------------------------------------
+
+def _vanilla_pcg(apply_a, apply_m, b, rtol, maxiter):
+    """The pre-ISSUE-6 recurrence, same primitives, no monitoring."""
+    x = jnp.zeros_like(b)
+    r = b - apply_a(x)
+    z = apply_m(r)
+    p = z
+    rz = jnp.vdot(r, z)
+    bnorm = jnp.maximum(jnp.linalg.norm(b), jnp.finfo(b.dtype).tiny)
+    rnorm = jnp.linalg.norm(r)
+
+    def cond(state):
+        x, r, z, p, rz, rnorm, k = state
+        return (rnorm > rtol * bnorm) & (k < maxiter)
+
+    def body(state):
+        x, r, z, p, rz, rnorm, k = state
+        Ap = apply_a(p)
+        pAp = jnp.vdot(p, Ap)
+        alpha = rz / pAp
+        x = x + alpha * p
+        r = r - alpha * Ap
+        z = apply_m(r)
+        rz_new = jnp.vdot(r, z)
+        beta = rz_new / rz
+        p = z + beta * p
+        return (x, r, z, p, rz_new, jnp.linalg.norm(r), k + 1)
+
+    state = (x, r, z, p, rz, rnorm, jnp.asarray(0))
+    x, r, z, p, rz, rnorm, k = jax.lax.while_loop(cond, body, state)
+    return x, k, rnorm / bnorm
+
+
+def test_monitored_pcg_bitwise_matches_unmonitored():
+    """The ISSUE-6 acceptance pin: monitoring is free on the healthy path.
+
+    Every health guard is a ``jnp.where`` whose predicate is always-pass
+    on a clean run, and ``inject.maybe`` is trace-time identity — so the
+    iterates, the iteration count and the relres must come out *bitwise*
+    equal to the hand-rolled unmonitored loop."""
+    A = jnp.asarray(_spd(40))
+    dinv = 1.0 / jnp.diag(A)
+    b = jnp.asarray(RNG.standard_normal(40))
+    apply_a = lambda v: A @ v                     # noqa: E731
+    apply_m = lambda v: dinv * v                  # noqa: E731
+    res = pcg(apply_a, apply_m, b, rtol=1e-10, maxiter=200)
+    xv, kv, rrv = _vanilla_pcg(apply_a, apply_m, b, 1e-10, 200)
+    assert bool(res.converged)
+    np.testing.assert_array_equal(np.asarray(res.x), np.asarray(xv))
+    assert int(res.iters) == int(kv)
+    np.testing.assert_array_equal(np.asarray(res.relres), np.asarray(rrv))
+    assert int(res.health.status) == health.HEALTHY
+    assert not bool(res.health.breakdown)
+    assert not bool(res.health.nonfinite)
+    assert not bool(res.health.stagnation)
+
+
+def test_healthy_solve_cache_stays_at_one(solver, prob):
+    """Zero retraces across repeated healthy monitored solves."""
+    b = jnp.asarray(prob.b)
+    r1 = solver.solve(b)
+    r2 = solver.solve(2.0 * b)
+    assert int(r1.health.status) == health.HEALTHY
+    assert int(r2.health.status) == health.HEALTHY
+    assert solver._solve._cache_size() == 1
+    assert solver._recompute._cache_size() == 1
+
+
+def test_inject_maybe_zero_jaxpr_residue():
+    """With no schedule, ``maybe`` is trace-time identity: the jaxpr is
+    the uninstrumented one; with a schedule active the trace changes;
+    after the scope exits, new traces are clean again."""
+    A = jnp.asarray(_spd(12))
+    b = jnp.asarray(RNG.standard_normal(12))
+
+    def mk():
+        # a fresh closure per trace: jax caches traces on the function
+        # object, which would mask (or fake) residue differences
+        def f(b):
+            return pcg(lambda v: A @ v, lambda v: v, b, rtol=1e-8,
+                       maxiter=20).x
+        return f
+
+    assert inject.current() is None
+    before = str(jax.make_jaxpr(mk())(b))
+    with inject.active(inject.parse_schedule("spmv:nan@1")):
+        during = str(jax.make_jaxpr(mk())(b))
+    after = str(jax.make_jaxpr(mk())(b))
+    assert before == after, "cleared schedule must leave zero residue"
+    assert before != during, "an active schedule must change the trace"
+
+
+def test_block_pcg_reports_per_column_health(solver, prob):
+    B = jnp.stack([jnp.asarray(prob.b), 3.0 * jnp.asarray(prob.b)], axis=1)
+    res = solver.solve_many(B)
+    assert res.health.status.shape == (2,)
+    assert np.array_equal(np.asarray(res.health.status), [0, 0])
+    assert np.asarray(res.converged).all()
+    assert np.asarray(res.health.best_relres).max() <= 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Detection on constructed (injection-free) failures
+# ---------------------------------------------------------------------------
+
+def test_breakdown_detected_indefinite_preconditioner():
+    """r·z < 0 at init: flagged before the first iteration."""
+    A = jnp.asarray(_spd(20))
+    b = jnp.asarray(RNG.standard_normal(20))
+    res = pcg(lambda v: A @ v, lambda v: -v, b, rtol=1e-10, maxiter=50)
+    assert int(res.health.status) == health.BREAKDOWN
+    assert bool(res.health.breakdown)
+    assert not bool(res.converged)
+    assert int(res.iters) == 0
+    assert np.isfinite(np.asarray(res.x)).all()
+
+
+def test_breakdown_detected_indefinite_operator():
+    """p·Ap < 0 on step 0: the in-loop breakdown flag, update discarded."""
+    d = np.ones(10)
+    d[0] = -50.0
+    A = jnp.asarray(np.diag(d))
+    b = jnp.ones(10, jnp.float64)
+    res = pcg(lambda v: A @ v, lambda v: v, b, rtol=1e-10, maxiter=50)
+    assert int(res.health.status) == health.BREAKDOWN
+    assert not bool(res.converged)
+    # the broken step's update was discarded: x is the (finite) best
+    # iterate, here the initial guess
+    assert np.isfinite(np.asarray(res.x)).all()
+
+
+def test_nonfinite_detected_poison_rhs():
+    A = jnp.asarray(_spd(8))
+    b = jnp.asarray(RNG.standard_normal(8)).at[3].set(jnp.nan)
+    res = pcg(lambda v: A @ v, lambda v: v, b, rtol=1e-10, maxiter=50)
+    assert int(res.health.status) == health.NONFINITE
+    assert bool(res.health.nonfinite)
+    assert int(res.iters) == 0
+    assert np.isfinite(np.asarray(res.x)).all(), \
+        "a flagged solve must still return a finite iterate"
+
+
+def test_stagnation_detected_no_new_best_over_window():
+    """No new best residual for ``stall_window`` iterations trips the
+    stagnation flag instead of burning maxiter: unpreconditioned CG on an
+    ill-conditioned operator oscillates *above* the initial residual for
+    its whole transient, which a tight window catches deterministically
+    (dedicated rng: the fixture must not depend on test order)."""
+    rng = np.random.default_rng(23)
+    n = 30
+    Q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    A = jnp.asarray((Q * np.logspace(0, 4, n)) @ Q.T)
+    b = jnp.asarray(rng.standard_normal(n))
+    res = pcg(lambda v: A @ v, lambda v: v, b, rtol=1e-10, maxiter=5000,
+              stall_window=10)
+    assert int(res.health.status) == health.STAGNATION
+    assert bool(res.health.stagnation)
+    assert not bool(res.converged)
+    assert int(res.iters) < 100, "stall window must cut the run short"
+    # the returned iterate is the best seen (here: x0 — nothing improved
+    # on the initial residual inside the window), finite, never diverged
+    assert float(res.health.best_relres) <= 1.0
+    assert np.isfinite(np.asarray(res.x)).all()
+
+
+# ---------------------------------------------------------------------------
+# Best-iterate contract (satellite a)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_best_iterate_on_early_termination(dtype):
+    """A non-converged exit returns the minimum-residual iterate — at
+    every Krylov dtype (the unpreconditioned CG residual is not monotone,
+    so the last iterate can be strictly worse than an earlier one)."""
+    n = 60
+    A = jnp.asarray(_spd(n, cond=1e8).astype(dtype))
+    b = jnp.asarray(RNG.standard_normal(n).astype(dtype))
+    maxiter = 25
+    res, hist = pcg(lambda v: A @ v, lambda v: v, b, rtol=1e-12,
+                    maxiter=maxiter, record_history=True,
+                    stall_window=10**6)
+    assert not bool(res.converged)
+    hist = np.asarray(hist)[:int(res.iters)]
+    bnorm = max(float(np.linalg.norm(np.asarray(b))),
+                float(np.finfo(dtype).tiny))
+    r0 = float(np.linalg.norm(np.asarray(b)))  # x0 = 0 residual
+    best_seen = min(r0, hist.min()) / bnorm
+    got = float(res.health.best_relres)
+    np.testing.assert_allclose(got, best_seen, rtol=10 * np.finfo(dtype).eps)
+    # relres of the *returned* result is the best one, and the returned x
+    # actually achieves it
+    np.testing.assert_allclose(float(res.relres), best_seen,
+                               rtol=10 * np.finfo(dtype).eps)
+    true_rel = float(np.linalg.norm(np.asarray(b - A @ res.x))) / bnorm
+    np.testing.assert_allclose(true_rel, best_seen, rtol=200 * float(
+        np.finfo(dtype).eps) * np.sqrt(n) + 1e-30)
+    # best_iter indexes the history slot that achieved it
+    k = int(res.health.best_iter)
+    if k > 0:
+        np.testing.assert_allclose(hist[k - 1] / bnorm, best_seen,
+                                   rtol=10 * np.finfo(dtype).eps)
+
+
+def test_block_best_iterate_early_termination():
+    """Same contract per column of the masked panel solve."""
+    n = 60
+    A = jnp.asarray(_spd(n, cond=1e8))
+
+    def apply_a(V):
+        return A @ V
+
+    def apply_m(V):
+        return V
+
+    B = jnp.asarray(RNG.standard_normal((n, 3)))
+    res = block_pcg(apply_a, apply_m, B, rtol=1e-12, maxiter=25,
+                    stall_window=10**6)
+    assert not np.asarray(res.converged).any()
+    bn = np.linalg.norm(np.asarray(B), axis=0)
+    true_rel = np.linalg.norm(np.asarray(B - A @ res.x), axis=0) / bn
+    np.testing.assert_allclose(true_rel, np.asarray(res.relres),
+                               rtol=1e-9)
+    np.testing.assert_allclose(np.asarray(res.relres),
+                               np.asarray(res.health.best_relres),
+                               rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# Coarse-solve hardening (satellite b)
+# ---------------------------------------------------------------------------
+
+def _near_singular_spd(n, bad=-1e-10):
+    """SPD-but-for-rounding: one eigenvalue slightly negative, the classic
+    rank-deficient coarse grid (rigid modes not fully pinned)."""
+    Q, _ = np.linalg.qr(RNG.standard_normal((n, n)))
+    eigs = np.ones(n)
+    eigs[-1] = bad
+    M = (Q * eigs) @ Q.T
+    return 0.5 * (M + M.T)
+
+
+def test_jittered_cholesky_base_path_bitwise_legacy():
+    """On a healthy matrix the retry branch is dead code: the factor is
+    bitwise the legacy single-jitter factorization."""
+    dense = jnp.asarray(_spd(12))
+    scale = PrecisionPolicy.double().coarse_jitter_scale()
+    got = gamg.jittered_cholesky(dense, scale,
+                                 PrecisionPolicy.double()
+                                 .coarse_retry_scale())
+    n = dense.shape[0]
+    eye = jnp.eye(n, dtype=dense.dtype)
+    legacy = jnp.linalg.cholesky(dense + scale * jnp.trace(dense) / n * eye)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(legacy))
+
+
+def test_jittered_cholesky_recovers_rank_deficient():
+    """The ~-1e-10 eigenvalue defeats the 1e-12-relative base jitter but
+    not the sqrt(eps)-relative retry."""
+    dense = jnp.asarray(_near_singular_spd(16))
+    pol = PrecisionPolicy.double()
+    base = pol.coarse_jitter_scale()
+    n = dense.shape[0]
+    eye = jnp.eye(n, dtype=dense.dtype)
+    naive = jnp.linalg.cholesky(dense + base * jnp.trace(dense) / n * eye)
+    assert not bool(jnp.isfinite(naive).all()), \
+        "fixture must actually defeat the base jitter"
+    got = gamg.jittered_cholesky(dense, base, pol.coarse_retry_scale())
+    assert bool(jnp.isfinite(got).all()), \
+        "escalated retry jitter must factorize"
+    # and the factor is usable: L L^T ~ dense + retry-jitter diag
+    rec = np.asarray(got) @ np.asarray(got).T
+    np.testing.assert_allclose(rec, np.asarray(dense), atol=1e-6)
+
+
+def test_coarse_retry_scale_tracks_factor_dtype():
+    assert PrecisionPolicy.double().coarse_retry_scale() == pytest.approx(
+        np.sqrt(np.finfo(np.float64).eps))
+    f32 = PrecisionPolicy.from_name("f32")
+    assert f32.coarse_retry_scale() == pytest.approx(
+        np.sqrt(np.finfo(f32.factor_dtype).eps))
+
+
+# ---------------------------------------------------------------------------
+# Fault-spec mini-language + resolvers (satellite e knobs)
+# ---------------------------------------------------------------------------
+
+def test_parse_schedule_round_trip():
+    s = inject.parse_schedule(
+        "precond:nan@3; halo:bitflip:index=7:persistent;"
+        "hierarchy:inf:level=1")
+    assert len(s.faults) == 3
+    f0, f1, f2 = s.faults
+    assert (f0.site, f0.kind, f0.step, f0.transient) == \
+        ("precond", "nan", 3, True)
+    assert (f1.site, f1.kind, f1.index, f1.transient) == \
+        ("halo", "bitflip", 7, False)
+    assert (f2.site, f2.kind, f2.level) == ("hierarchy", "inf", 1)
+    # transient filtering keeps only the persistent fault
+    kept = s.without_transient()
+    assert kept is not None and len(kept.faults) == 1
+    assert kept.faults[0].site == "halo"
+    assert inject.parse_schedule("spmv:nan").without_transient() is None
+
+
+@pytest.mark.parametrize("bad", [
+    "bogus:nan",            # unknown site
+    "spmv:frob",            # unknown kind
+    "spmv",                 # missing kind
+    "spmv:nan:wat=3",       # unknown option
+    "spmv:nan:persistent:x",  # trailing garbage option
+    "",                     # empty
+])
+def test_parse_schedule_rejects(bad):
+    with pytest.raises(ValueError):
+        inject.parse_schedule(bad)
+
+
+def test_fault_corrupt_is_deterministic_and_gated():
+    f = inject.Fault(site="spmv", kind="inf", step=2, index=1)
+    x = jnp.arange(4.0)
+    same = f.corrupt(x, step=jnp.asarray(0))
+    np.testing.assert_array_equal(np.asarray(same), np.asarray(x))
+    hit1 = f.corrupt(x, step=jnp.asarray(2))
+    hit2 = f.corrupt(x, step=jnp.asarray(2))
+    np.testing.assert_array_equal(np.asarray(hit1), np.asarray(hit2))
+    assert np.isposinf(np.asarray(hit1)[1])
+    # bitflip flips the exponent MSB: small value -> huge, still the same
+    # array elsewhere
+    fb = inject.Fault(site="spmv", kind="bitflip", index=0)
+    src = jnp.full(4, 0.5)  # exponent MSB is 0: the flip lands finite-huge
+    flipped = np.asarray(fb.corrupt(src, step=None))
+    assert flipped[0] > 1e300 and np.isfinite(flipped[0])
+    np.testing.assert_array_equal(flipped[1:], np.asarray(src)[1:])
+
+
+def test_resolve_faults_env_and_passthrough(monkeypatch):
+    monkeypatch.delenv("REPRO_FAULTS", raising=False)
+    assert backend.resolve_faults() is None
+    monkeypatch.setenv("REPRO_FAULTS", "spmv:nan@1")
+    sched = backend.resolve_faults()
+    assert isinstance(sched, inject.FaultSchedule)
+    assert sched.faults[0].site == "spmv"
+    explicit = inject.parse_schedule("halo:inf")
+    assert backend.resolve_faults(explicit) is explicit
+    monkeypatch.setenv("REPRO_FAULTS", "bogus:nan")
+    with pytest.raises(ValueError):
+        backend.resolve_faults()
+
+
+def test_resolve_recover_env_and_passthrough(monkeypatch):
+    monkeypatch.delenv("REPRO_RECOVER", raising=False)
+    assert backend.resolve_recover() is None
+    for off in ("off", "0", "false", "none"):
+        monkeypatch.setenv("REPRO_RECOVER", off)
+        assert backend.resolve_recover() is None
+    monkeypatch.setenv("REPRO_RECOVER", "on")
+    assert backend.resolve_recover() == RecoveryPolicy()
+    monkeypatch.setenv("REPRO_RECOVER", "2")
+    assert backend.resolve_recover().max_attempts == 2
+    monkeypatch.delenv("REPRO_RECOVER", raising=False)
+    pol = RecoveryPolicy(max_attempts=1)
+    assert backend.resolve_recover(pol) is pol
+    monkeypatch.setenv("REPRO_RECOVER", "sometimes")
+    with pytest.raises(ValueError):
+        backend.resolve_recover()
+
+
+def test_recovery_policy_validation():
+    with pytest.raises(ValueError):
+        RecoveryPolicy(max_attempts=0)
+
+
+# ---------------------------------------------------------------------------
+# Server submit validation + exception containment (satellite c)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def server(solver, prob):
+    return AMGSolveServer(solver.setup_data, prob.A.data, buckets=(1, 2),
+                          rtol=1e-8, maxiter=100)
+
+
+def test_submit_rejects_bad_shape(server):
+    with pytest.raises(ValueError, match="shape"):
+        server.submit(np.ones(7))
+    with pytest.raises(ValueError, match="shape"):
+        server.submit(np.ones((server.n, 1)))
+
+
+def test_submit_rejects_bad_dtype(server):
+    with pytest.raises(ValueError, match="dtype"):
+        server.submit(np.array(["nope"] * server.n, dtype=object))
+
+
+def test_submit_rejects_nonfinite(server):
+    b = np.ones(server.n)
+    b[5] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        server.submit(b)
+    b[5] = np.inf
+    with pytest.raises(ValueError, match="non-finite"):
+        server.submit(b)
+
+
+def test_rejected_requests_never_reach_a_panel(server, prob):
+    """A rejected submit must not poison the queue: the next flush serves
+    only the good requests, all healthy."""
+    before = server.stats["rejected"]
+    bad = np.full(server.n, np.inf)
+    with pytest.raises(ValueError):
+        server.submit(bad)
+    server.submit(np.asarray(prob.b))
+    reports = server.flush()
+    assert server.stats["rejected"] == before + 1
+    assert len(reports) == 1
+    assert reports[0].status == "ok"
+    assert reports[0].converged
+    assert np.isfinite(reports[0].x).all()
+
+
+def test_report_carries_status_fields(server, prob):
+    [rep] = server.serve([np.asarray(prob.b)])
+    assert rep.status == "ok"
+    assert rep.health == health.HEALTHY
+    assert rep.converged and rep.relres <= 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Recovery ladder plumbing (injection-free; semantics in the battery)
+# ---------------------------------------------------------------------------
+
+def test_robust_solver_healthy_is_single_solve(prob):
+    rs = RobustSolver(prob.A, prob.B, coarse_size=30, rtol=1e-8,
+                      maxiter=100, precision="f64")
+    out = rs.solve(jnp.asarray(prob.b))
+    assert out.status == "ok"
+    assert out.attempts == ()
+    assert rs.describe_last() == "(no recovery needed)"
+    assert rs.n_recoveries == 0
+    assert int(out.result.health.status) == health.HEALTHY
+    assert rs.hierarchy_ok()
+    # the healthy path reuses the cached traces: a second solve does not
+    # rebuild anything
+    out2 = rs.solve(2.0 * jnp.asarray(prob.b))
+    assert out2.status == "ok"
+    assert rs._solve._cache_size() == 1
+
+
+def test_rung_order_and_policy_gating(prob):
+    rs = RobustSolver(prob.A, prob.B, coarse_size=30, precision="f64")
+    names = [n for n, _, _ in rs._rungs()]
+    # full-fp64 setup: no f64-rebuild rung, ladder capped at max_attempts
+    assert names == ["recompute", "re-setup", "reference-path"]
+    rs.recovery = RecoveryPolicy(max_attempts=1)
+    assert [n for n, _, _ in rs._rungs()] == ["recompute"]
+    rs.recovery = RecoveryPolicy(allow_recompute=False, max_attempts=4)
+    assert [n for n, _, _ in rs._rungs()] == ["re-setup", "reference-path"]
+
+
+def test_f64_rebuild_rung_offered_for_reduced_precision(prob):
+    rs = RobustSolver(prob.A, prob.B, coarse_size=30, precision="f32",
+                      recovery=RecoveryPolicy(max_attempts=4))
+    names = [n for n, _, _ in rs._rungs()]
+    assert "f64-rebuild" in names
+    assert names.index("f64-rebuild") < names.index("reference-path")
+
+
+def test_ladder_solve_one_shot(prob):
+    out = ladder_solve(prob.A, prob.B, jnp.asarray(prob.b),
+                       coarse_size=30, rtol=1e-8, maxiter=100,
+                       precision="f64")
+    assert out.status == "ok"
+    assert float(out.result.relres) <= 1e-8
+    assert np.isfinite(np.asarray(out.x)).all()
+
+
+def test_env_scope_restores(monkeypatch):
+    from repro.robust.recover import _env_scope
+    import os
+    monkeypatch.setenv("REPRO_SPGEMM_PATH", "pairs")
+    monkeypatch.delenv("REPRO_SPMM_PATH", raising=False)
+    with _env_scope({"REPRO_SPGEMM_PATH": "reference",
+                     "REPRO_SPMM_PATH": "reference"}):
+        assert os.environ["REPRO_SPGEMM_PATH"] == "reference"
+        assert os.environ["REPRO_SPMM_PATH"] == "reference"
+    assert os.environ["REPRO_SPGEMM_PATH"] == "pairs"
+    assert "REPRO_SPMM_PATH" not in os.environ
+
+
+def test_status_of_severity_order():
+    t, f = jnp.asarray(True), jnp.asarray(False)
+    assert int(health.status_of(t, f, f, f)) == health.HEALTHY
+    assert int(health.status_of(f, f, f, f)) == health.MAXITER
+    assert int(health.status_of(f, f, f, t)) == health.STAGNATION
+    assert int(health.status_of(f, t, f, t)) == health.BREAKDOWN
+    assert int(health.status_of(f, t, t, t)) == health.NONFINITE
+    # elementwise for the panel case
+    codes = health.status_of(jnp.asarray([True, False]),
+                             jnp.asarray([False, True]),
+                             jnp.asarray([False, False]),
+                             jnp.asarray([False, False]))
+    assert np.array_equal(np.asarray(codes), [0, 3])
+
+
+def test_describe_and_hierarchy_finite(solver, prob):
+    res = solver.solve(jnp.asarray(prob.b))
+    line = health.describe(res.health)
+    assert "healthy" in line and "best_relres" in line
+    assert bool(np.asarray(health.hierarchy_finite(solver.hierarchy)))
