@@ -25,8 +25,8 @@ from repro.fem.assemble import assemble_elasticity
 from benchmarks.common import emit, time_fn
 
 
-def run() -> None:
-    for order, m in ((1, 10), (2, 6)):
+def run(sizes=((1, 10), (2, 6))) -> None:
+    for order, m in sizes:
         prob = assemble_elasticity(m, order=order)
         # fp64 pin: blocked/scalar parity rows are an fp64 contract
         setupd = gamg.setup(prob.A, prob.B, coarse_size=30,

@@ -48,6 +48,7 @@ from repro.core.tentative import tentative_prolongator
 from repro.core.vcycle import Hierarchy, LevelState, fine_operator, vcycle
 from repro.core.spmv import spmv_ell
 from repro.core.krylov import CGResult, pcg
+from repro.obs import trace as obs_trace
 from repro.robust import inject
 
 Array = jax.Array
@@ -284,17 +285,21 @@ def recompute(setupd: GAMGSetup, a_fine_data: Array) -> Hierarchy:
     a_in = jnp.asarray(a_fine_data)
     states = []
     a_data = a_in.astype(h)
+    span = obs_trace.span
     for li, ls in enumerate(setupd.levels):
         # level-gated payload-corruption site (trace-time identity unless
         # a fault schedule is installed — repro.robust.inject)
         a_data = inject.maybe("hierarchy", a_data, level=li)
-        states.append(level_state(ls, a_data, policy))
-        a_data = ptap_numeric_data(ls.ptap_cache, a_data,
-                                   ls.P.data.astype(h),
-                                   accum_dtype=policy.kernel_accum_dtype)
+        with span(f"recompute/level{li}/smoother_data"):
+            states.append(level_state(ls, a_data, policy))
+        with span(f"recompute/level{li}/ptap"):
+            a_data = ptap_numeric_data(ls.ptap_cache, a_data,
+                                       ls.P.data.astype(h),
+                                       accum_dtype=policy.kernel_accum_dtype)
     a_data = inject.maybe("hierarchy", a_data, level=len(setupd.levels))
     Ac = setupd.coarse_struct.with_data(a_data)
-    chol = coarse_cholesky(Ac.to_dense(), policy)
+    with span("recompute/coarse_chol"):
+        chol = coarse_cholesky(Ac.to_dense(), policy)
     a_fine_ell = None
     if policy.mixed and setupd.levels:
         a_fine_ell = setupd.levels[0].a_ell_plan.build(
@@ -335,21 +340,48 @@ def make_coeff_recompute(setupd: GAMGSetup, assembler):
     return jax.jit(coeff_recompute)
 
 
-def make_solve(setupd: GAMGSetup, rtol: float = 1e-8, maxiter: int = 200):
+def make_solve(setupd: GAMGSetup, rtol: float = 1e-8, maxiter: int = 200,
+               obs=None):
     """Jitted hot KSPSolve: AMG-preconditioned CG on a Hierarchy pytree.
 
     The outer CG runs at the policy's ``krylov_dtype`` (the dtype of
     ``b`` / the ``fine_operator`` copy); the V-cycle preconditioner runs
     at ``smoother_dtype`` with the cast at the ``pcg`` boundary —
     iterative refinement around a reduced-precision hierarchy.
+
+    The observability mode (``obs=`` > ``use`` scope > ``REPRO_OBS``,
+    resolved here at closure-build time, matching the knob's trace-time
+    contract) selects the counted variant: under ``"counters"`` a
+    ``repro.obs.trace.CycleTally`` rides the CG carry and the returned
+    ``CGResult.counters`` reports level visits, smoother/operator/coarse
+    applications and the modeled HBM bytes
+    (``repro.obs.model.vcycle_traffic`` x V-cycle invocations).  Off
+    (the default) this closure is bitwise the pre-obs one.
     """
     smoother, degree = setupd.smoother, setupd.degree
     precond_dtype = setupd.precision.smoother_dtype
+    counted = obs_trace.counters_enabled(obs)
+    if counted:
+        from repro.obs.model import vcycle_traffic
+        itemsize = jnp.dtype(setupd.precision.hierarchy_dtype).itemsize
+        cycle_bytes = float(
+            vcycle_traffic(setupd, itemsize=itemsize)["total"])
+        n_levels = setupd.n_levels
 
     @partial(jax.jit, static_argnames=())
     def solve(hier: Hierarchy, b: Array) -> CGResult:
         def apply_a(x):
             return spmv_ell(fine_operator(hier), x)
+
+        if counted:
+            def apply_m(r, tl):
+                return vcycle(hier, r, smoother=smoother, degree=degree,
+                              tally=tl)
+            res = pcg(apply_a, apply_m, b, rtol=rtol, maxiter=maxiter,
+                      precond_dtype=precond_dtype,
+                      tally=obs_trace.zero_tally(n_levels))
+            return res._replace(counters=obs_trace.attach_model_bytes(
+                res.counters, cycle_bytes))
 
         def apply_m(r):
             return vcycle(hier, r, smoother=smoother, degree=degree)
@@ -368,7 +400,8 @@ class GAMGSolver:
     """PETSc-shaped convenience wrapper: setup once, re-solve many times."""
 
     def __init__(self, A: BlockCSR, B: Array, **opts):
-        solve_opts = {k: opts.pop(k) for k in ("rtol", "maxiter")
+        # "obs" rides along to make_solve/make_block_solve (counters mode)
+        solve_opts = {k: opts.pop(k) for k in ("rtol", "maxiter", "obs")
                       if k in opts}
         self.setup_data = setup(A, B, **opts)
         self._recompute = make_recompute(self.setup_data)

@@ -19,6 +19,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.obs import trace as obs_trace
 from repro.robust import inject
 from repro.robust.health import SolveHealth, status_of
 
@@ -31,6 +32,10 @@ class CGResult(NamedTuple):
     relres: Array
     converged: Array
     health: SolveHealth
+    # device-side solve counters (repro.obs.trace.CycleTally) when the
+    # solve ran under REPRO_OBS=counters; None otherwise.  None is an
+    # empty pytree node, so the default changes no traced structure.
+    counters: "obs_trace.CycleTally | None" = None
 
 
 def wrap_precond(apply_m: Callable[[Array], Array], precond_dtype,
@@ -60,7 +65,7 @@ def pcg(apply_a: Callable[[Array], Array],
         apply_m: Callable[[Array], Array],
         b: Array, x0: Array | None = None, rtol: float = 1e-8,
         maxiter: int = 200, record_history: bool = False,
-        precond_dtype=None, stall_window: int = 40):
+        precond_dtype=None, stall_window: int = 40, tally=None):
     """Standard PCG; fixed SPD preconditioner (one AMG V-cycle).
 
     ``record_history=True`` (a static, trace-time switch — the default
@@ -93,11 +98,29 @@ def pcg(apply_a: Callable[[Array], Array],
     iterate — never a diverged or NaN one.  On a clean converging run
     every flag stays false and the iterates, iteration count and relres
     are bitwise those of the unmonitored recurrence.
+
+    Counters (``tally=``, ISSUE 7): pass a ``repro.obs.trace.CycleTally``
+    to thread device-side solve counters through the carry — ``apply_m``
+    must then have the threaded signature ``(r, tally) -> (z, tally)``
+    (``vcycle(..., tally=...)`` is exactly that) and the result's
+    ``counters`` field carries the totals.  ``tally=None`` (default)
+    adds an *empty* pytree node to the carry — zero leaves, zero jaxpr
+    residue, the recurrence bitwise unchanged (``tests/test_obs.py``).
     """
-    apply_m = wrap_precond(apply_m, precond_dtype, b.dtype)
+    counted = tally is not None
+    if counted:
+        apply_m = obs_trace.wrap_threaded_precond(apply_m, precond_dtype,
+                                                  b.dtype)
+    else:
+        apply_m = wrap_precond(apply_m, precond_dtype, b.dtype)
     x = jnp.zeros_like(b) if x0 is None else x0
     r = b - apply_a(x)
-    z = apply_m(r)
+    if counted:
+        tally = tally._replace(operator_applies=tally.operator_applies + 1)
+        z, tally = apply_m(r, tally)
+    else:
+        z = apply_m(r)
+    tl0 = tally if counted else ()
     p = z
     rz = jnp.vdot(r, z)
     bnorm = jnp.maximum(jnp.linalg.norm(b), jnp.finfo(b.dtype).tiny)
@@ -108,19 +131,24 @@ def pcg(apply_a: Callable[[Array], Array],
     brk0 = ~nonf0 & (rz <= 0) & (rnorm > rtol * bnorm)
 
     def cond(state):
-        (x, r, z, p, rz, rnorm, k, hist, best, stall, brk, nonf) = state
+        (x, r, z, p, rz, rnorm, k, hist, best, stall, brk, nonf, tl) = state
         return ((rnorm > rtol * bnorm) & (k < maxiter)
                 & ~brk & ~nonf & (stall < stall_window))
 
     def body(state):
         (x, r, z, p, rz, rnorm, k, hist,
-         (best_x, best_rnorm, best_k), stall, brk, nonf) = state
+         (best_x, best_rnorm, best_k), stall, brk, nonf, tl) = state
         Ap = inject.maybe("spmv", apply_a(p), step=k)
         pAp = jnp.vdot(p, Ap)
         alpha = rz / pAp
         x_new = x + alpha * p
         r_new = r - alpha * Ap
-        z_new = inject.maybe("precond", apply_m(r_new), step=k)
+        if counted:
+            tl = tl._replace(operator_applies=tl.operator_applies + 1)
+            z_new, tl = apply_m(r_new, tl)
+            z_new = inject.maybe("precond", z_new, step=k)
+        else:
+            z_new = inject.maybe("precond", apply_m(r_new), step=k)
         rz_new = jnp.vdot(r_new, z_new)
         beta = rz_new / rz
         p_new = z_new + beta * p
@@ -148,7 +176,7 @@ def pcg(apply_a: Callable[[Array], Array],
         stall = jnp.where(improved, 0, stall + 1)
         return (x, r, z, p, rz, rnorm, k + 1, hist,
                 (best_x, best_rnorm, best_k), stall,
-                brk | brk_new, nonf | nonf_new)
+                brk | brk_new, nonf | nonf_new, tl)
 
     hist0 = (jnp.full((maxiter,), jnp.nan, rnorm.dtype) if record_history
              else jnp.zeros((0,), rnorm.dtype))
@@ -156,9 +184,10 @@ def pcg(apply_a: Callable[[Array], Array],
     # (identity when rnorm is finite, i.e. on every healthy run)
     best_rnorm0 = jnp.where(jnp.isfinite(rnorm), rnorm, jnp.inf)
     state = (x, r, z, p, rz, rnorm, jnp.asarray(0), hist0,
-             (x, best_rnorm0, jnp.asarray(0)), jnp.asarray(0), brk0, nonf0)
+             (x, best_rnorm0, jnp.asarray(0)), jnp.asarray(0), brk0, nonf0,
+             tl0)
     (x, r, z, p, rz, rnorm, k, hist,
-     (best_x, best_rnorm, best_k), stall, brk, nonf) = \
+     (best_x, best_rnorm, best_k), stall, brk, nonf, tl_out) = \
         jax.lax.while_loop(cond, body, state)
     converged = rnorm <= rtol * bnorm
     # early termination (breakdown, stagnation, max-iters) returns the
@@ -172,5 +201,6 @@ def pcg(apply_a: Callable[[Array], Array],
         best_iter=jnp.asarray(best_k, jnp.int32),
         best_relres=best_rnorm / bnorm)
     res = CGResult(x=x_out, iters=k, relres=rnorm_out / bnorm,
-                   converged=converged, health=health)
+                   converged=converged, health=health,
+                   counters=tl_out if counted else None)
     return (res, hist) if record_history else res

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.block_csr import BlockCSR, BlockELL
+from repro.obs import trace as obs_trace
 
 Array = jax.Array
 
@@ -27,13 +28,14 @@ Array = jax.Array
 @jax.jit
 def spmv_ell(ell: BlockELL, x: Array) -> Array:
     """y = A @ x on the padded ELL layout.  x: (nbc*bc,) -> y: (nbr*br,)."""
-    nbc, bc, br = ell.nbc, ell.bc, ell.br
-    xb = x.reshape(nbc, bc)
-    gathered = xb[ell.indices]  # (nbr, kmax, bc); padded rows hit col 0,
-    # but padded data blocks are exactly zero so they contribute nothing.
-    y = jnp.einsum("rkab,rkb->ra", ell.data, gathered,
-                   preferred_element_type=ell.data.dtype)
-    return y.reshape(ell.nbr * br)
+    with obs_trace.span("spmv_ell"):
+        nbc, bc, br = ell.nbc, ell.bc, ell.br
+        xb = x.reshape(nbc, bc)
+        gathered = xb[ell.indices]  # (nbr, kmax, bc); padded rows hit col 0,
+        # but padded data blocks are exactly zero so they contribute nothing.
+        y = jnp.einsum("rkab,rkb->ra", ell.data, gathered,
+                       preferred_element_type=ell.data.dtype)
+        return y.reshape(ell.nbr * br)
 
 
 @jax.jit
@@ -44,15 +46,16 @@ def spmm_ell(ell: BlockELL, X: Array) -> Array:
     *bitwise* the single-RHS result (same reduction graph) — the multi-RHS
     layer's k=1 exactness contract rests on this.
     """
-    nbc, bc, br = ell.nbc, ell.bc, ell.br
-    m = X.shape[1]
-    if m == 1:
-        return spmv_ell(ell, X[:, 0])[:, None]
-    xb = X.reshape(nbc, bc, m)
-    gathered = xb[ell.indices]  # (nbr, kmax, bc, m)
-    y = jnp.einsum("rkab,rkbm->ram", ell.data, gathered,
-                   preferred_element_type=ell.data.dtype)
-    return y.reshape(ell.nbr * br, m)
+    with obs_trace.span("spmm_ell"):
+        nbc, bc, br = ell.nbc, ell.bc, ell.br
+        m = X.shape[1]
+        if m == 1:
+            return spmv_ell(ell, X[:, 0])[:, None]
+        xb = X.reshape(nbc, bc, m)
+        gathered = xb[ell.indices]  # (nbr, kmax, bc, m)
+        y = jnp.einsum("rkab,rkbm->ram", ell.data, gathered,
+                       preferred_element_type=ell.data.dtype)
+        return y.reshape(ell.nbr * br, m)
 
 
 def apply_ell(ell: BlockELL, x: Array) -> Array:

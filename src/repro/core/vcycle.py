@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.core.block_csr import BlockELL
 from repro.core.spmv import apply_ell
+from repro.obs import trace as obs_trace
 from repro.robust import inject
 
 Array = jax.Array
@@ -158,7 +159,7 @@ def apply_smoother(lv, b, x, smoother: str, degree: int):
 
 
 def vcycle(hier: Hierarchy, b: Array, smoother: str = "chebyshev",
-           degree: int = 2) -> Array:
+           degree: int = 2, tally: "obs_trace.CycleTally | None" = None):
     """One V(degree,degree) cycle with zero initial guess (preconditioner).
 
     The recursion is a static Python loop over levels — unrolled in the
@@ -169,26 +170,58 @@ def vcycle(hier: Hierarchy, b: Array, smoother: str = "chebyshev",
     ``cho_solve`` natively accepts matrix right-hand sides — so the
     panel cycle is per-column identical to k single cycles (tested in
     ``tests/test_multirhs.py``).
+
+    Observability (ISSUE 7, all governed by ``REPRO_OBS``): every stage
+    runs inside a named scope (``vcycle/level{i}/smooth|restrict|prolong``
+    and ``vcycle/coarse``) so a profiler capture reads as a per-level
+    timeline; with a ``tally`` (a ``repro.obs.trace.CycleTally``) the
+    cycle additionally returns ``(x, tally')`` with level visits, smoother
+    applications and the coarse solve counted on device.  ``tally=None``
+    (the default) leaves both signature and jaxpr exactly the pre-obs
+    ones — zero residue, pinned by ``tests/test_obs.py``.
     """
+    span = obs_trace.span
+    counted = tally is not None
     bs_stack = []
     x_stack = []
     rhs = b
+    if counted:
+        tally = tally._replace(
+            precond_applies=tally.precond_applies + 1)
     for li, lv in enumerate(hier.levels):
-        x = apply_smoother(lv, rhs, jnp.zeros_like(rhs), smoother, degree)
+        with span(f"vcycle/level{li}/smooth"):
+            x = apply_smoother(lv, rhs, jnp.zeros_like(rhs), smoother,
+                               degree)
         r = rhs - apply_ell(lv.a_ell, x)
         bs_stack.append(rhs)
         x_stack.append(x)
         # restrict; inject.maybe is a trace-time identity unless a fault
         # schedule is installed (repro.robust.inject)
-        rhs = inject.maybe("vcycle", apply_ell(lv.r_ell, r), level=li)
-    xc = inject.maybe(
-        "coarse",
-        jax.scipy.linalg.cho_solve((hier.coarse_chol, True), rhs))
-    for lv, rhs_l, x in zip(reversed(hier.levels), reversed(bs_stack),
-                            reversed(x_stack)):
-        x = x + apply_ell(lv.p_ell, xc)       # prolong + correct
-        xc = apply_smoother(lv, rhs_l, x, smoother, degree)
-    return xc
+        with span(f"vcycle/level{li}/restrict"):
+            rhs = inject.maybe("vcycle", apply_ell(lv.r_ell, r), level=li)
+        if counted:
+            tally = tally._replace(
+                level_visits=tally.level_visits.at[li].add(1),
+                smoother_applies=tally.smoother_applies.at[li].add(1))
+    with span("vcycle/coarse"):
+        xc = inject.maybe(
+            "coarse",
+            jax.scipy.linalg.cho_solve((hier.coarse_chol, True), rhs))
+    if counted:
+        tally = tally._replace(coarse_solves=tally.coarse_solves + 1)
+    nlev = len(hier.levels)
+    for up, (lv, rhs_l, x) in enumerate(zip(reversed(hier.levels),
+                                            reversed(bs_stack),
+                                            reversed(x_stack))):
+        li = nlev - 1 - up
+        with span(f"vcycle/level{li}/prolong"):
+            x = x + apply_ell(lv.p_ell, xc)       # prolong + correct
+        with span(f"vcycle/level{li}/smooth"):
+            xc = apply_smoother(lv, rhs_l, x, smoother, degree)
+        if counted:
+            tally = tally._replace(
+                smoother_applies=tally.smoother_applies.at[li].add(1))
+    return (xc, tally) if counted else xc
 
 
 def vcycle_apply_op(hier: Hierarchy, x: Array) -> Array:

@@ -83,6 +83,7 @@ from repro.dist.pamg import (
 )
 from repro.dist.partition import RowPartition, partition_rows
 from repro.multirhs.block_krylov import block_pcg
+from repro.obs import trace as obs_trace
 from repro.robust import inject
 from repro.robust.health import status_of
 
@@ -979,15 +980,18 @@ def make_dist_solver(dg: DistGAMG, setupd: GAMGSetup, mesh, *,
 
     def rank_fn(args, a0, b):
         args, a0, b = jax.tree.map(lambda t: t[0], (args, a0, b))
-        states, chol = _rank_recompute(dg, args, a0)
+        # metadata-only spans: identical on every rank, collective-safe
+        with obs_trace.span("dist/recompute"):
+            states, chol = _rank_recompute(dg, args, a0)
         run_pcg = _rank_block_pcg if b.ndim == 3 else _rank_pcg
-        x, k, relres, ok, status = run_pcg(dg, args, states, chol, b,
-                                           rtol, maxiter)
+        with obs_trace.span("dist/pcg"):
+            x, k, relres, ok, status = run_pcg(dg, args, states, chol, b,
+                                               rtol, maxiter)
         return (x[None], k[None], relres[None], ok[None], status[None])
 
     sharded = shard_map(rank_fn, mesh, in_specs=(P(AXIS), P(AXIS), P(AXIS)),
                         out_specs=P(AXIS), check_rep=False)
-    return jax.jit(sharded)
+    return _with_rank0_span(jax.jit(sharded), "dist/solve")
 
 
 def make_dist_coeff_solver(dg: DistGAMG, da: DistAssembly, mesh, *,
@@ -1007,13 +1011,36 @@ def make_dist_coeff_solver(dg: DistGAMG, da: DistAssembly, mesh, *,
     def rank_fn(args, aargs, E, nu, b):
         args, aargs, E, nu, b = jax.tree.map(
             lambda t: t[0], (args, aargs, E, nu, b))
-        a_slab = _rank_assemble(da, aargs, E, nu)
-        states, chol = _rank_recompute(dg, args, a_slab)
+        with obs_trace.span("dist/assemble"):
+            a_slab = _rank_assemble(da, aargs, E, nu)
+        with obs_trace.span("dist/recompute"):
+            states, chol = _rank_recompute(dg, args, a_slab)
         run_pcg = _rank_block_pcg if b.ndim == 3 else _rank_pcg
-        x, k, relres, ok, status = run_pcg(dg, args, states, chol, b,
-                                           rtol, maxiter)
+        with obs_trace.span("dist/pcg"):
+            x, k, relres, ok, status = run_pcg(dg, args, states, chol, b,
+                                               rtol, maxiter)
         return (x[None], k[None], relres[None], ok[None], status[None])
 
     sharded = shard_map(rank_fn, mesh, in_specs=(P(AXIS),) * 5,
                         out_specs=P(AXIS), check_rep=False)
-    return jax.jit(sharded)
+    return _with_rank0_span(jax.jit(sharded), "dist/coeff_solve")
+
+
+def _with_rank0_span(jitted, name: str):
+    """Wrap a jitted dist entry point in a rank-0 host timing span.
+
+    Resolved at *build* time like every other obs decision: with spans off
+    (the default) the jitted callable is returned untouched — zero wrapper,
+    zero overhead.  Enabled, each call lands one blocked wall-clock
+    observation in the default registry's ``{name}/seconds`` histogram,
+    recorded only on process rank 0 (``obs_trace.rank0_span``) so
+    multi-process runs stay collective-safe.
+    """
+    if not obs_trace.spans_enabled():
+        return jitted
+
+    def timed(*args):
+        with obs_trace.rank0_span(name) as stop:
+            return stop(jitted(*args))
+
+    return timed

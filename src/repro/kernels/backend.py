@@ -32,6 +32,10 @@ interpreter.  This module centralizes the decision:
                            ``None`` falls back to ``REPRO_RECOVER``
                            ("off" | "on" | max-attempts integer),
                            default off (``None``).
+* ``resolve_obs``        — the observability mode (``repro.obs``):
+                           ``None`` falls back to ``REPRO_OBS``
+                           ("off" | "spans" | "counters"), default off —
+                           the zero-jaxpr-residue contract.
 
 Every front door (``spmv``, ``spgemm_numeric_data``, ``set_values_coo``)
 accepts ``None`` for these knobs and resolves them here, so the same call
@@ -165,6 +169,37 @@ def resolve_faults(spec=None):
     if spec is None or isinstance(spec, inject.FaultSchedule):
         return spec
     return inject.parse_schedule(spec)
+
+
+def resolve_obs(mode=None) -> str:
+    """Default observability mode; honours the ``REPRO_OBS`` knob.
+
+    "off"       (default) no spans, no counters — monitored hot paths are
+                bitwise the unmonitored ones with zero jaxpr residue.
+    "spans"     ``jax.named_scope``/``TraceAnnotation`` wrappers on every
+                kernel family and V-cycle stage (metadata only, numerics
+                unchanged).
+    "counters"  spans plus the device-side ``CycleTally`` carry threaded
+                through ``pcg``/``block_pcg``/``vcycle``.
+
+    Re-read per call (mirroring the path knobs); like them, the mode is
+    consumed at *trace* time, so it must be set before the solver under
+    observation is built.  Invalid values raise ``ValueError``.
+    """
+    if mode is None:
+        mode = os.environ.get("REPRO_OBS")
+    if mode is None:
+        return "off"
+    key = str(mode).strip().lower()
+    if key in ("", "0", "off", "false", "none"):
+        return "off"
+    if key in ("1", "on", "true", "spans"):
+        return "spans"
+    if key == "counters":
+        return "counters"
+    raise ValueError(
+        f"invalid observability mode {mode!r}: expected 'off', 'spans' or "
+        f"'counters' (from REPRO_OBS or the obs= knob)")
 
 
 def resolve_recover(policy=None):

@@ -1,4 +1,13 @@
 """Jit'd wrapper for the batched block GEMM kernel."""
-from repro.kernels.block_pair_gemm.block_pair_gemm import block_pair_gemm
+from repro.kernels.block_pair_gemm.block_pair_gemm import (
+    block_pair_gemm as _block_pair_gemm,
+)
+from repro.obs import trace as obs_trace
 
 __all__ = ["block_pair_gemm"]
+
+
+def block_pair_gemm(*args, **kwargs):
+    """Front door with the observability span (trace-time no-op when off)."""
+    with obs_trace.span("kernels/block_pair_gemm"):
+        return _block_pair_gemm(*args, **kwargs)

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.block_seg_sum.block_seg_sum import block_stream_cumsum
+from repro.obs import trace as obs_trace
 
 
 @functools.partial(jax.jit,
@@ -27,12 +28,15 @@ def block_seg_sum(vals: jax.Array, seg_ids: jax.Array, num_segments: int,
     sum and its boundary differences (None = native, bitwise legacy); the
     per-segment results round back to ``vals.dtype``.
     """
-    n = vals.shape[0]
-    csum = block_stream_cumsum(vals, tile_n=tile_n, interpret=interpret,
-                               accum_dtype=accum_dtype)
-    # end[s] = one past last input of segment s; start[s] = end[s-1]
-    ends = jnp.searchsorted(seg_ids, jnp.arange(num_segments), side="right")
-    starts = jnp.searchsorted(seg_ids, jnp.arange(num_segments), side="left")
-    zero = jnp.zeros((1,) + vals.shape[1:], csum.dtype)
-    padded = jnp.concatenate([zero, csum], axis=0)   # prefix with 0
-    return (padded[ends] - padded[starts]).astype(vals.dtype)
+    with obs_trace.span("kernels/block_seg_sum"):
+        n = vals.shape[0]
+        csum = block_stream_cumsum(vals, tile_n=tile_n, interpret=interpret,
+                                   accum_dtype=accum_dtype)
+        # end[s] = one past last input of segment s; start[s] = end[s-1]
+        ends = jnp.searchsorted(seg_ids, jnp.arange(num_segments),
+                                side="right")
+        starts = jnp.searchsorted(seg_ids, jnp.arange(num_segments),
+                                  side="left")
+        zero = jnp.zeros((1,) + vals.shape[1:], csum.dtype)
+        padded = jnp.concatenate([zero, csum], axis=0)   # prefix with 0
+        return (padded[ends] - padded[starts]).astype(vals.dtype)

@@ -12,17 +12,19 @@ import jax.numpy as jnp
 
 from repro.core.block_csr import BlockELL
 from repro.kernels.block_spmm.block_spmm import block_spmm_ell
+from repro.obs import trace as obs_trace
 
 
 def block_spmm(ell: BlockELL, X: jax.Array, *, interpret: bool = True,
                tile_rows: int = 8, pad_k_to: int = 8,
                accum_dtype=None) -> jax.Array:
     """Y = A @ X, flat (n, k) panels in/out (matches core ``spmm_ell``)."""
-    k = X.shape[1]
-    kp = -(-k // pad_k_to) * pad_k_to if pad_k_to > 1 else k
-    xb = X.reshape(ell.nbc, ell.bc, k)
-    if kp != k:
-        xb = jnp.pad(xb, ((0, 0), (0, 0), (0, kp - k)))
-    y = block_spmm_ell(ell.indices, ell.data, xb, tile_rows=tile_rows,
-                       interpret=interpret, accum_dtype=accum_dtype)
-    return y.reshape(ell.nbr * ell.br, kp)[:, :k]
+    with obs_trace.span("kernels/block_spmm"):
+        k = X.shape[1]
+        kp = -(-k // pad_k_to) * pad_k_to if pad_k_to > 1 else k
+        xb = X.reshape(ell.nbc, ell.bc, k)
+        if kp != k:
+            xb = jnp.pad(xb, ((0, 0), (0, 0), (0, kp - k)))
+        y = block_spmm_ell(ell.indices, ell.data, xb, tile_rows=tile_rows,
+                           interpret=interpret, accum_dtype=accum_dtype)
+        return y.reshape(ell.nbr * ell.br, kp)[:, :k]

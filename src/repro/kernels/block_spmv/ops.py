@@ -5,12 +5,14 @@ import jax
 
 from repro.core.block_csr import BlockELL
 from repro.kernels.block_spmv.block_spmv import block_spmv_ell
+from repro.obs import trace as obs_trace
 
 
 def block_spmv(ell: BlockELL, x: jax.Array, *, interpret: bool = True,
                tile_rows: int = 8, accum_dtype=None) -> jax.Array:
     """y = A @ x, flat vectors in/out (matches repro.core.spmv.spmv_ell)."""
-    xb = x.reshape(ell.nbc, ell.bc)
-    y = block_spmv_ell(ell.indices, ell.data, xb, tile_rows=tile_rows,
-                       interpret=interpret, accum_dtype=accum_dtype)
-    return y.reshape(ell.nbr * ell.br)
+    with obs_trace.span("kernels/block_spmv"):
+        xb = x.reshape(ell.nbc, ell.bc)
+        y = block_spmv_ell(ell.indices, ell.data, xb, tile_rows=tile_rows,
+                           interpret=interpret, accum_dtype=accum_dtype)
+        return y.reshape(ell.nbr * ell.br)

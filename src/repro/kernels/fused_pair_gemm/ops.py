@@ -1,7 +1,14 @@
 """Jit'd wrapper for the fused tiled pair-GEMM + segment-reduce kernel."""
 from repro.kernels.fused_pair_gemm.fused_pair_gemm import (
     default_tile_slots,
-    fused_pair_gemm,
+    fused_pair_gemm as _fused_pair_gemm,
 )
+from repro.obs import trace as obs_trace
 
 __all__ = ["fused_pair_gemm", "default_tile_slots"]
+
+
+def fused_pair_gemm(*args, **kwargs):
+    """Front door with the observability span (trace-time no-op when off)."""
+    with obs_trace.span("kernels/fused_pair_gemm"):
+        return _fused_pair_gemm(*args, **kwargs)

@@ -4,13 +4,15 @@ from __future__ import annotations
 import jax
 
 from repro.kernels.pbjacobi.pbjacobi import pbjacobi_update
+from repro.obs import trace as obs_trace
 
 
 def pbjacobi_apply(dinv: jax.Array, r: jax.Array, x: jax.Array, omega,
                    *, interpret: bool = True, accum_dtype=None) -> jax.Array:
     """Flat-vector front door: x, r are (nbr*bs,)."""
-    nbr, bs, _ = dinv.shape
-    out = pbjacobi_update(dinv, r.reshape(nbr, bs), x.reshape(nbr, bs),
-                          omega, interpret=interpret,
-                          accum_dtype=accum_dtype)
-    return out.reshape(-1)
+    with obs_trace.span("kernels/pbjacobi"):
+        nbr, bs, _ = dinv.shape
+        out = pbjacobi_update(dinv, r.reshape(nbr, bs), x.reshape(nbr, bs),
+                              omega, interpret=interpret,
+                              accum_dtype=accum_dtype)
+        return out.reshape(-1)

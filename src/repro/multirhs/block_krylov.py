@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from repro.core.krylov import wrap_precond
 from repro.core.vcycle import Hierarchy, fine_operator, vcycle
 from repro.core.spmv import apply_ell
+from repro.obs import trace as obs_trace
 from repro.robust import inject
 from repro.robust.health import SolveHealth, status_of
 
@@ -43,6 +44,10 @@ class BlockCGResult(NamedTuple):
     relres: Array     # (k,)   final per-column relative residual
     converged: Array  # (k,)   bool
     health: SolveHealth  # per-column (k,) health record
+    # device-side solve counters (repro.obs.trace.CycleTally) when the
+    # panel ran under REPRO_OBS=counters; None (an empty pytree node —
+    # no traced-structure change) otherwise.
+    counters: "obs_trace.CycleTally | None" = None
 
 
 def _col_dot(a: Array, b: Array) -> Array:
@@ -60,7 +65,8 @@ def block_pcg(apply_a: Callable[[Array], Array],
               maxiter: int = 200, *,
               col_dot: Callable[[Array, Array], Array] = _col_dot,
               col_norm: Callable[[Array], Array] = _col_norm,
-              precond_dtype=None, stall_window: int = 40) -> BlockCGResult:
+              precond_dtype=None, stall_window: int = 40,
+              record_history: bool = False, tally=None):
     """PCG on a panel ``B: (..., k)`` with per-column masking.
 
     A column is *active* while its residual exceeds ``rtol * ||b_col||``
@@ -93,11 +99,35 @@ def block_pcg(apply_a: Callable[[Array], Array],
     converged one, its broken step discarded) and its minimum-residual
     iterate is what the panel returns for it.  Clean columns' arithmetic,
     iteration counts and relres are bitwise unchanged.
+
+    ``record_history=True`` (static, trace-time — parity with
+    ``core.krylov.pcg``) additionally returns a ``(maxiter, k)`` buffer
+    of per-column unpreconditioned residual norms: slot ``[i, c]`` holds
+    column ``c``'s ``||r||`` after iteration ``i+1``, NaN once the column
+    froze (converged, quarantined, or never active) — so a trace reads
+    off each column's trajectory with its freeze point explicit.
+
+    ``tally=`` (ISSUE 7) threads a ``repro.obs.trace.CycleTally`` through
+    the carry exactly like ``pcg``; ``apply_m`` must then be the threaded
+    ``(R, tally) -> (Z, tally)`` form.  The panel counts one operator /
+    preconditioner application per *iteration* (SpMM streams A once for
+    all columns — that is the point of the panel).  ``tally=None``
+    (default) appends an empty pytree node: zero jaxpr residue.
     """
-    apply_m = wrap_precond(apply_m, precond_dtype, B.dtype)
+    counted = tally is not None
+    if counted:
+        apply_m = obs_trace.wrap_threaded_precond(apply_m, precond_dtype,
+                                                  B.dtype)
+    else:
+        apply_m = wrap_precond(apply_m, precond_dtype, B.dtype)
     x = jnp.zeros_like(B) if x0 is None else x0
     r = B - apply_a(x)
-    z = apply_m(r)
+    if counted:
+        tally = tally._replace(operator_applies=tally.operator_applies + 1)
+        z, tally = apply_m(r, tally)
+    else:
+        z = apply_m(r)
+    tl0 = tally if counted else ()
     p = z
     rz = col_dot(r, z)
     bnorm = jnp.maximum(col_norm(B), jnp.finfo(B.dtype).tiny)
@@ -106,14 +136,16 @@ def block_pcg(apply_a: Callable[[Array], Array],
     brk0 = ~nonf0 & (rz <= 0) & (rnorm > rtol * bnorm)
 
     def cond(state):
-        (x, r, z, p, rz, rnorm, iters, k, best, stall, brk, nonf) = state
+        (x, r, z, p, rz, rnorm, iters, k, best, stall, brk, nonf,
+         hist, tl) = state
         active = ((rnorm > rtol * bnorm) & ~brk & ~nonf
                   & (stall < stall_window))
         return jnp.any(active) & (k < maxiter)
 
     def body(state):
         (x, r, z, p, rz, rnorm, iters, k,
-         (best_x, best_rnorm, best_iter), stall, brk, nonf) = state
+         (best_x, best_rnorm, best_iter), stall, brk, nonf,
+         hist, tl) = state
         active = ((rnorm > rtol * bnorm) & ~brk & ~nonf
                   & (stall < stall_window))
         Ap = inject.maybe("spmv", apply_a(p), step=k)
@@ -122,7 +154,12 @@ def block_pcg(apply_a: Callable[[Array], Array],
         alpha = jnp.where(active, rz / jnp.where(active, pAp, 1.0), 0.0)
         x_new = x + alpha * p
         r_new = r - alpha * Ap
-        z_new = inject.maybe("precond", apply_m(r_new), step=k)
+        if counted:
+            tl = tl._replace(operator_applies=tl.operator_applies + 1)
+            z_new, tl = apply_m(r_new, tl)
+            z_new = inject.maybe("precond", z_new, step=k)
+        else:
+            z_new = inject.maybe("precond", apply_m(r_new), step=k)
         rz_new = col_dot(r_new, z_new)
         beta = jnp.where(active, rz_new / jnp.where(active, rz, 1.0), 0.0)
         rnorm_new = col_norm(r_new)
@@ -146,18 +183,26 @@ def block_pcg(apply_a: Callable[[Array], Array],
         best_iter = jnp.where(improved, k + 1, best_iter)
         stall = jnp.where(improved, 0, stall + active.astype(stall.dtype))
         iters = iters + active.astype(iters.dtype)
+        if record_history:
+            # frozen columns (converged / quarantined / broken step) stay
+            # NaN — the trace shows exactly where each column stopped
+            hist = hist.at[k].set(jnp.where(ok_step, rnorm_new, jnp.nan))
         return (x, r, z, p, rz, rnorm, iters, k + 1,
                 (best_x, best_rnorm, best_iter), stall,
-                brk | brk_new, nonf | nonf_new)
+                brk | brk_new, nonf | nonf_new, hist, tl)
 
     iters0 = jnp.zeros(B.shape[-1], jnp.int32)
+    # record_history=False contributes an *empty* carry node (like the
+    # tally) — the default panel jaxpr is exactly the pre-obs one
+    hist0 = (jnp.full((maxiter, B.shape[-1]), jnp.nan, rnorm.dtype)
+             if record_history else ())
     # a NaN initial residual must not poison the best-so-far tracking
     best_rnorm0 = jnp.where(jnp.isfinite(rnorm), rnorm, jnp.inf)
     state = (x, r, z, p, rz, rnorm, iters0, jnp.asarray(0),
              (x, best_rnorm0, jnp.zeros(B.shape[-1], jnp.int32)),
-             jnp.zeros(B.shape[-1], jnp.int32), brk0, nonf0)
+             jnp.zeros(B.shape[-1], jnp.int32), brk0, nonf0, hist0, tl0)
     (x, r, z, p, rz, rnorm, iters, k,
-     (best_x, best_rnorm, best_iter), stall, brk, nonf) = \
+     (best_x, best_rnorm, best_iter), stall, brk, nonf, hist, tl_out) = \
         jax.lax.while_loop(cond, body, state)
     converged = rnorm <= rtol * bnorm
     # a non-converged column reports its minimum-residual iterate
@@ -169,30 +214,62 @@ def block_pcg(apply_a: Callable[[Array], Array],
         breakdown=brk, nonfinite=nonf, stagnation=stag,
         best_iter=best_iter.astype(jnp.int32),
         best_relres=best_rnorm / bnorm)
-    return BlockCGResult(x=x_out, iters=iters, relres=rnorm_out / bnorm,
-                         converged=converged, health=health)
+    res = BlockCGResult(x=x_out, iters=iters, relres=rnorm_out / bnorm,
+                        converged=converged, health=health,
+                        counters=tl_out if counted else None)
+    return (res, hist) if record_history else res
 
 
-def make_block_solve(setupd, rtol: float = 1e-8, maxiter: int = 200):
-    """Jitted hot panel solve: ``(Hierarchy, B: (n, k)) -> BlockCGResult``.
+def make_block_solve(setupd, rtol: float = 1e-8, maxiter: int = 200,
+                     record_history: bool = False, obs=None):
+    """Jitted hot panel solve: ``(Hierarchy, B: (n, k)) -> BlockCGResult``
+    (``(result, history)`` under ``record_history=True``).
 
     The multi-RHS twin of ``repro.core.gamg.make_solve`` — same smoother
     configuration, same hierarchy pytree, SpMM everywhere.  jax.jit traces
     once per distinct k; the solve server buckets request streams to a
     static k set precisely so this cache stays small.
+
+    The observability mode (``obs=`` > ``use`` scope > ``REPRO_OBS``) is
+    resolved *here*, at closure-build time — matching the knob's
+    trace-time contract.  Under ``"counters"`` the panel threads a
+    ``CycleTally`` through the V-cycle and the result's ``counters``
+    carries the totals plus the modeled HBM bytes
+    (``repro.obs.model.vcycle_traffic`` x preconditioner applications).
     """
     smoother, degree = setupd.smoother, setupd.degree
     precond_dtype = setupd.precision.smoother_dtype
+    counted = obs_trace.counters_enabled(obs)
+    if counted:
+        from repro.obs.model import vcycle_traffic
+        itemsize = jnp.dtype(setupd.precision.hierarchy_dtype).itemsize
+        cycle_bytes = float(
+            vcycle_traffic(setupd, itemsize=itemsize)["total"])
+        n_levels = setupd.n_levels
 
     @partial(jax.jit, static_argnames=())
-    def solve(hier: Hierarchy, B: Array) -> BlockCGResult:
+    def solve(hier: Hierarchy, B: Array):
         def apply_a(X):
             return apply_ell(fine_operator(hier), X)
 
-        def apply_m(R):
-            return vcycle(hier, R, smoother=smoother, degree=degree)
+        if counted:
+            def apply_m(R, tl):
+                return vcycle(hier, R, smoother=smoother, degree=degree,
+                              tally=tl)
+            tally = obs_trace.zero_tally(n_levels)
+        else:
+            def apply_m(R):
+                return vcycle(hier, R, smoother=smoother, degree=degree)
+            tally = None
 
-        return block_pcg(apply_a, apply_m, B, rtol=rtol, maxiter=maxiter,
-                         precond_dtype=precond_dtype)
+        out = block_pcg(apply_a, apply_m, B, rtol=rtol, maxiter=maxiter,
+                        precond_dtype=precond_dtype,
+                        record_history=record_history, tally=tally)
+        if counted:
+            res, hist = out if record_history else (out, None)
+            res = res._replace(counters=obs_trace.attach_model_bytes(
+                res.counters, cycle_bytes))
+            return (res, hist) if record_history else res
+        return out
 
     return solve

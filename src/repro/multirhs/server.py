@@ -37,6 +37,7 @@ bucketing buys.
 """
 from __future__ import annotations
 
+import time
 from typing import Hashable, List, NamedTuple, Optional, Sequence
 
 import jax.numpy as jnp
@@ -44,6 +45,8 @@ import numpy as np
 
 from repro.core import gamg
 from repro.multirhs.block_krylov import make_block_solve
+from repro.obs import trace as obs_trace
+from repro.obs.server_metrics import ServerMetrics
 from repro.robust import inject
 from repro.robust.health import (
     BREAKDOWN,
@@ -62,6 +65,13 @@ class SolveReport(NamedTuple):
     k_bucket: int         # panel width the request was served in
     status: str = "ok"    # "ok" | "degraded" | "failed" | "recovered"
     health: int = HEALTHY  # raw health code (repro.robust.STATUS_NAMES)
+    # observability (ISSUE 7): end-to-end submit->report latency (includes
+    # any recovery retry this request triggered), submit->batch-start wait,
+    # and — when the server records history — this request's per-iteration
+    # residual-norm trace ((maxiter,), NaN past its final iteration).
+    latency_s: float = 0.0
+    queue_wait_s: float = 0.0
+    history: "np.ndarray | None" = None
 
 
 class AMGSolveServer:
@@ -70,7 +80,7 @@ class AMGSolveServer:
     def __init__(self, setupd: gamg.GAMGSetup, a_fine_data, *,
                  buckets: Sequence[int] = (1, 2, 4, 8, 16),
                  rtol: float = 1e-8, maxiter: int = 200,
-                 assembler=None, recover=None):
+                 assembler=None, recover=None, record_history=None):
         from repro.kernels.backend import resolve_recover
         buckets_in = [int(k) for k in buckets]
         if not buckets_in:
@@ -97,8 +107,15 @@ class AMGSolveServer:
         self.dtype = np.dtype(setupd.precision.krylov_dtype)
         self._rtol = rtol
         self._maxiter = maxiter
+        # per-request residual-history recording (the block PCG's
+        # record_history parity, ISSUE 7): None defers to the obs knob —
+        # on whenever REPRO_OBS (or a ``use`` scope) is not "off".
+        if record_history is None:
+            record_history = obs_trace.resolve() != "off"
+        self._record_history = bool(record_history)
         self._recompute = gamg.make_recompute(setupd)
-        self._solve = make_block_solve(setupd, rtol=rtol, maxiter=maxiter)
+        self._solve = make_block_solve(setupd, rtol=rtol, maxiter=maxiter,
+                                       record_history=self._record_history)
         self._a_fine_data = jnp.asarray(a_fine_data)
         self.hierarchy = self._recompute(self._a_fine_data)
         # bounded per-column retry on flagged columns (None disables);
@@ -120,13 +137,29 @@ class AMGSolveServer:
             "solves_per_k": {k: 0 for k in buckets},
             "rejected": 0, "degraded": 0, "failed": 0, "recovered": 0,
         }
+        # always-on host-side instrumentation (repro.obs.server_metrics):
+        # pure clocks and counters around work the server already does, so
+        # the traced programs — and the REPRO_OBS=off bitwise contract —
+        # are untouched.
+        self._metrics = ServerMetrics(buckets)
+
+    # ---- observability ---------------------------------------------------
+    def metrics(self) -> ServerMetrics:
+        """The server's measurement surface (latency/padding histograms,
+        outcome counters; export via ``.to_prometheus()``/``.to_jsonl()``)."""
+        return self._metrics
+
+    def snapshot(self) -> dict:
+        """One plain-dict health/throughput summary (dashboard poll)."""
+        return self._metrics.snapshot()
 
     # ---- operator lifecycle ---------------------------------------------
     def update_operator(self, a_fine_data) -> None:
         """Hot path: new fine values, same structure (state-gated PtAP)."""
         self._a_fine_data = jnp.asarray(a_fine_data)
         self._coeff_fields = None
-        self.hierarchy = self._recompute(self._a_fine_data)
+        with self._metrics.registry.timer("server/recompute_seconds") as t:
+            self.hierarchy = t.block(self._recompute(self._a_fine_data))
         self.stats["recomputes"] += 1
 
     def update_coefficients(self, E, nu) -> None:
@@ -145,7 +178,9 @@ class AMGSolveServer:
                 "path)")
         E, nu = self.assembler.as_fields(E, nu)
         self._coeff_fields = (E, nu)
-        self.hierarchy = self._coeff_recompute(E, nu)
+        with self._metrics.registry.timer(
+                "server/coeff_update_seconds") as t:
+            self.hierarchy = t.block(self._coeff_recompute(E, nu))
         self.stats["recomputes"] += 1
         self.stats["coefficient_updates"] += 1
 
@@ -162,21 +197,26 @@ class AMGSolveServer:
             b = np.asarray(b, dtype=self.dtype)
         except (TypeError, ValueError) as e:
             self.stats["rejected"] += 1
+            self._metrics.rejected.inc()
             raise ValueError(
                 f"rhs does not convert to the panel dtype "
                 f"{self.dtype}: {e}") from e
         if b.shape != (self.n,):
             self.stats["rejected"] += 1
+            self._metrics.rejected.inc()
             raise ValueError(f"rhs shape {b.shape} != ({self.n},)")
         if not np.isfinite(b).all():
             self.stats["rejected"] += 1
+            self._metrics.rejected.inc()
             raise ValueError(
                 f"rhs contains {int((~np.isfinite(b)).sum())} non-finite "
                 f"values — rejected before panel assembly")
         if request_id is None:
             request_id = self._next_id
             self._next_id += 1
-        self._pending.append((request_id, b))
+        self._pending.append((request_id, b, time.perf_counter()))
+        self._metrics.requests.inc()
+        self._metrics.pending.set(len(self._pending))
         return request_id
 
     def _bucket_for(self, count: int) -> int:
@@ -203,7 +243,8 @@ class AMGSolveServer:
         fresh hierarchy under ``suppress_transient`` (one-off corruption
         vanishes from fresh traces; persistent faults survive and keep
         the explicit failure)."""
-        with inject.suppress_transient():
+        with self._metrics.registry.timer("server/retry_seconds") as t, \
+                inject.suppress_transient():
             recompute = gamg.make_recompute(self.setupd)
             solve = make_block_solve(self.setupd, rtol=self._rtol,
                                      maxiter=self._maxiter)
@@ -213,7 +254,7 @@ class AMGSolveServer:
                 hier = coeff(*self._coeff_fields)
             else:
                 hier = recompute(self._a_fine_data)
-            return solve(hier, jnp.asarray(b[:, None]))
+            return t.block(solve(hier, jnp.asarray(b[:, None])))
 
     def _classify(self, code: int, converged: bool) -> str:
         if code == HEALTHY and converged:
@@ -232,23 +273,37 @@ class AMGSolveServer:
         degraded columns their best iterate; neither ever carries a NaN.
         With ``self.recover`` set, flagged columns get one retry via
         ``_retry_column`` first.
+
+        Every report carries its timing (ISSUE 7): ``queue_wait_s`` from
+        submit to its batch starting, ``latency_s`` from submit to the
+        report existing — computed *after* any recovery retry, so a
+        retried request's latency owns the retry it caused (previously a
+        recovered request would have under-reported its latency by the
+        whole retry).  The batch's blocked solve wall time and the
+        per-request numbers also land in ``self.metrics()``.
         """
         reports: List[SolveReport] = []
         kmax = self.buckets[-1]
         while self._pending:
             chunk = self._pending[:kmax]
             del self._pending[:kmax]
+            self._metrics.pending.set(len(self._pending))
+            t_batch = time.perf_counter()
             k = self._bucket_for(len(chunk))
             B = np.zeros((self.n, k), self.dtype)
-            for j, (_, b) in enumerate(chunk):
+            for j, (_, b, _) in enumerate(chunk):
                 B[:, j] = b
-            res = self._solve(self.hierarchy, jnp.asarray(B))
+            out = self._solve(self.hierarchy, jnp.asarray(B))
+            res, hist = out if self._record_history else (out, None)
             x = np.asarray(res.x)
             iters = np.asarray(res.iters)
             relres = np.asarray(res.relres)
             conv = np.asarray(res.converged)
             codes = np.asarray(res.health.status)
-            for j, (rid, b_j) in enumerate(chunk):
+            hist_np = None if hist is None else np.asarray(hist)
+            # every result array is on host now — the clock stop is honest
+            solve_s = time.perf_counter() - t_batch
+            for j, (rid, b_j, t_sub) in enumerate(chunk):
                 code = int(codes[j])
                 status = self._classify(code, bool(conv[j]))
                 x_j, it_j = x[:, j], int(iters[j])
@@ -272,15 +327,24 @@ class AMGSolveServer:
                     status, x_j = "failed", np.zeros_like(x_j)
                 if status in ("degraded", "failed", "recovered"):
                     self.stats[status] += 1
+                # latency clocked here, after any retry: the client waited
+                # through it, so this request's latency includes it
+                queue_wait = t_batch - t_sub
+                latency = time.perf_counter() - t_sub
+                self._metrics.record_request(status, it_j, queue_wait,
+                                             latency)
                 reports.append(SolveReport(
                     request_id=rid, x=x_j, iters=it_j,
                     relres=rr_j, converged=bool(conv[j]) or
                     status == "recovered",
-                    k_bucket=k, status=status, health=code))
+                    k_bucket=k, status=status, health=code,
+                    latency_s=latency, queue_wait_s=queue_wait,
+                    history=None if hist_np is None else hist_np[:, j]))
             self.stats["requests"] += len(chunk)
             self.stats["batches"] += 1
             self.stats["padded_columns"] += k - len(chunk)
             self.stats["solves_per_k"][k] += 1
+            self._metrics.record_batch(k, len(chunk), solve_s)
         return reports
 
     def serve(self, rhs_list: Sequence) -> List[SolveReport]:

@@ -1,0 +1,50 @@
+"""repro.obs — solver observability: metrics, tracing, regression tracking.
+
+Four layers (ISSUE 7):
+
+* ``metrics``        process-local ``MetricsRegistry`` (counters, gauges,
+                     solver-scale histograms), compile/steady-aware
+                     ``Timer`` spans, JSONL + Prometheus exporters;
+* ``trace``          ``jax.named_scope`` spans on every kernel family and
+                     V-cycle stage, plus the opt-in device-side
+                     ``CycleTally`` counter carry — both trace-time
+                     no-ops under ``REPRO_OBS=off`` (zero jaxpr residue);
+* ``model``          the analytic HBM-traffic / dist-comm byte models
+                     (moved from ``benchmarks/common``) the live counters
+                     are validated against;
+* ``server_metrics`` end-to-end ``AMGSolveServer`` instrumentation
+                     (queue wait, solve wall, padding efficiency, health
+                     statuses) behind ``server.metrics()``/``snapshot()``;
+* ``bench``          the schema-versioned ``BENCH_*.json`` regression
+                     tracker wrapping ``benchmarks/run.py``.
+
+Knob: ``REPRO_OBS=off|spans|counters`` (default off), resolved by
+``repro.kernels.backend.resolve_obs`` at trace time.
+"""
+from repro.obs.metrics import (          # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    Timer,
+    default_registry,
+    parse_prometheus,
+)
+from repro.obs.server_metrics import ServerMetrics   # noqa: F401
+from repro.obs.trace import (            # noqa: F401
+    CycleTally,
+    attach_model_bytes,
+    counters_enabled,
+    describe_tally,
+    span,
+    spans_enabled,
+    use,
+    zero_tally,
+)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "ServerMetrics",
+    "Timer", "default_registry", "parse_prometheus", "CycleTally",
+    "attach_model_bytes", "counters_enabled", "describe_tally", "span",
+    "spans_enabled", "use", "zero_tally",
+]

@@ -1,0 +1,237 @@
+"""Benchmark regression tracker: schema-versioned results + baseline diff.
+
+Wraps the paper-table benchmark driver (``benchmarks/run.py``) in a
+machine-readable envelope: every table run lands in its own
+``BENCH_<table>.json`` carrying the rows the table printed **plus** the
+header a later reader needs to interpret them — schema version, machine
+and platform, JAX version, active backend, ``PrecisionPolicy``, git
+revision and timestamp.  ``compare_baseline`` diffs two such result
+directories row by row and flags timing regressions beyond a threshold,
+which is what the nightly CI job fails on.
+
+The committed reference lives in ``benchmarks/baselines/`` (quick-mode
+numbers from the machine that produced them; CI compares with a lenient
+threshold because container-to-container variance is real).
+
+CLI (run from the repo root so ``benchmarks`` imports)::
+
+    PYTHONPATH=src python -m repro.obs.bench run --out bench_out --quick
+    PYTHONPATH=src python -m repro.obs.bench compare \
+        --baseline benchmarks/baselines --current bench_out --threshold 0.5
+    PYTHONPATH=src python -m repro.obs.bench update-baseline --quick
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+import subprocess
+import sys
+import time
+from typing import Dict, List, Optional
+
+SCHEMA_VERSION = 1
+
+#: Per-table quick-mode kwargs: the same code paths at CI-sized problems.
+TABLES: Dict[str, dict] = {
+    "table1_weak_scaling": {"ladder": (5, 6)},
+    "table2_backends": {"m": 6},
+    "table3_ptap_ablation": {"m": 6},
+    "table4_nnz_row": {"sizes": ((1, 6), (2, 4))},
+    "table5_traffic": {"ladder": (5, 6)},
+    "table6_multirhs": {"m": 5, "ks": (1, 2, 4)},
+    "table7_assembly": {"m": 5},
+}
+
+DEFAULT_BASELINE_DIR = os.path.join("benchmarks", "baselines")
+
+
+def git_rev() -> str:
+    """Current commit hash, or "unknown" outside a work tree."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, check=True).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def result_header() -> dict:
+    """The context every ``BENCH_*.json`` must carry to be comparable."""
+    import jax
+    from repro.kernels.backend import backend, resolve_precision
+    policy = resolve_precision(None)
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "git_rev": git_rev(),
+        "timestamp": time.time(),
+        "machine": platform.node(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "jax_version": jax.__version__,
+        "backend": backend(),
+        "precision_policy": {
+            "describe": policy.describe(),
+            "krylov_dtype": str(policy.krylov_dtype),
+            "hierarchy_dtype": str(policy.hierarchy_dtype),
+            "smoother_dtype": str(policy.smoother_dtype),
+            "accum_dtype": str(policy.accum_dtype),
+        },
+    }
+
+
+def run_tables(out_dir: str, quick: bool = False,
+               tables: Optional[List[str]] = None) -> List[str]:
+    """Run the requested table benchmarks, one ``BENCH_<table>.json`` each.
+
+    Rows are captured through ``benchmarks.common.recording`` (the same
+    ``emit`` lines the CSV run prints).  A table that *raises* still
+    produces a result file, with ``"error"`` set — a nightly must be able
+    to tell "regressed" from "did not run".  Returns the written paths.
+    """
+    import importlib
+    from benchmarks import common as bench_common
+
+    names = list(TABLES) if tables is None else list(tables)
+    unknown = [n for n in names if n not in TABLES]
+    if unknown:
+        raise ValueError(f"unknown benchmark tables {unknown}: "
+                         f"expected names from {sorted(TABLES)}")
+    os.makedirs(out_dir, exist_ok=True)
+    header = result_header()
+    header["quick"] = bool(quick)
+    paths = []
+    for name in names:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        kwargs = TABLES[name] if quick else {}
+        error = None
+        t0 = time.perf_counter()
+        with bench_common.recording() as rows:
+            try:
+                mod.run(**kwargs)
+            except Exception as e:  # keep the run alive; record the loss
+                error = f"{type(e).__name__}: {e}"
+        doc = {
+            "table": name,
+            "header": header,
+            "wall_seconds": time.perf_counter() - t0,
+            "rows": [{"name": n, "us": us, "derived": d}
+                     for n, us, d in rows],
+            "error": error,
+        }
+        path = os.path.join(out_dir, f"BENCH_{name}.json")
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        paths.append(path)
+        print(f"[bench] wrote {path} ({len(doc['rows'])} rows"
+              + (f", ERROR: {error}" if error else "") + ")", flush=True)
+    return paths
+
+
+def _load_results(directory: str) -> Dict[str, dict]:
+    out = {}
+    for fn in sorted(os.listdir(directory)):
+        if fn.startswith("BENCH_") and fn.endswith(".json"):
+            with open(os.path.join(directory, fn)) as f:
+                doc = json.load(f)
+            out[doc["table"]] = doc
+    if not out:
+        raise FileNotFoundError(f"no BENCH_*.json results in {directory!r}")
+    return out
+
+
+def compare_baseline(current_dir: str,
+                     baseline_dir: str = DEFAULT_BASELINE_DIR,
+                     threshold: float = 0.15,
+                     min_us: float = 200.0) -> List[dict]:
+    """Row-by-row timing diff of two result directories.
+
+    A row regresses when ``current > baseline * (1 + threshold)`` and the
+    baseline is above the ``min_us`` noise floor (sub-floor rows are
+    dispatch-overhead-dominated and flap).  Rows are matched by name
+    within each table; a row or table missing from ``current`` is itself
+    reported (a silently vanished benchmark must not read as "no
+    regressions"), as is a table that recorded an ``error``.  Returns the
+    list of findings (empty = clean); raising is the CLI's job.
+    """
+    base = _load_results(baseline_dir)
+    cur = _load_results(current_dir)
+    findings: List[dict] = []
+    for table, bdoc in sorted(base.items()):
+        cdoc = cur.get(table)
+        if cdoc is None:
+            findings.append({"table": table, "kind": "missing_table"})
+            continue
+        if cdoc.get("error"):
+            findings.append({"table": table, "kind": "error",
+                             "error": cdoc["error"]})
+            continue
+        crows = {r["name"]: r for r in cdoc["rows"]}
+        for brow in bdoc["rows"]:
+            crow = crows.get(brow["name"])
+            if crow is None:
+                findings.append({"table": table, "kind": "missing_row",
+                                 "name": brow["name"]})
+                continue
+            b_us, c_us = float(brow["us"]), float(crow["us"])
+            if b_us < min_us:
+                continue
+            if c_us > b_us * (1.0 + threshold):
+                findings.append({
+                    "table": table, "kind": "regression",
+                    "name": brow["name"], "baseline_us": b_us,
+                    "current_us": c_us,
+                    "ratio": c_us / b_us if b_us else float("inf")})
+    return findings
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="repro.obs.bench",
+        description="benchmark regression tracker (BENCH_*.json)")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    runp = sub.add_parser("run", help="run tables, write BENCH_*.json")
+    runp.add_argument("--out", default="bench_out")
+    runp.add_argument("--quick", action="store_true",
+                      help="CI-sized problems (same code paths)")
+    runp.add_argument("--tables", nargs="*", default=None,
+                      metavar="TABLE", help=f"subset of {sorted(TABLES)}")
+
+    cmp_ = sub.add_parser("compare", help="diff results against a baseline")
+    cmp_.add_argument("--current", default="bench_out")
+    cmp_.add_argument("--baseline", default=DEFAULT_BASELINE_DIR)
+    cmp_.add_argument("--threshold", type=float, default=0.15,
+                      help="relative slowdown that counts as a regression")
+    cmp_.add_argument("--min-us", type=float, default=200.0,
+                      help="noise floor: skip rows with baseline below this")
+
+    upd = sub.add_parser("update-baseline",
+                         help="re-run quick tables into the baseline dir")
+    upd.add_argument("--out", default=DEFAULT_BASELINE_DIR)
+    upd.add_argument("--quick", action="store_true", default=True)
+
+    args = ap.parse_args(argv)
+    if args.cmd == "run":
+        run_tables(args.out, quick=args.quick, tables=args.tables)
+        return 0
+    if args.cmd == "update-baseline":
+        run_tables(args.out, quick=True)
+        return 0
+    findings = compare_baseline(args.current, baseline_dir=args.baseline,
+                                threshold=args.threshold,
+                                min_us=args.min_us)
+    for f in findings:
+        print(f"[bench] {json.dumps(f, sort_keys=True)}")
+    if findings:
+        print(f"[bench] {len(findings)} finding(s) vs baseline "
+              f"{args.baseline!r} at threshold {args.threshold:.0%}")
+        return 1
+    print("[bench] no regressions vs baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

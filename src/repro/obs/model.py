@@ -1,0 +1,161 @@
+"""Analytic traffic/communication models (the paper's byte accounting).
+
+Moved here from ``benchmarks/common.py`` (which re-exports them for
+back-compat) so the observability layer can attach modeled bytes to live
+spans and device counters without the solver stack importing the
+benchmark harness: the whole point of ISSUE 7 is that these models are
+finally *validated against live runs* — ``repro.obs.trace`` multiplies
+``vcycle_traffic``'s per-cycle total into the counter carry, and the
+bench tracker reports model-vs-measured side by side.
+
+All models are evaluated exactly (no timing involved): byte counts
+separate value bytes (scale with the hierarchy dtype width — the
+``PrecisionPolicy`` lever) from index bytes (always int32), the two
+halves of the paper's bytes-per-nonzero argument.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def value_itemsize(dtype) -> int:
+    """Bytes per stored value for a dtype / dtype name ('f32' -> 4)."""
+    names = {"f64": 8, "f32": 4, "bf16": 2}
+    if isinstance(dtype, str) and dtype in names:
+        return names[dtype]
+    return int(np.dtype(dtype).itemsize)
+
+
+def _ell_apply_bytes(nbr, kmax, br, bc, itemsize, scalar=False):
+    """Modeled HBM bytes of one blocked-ELL operator apply.
+
+    values  (nbr*kmax) blocks of br*bc values   — scale with itemsize
+    indices one int32 per block — or per *scalar* nnz in scalar storage
+            (the paper's bs^2 index-traffic blowup)
+    vectors x gather at the no-reuse bound (one bc-block per slot blocked,
+            one value per scalar nnz in scalar form) + the y write
+    """
+    values = nbr * kmax * br * bc * itemsize
+    if scalar:
+        indices = nbr * kmax * br * bc * 4
+        x_gather = nbr * kmax * br * bc * itemsize
+    else:
+        indices = nbr * kmax * 4
+        x_gather = nbr * kmax * bc * itemsize
+    y_write = nbr * br * itemsize
+    return values, indices, x_gather + y_write
+
+
+def vcycle_traffic(setupd, itemsize: int = 8, scalar: bool = False) -> dict:
+    """Modeled HBM traffic of one V(degree,degree) cycle at a value width.
+
+    Per level (down + up): ``2*degree + 1`` applications of A (degree
+    smoothing each side + the residual), ``2*degree`` pbjacobi applies of
+    the dinv blocks, one R and one P apply; the coarsest level pays the
+    dense triangular solves.  Returns ``{"value", "index", "vector",
+    "total"}`` bytes so callers can report the value-byte lever (what a
+    reduced-precision hierarchy halves) next to the index-byte lever
+    (what the blocked format sheds) — the two halves of the paper's
+    bytes-per-nonzero argument.
+    """
+    degree = setupd.degree
+    v = ix = vec = 0
+    for ls in setupd.levels:
+        nbr, kmax = ls.a_ell_plan.indices.shape
+        bs = ls.A0.br
+        av, ai, avec = _ell_apply_bytes(nbr, kmax, bs, bs, itemsize, scalar)
+        n_apply = 2 * degree + 1
+        v += n_apply * av
+        ix += n_apply * ai
+        vec += n_apply * avec
+        # pbjacobi: dinv blocks + r read + x update, per smoothing step
+        vec += 2 * degree * 3 * nbr * bs * itemsize
+        v += 2 * degree * nbr * bs * bs * itemsize
+        for t in (ls.p_ell, ls.r_ell):
+            tv, ti, tvec = _ell_apply_bytes(t.nbr, t.kmax, t.br, t.bc,
+                                            itemsize, scalar)
+            v += tv
+            ix += ti
+            vec += tvec
+    nc = setupd.coarse_struct.nbr * setupd.coarse_struct.br
+    v += nc * nc * itemsize          # two triangular solves over the factor
+    vec += 2 * nc * itemsize
+    return {"value": v, "index": ix, "vector": vec,
+            "total": v + ix + vec}
+
+
+def dist_cycle_comm(dg, itemsize: int = 8) -> list:
+    """Per-level, per-rank comm model of one distributed V-cycle.
+
+    The latency-vs-bandwidth accounting behind coarse-level agglomeration
+    (``repro.dist.solver``): every halo-window exchange is one *event*
+    whose ppermutes run concurrently (one alpha of latency) and move
+    ``exchanged_slabs`` messages; an all-gather is one event of
+    ``ceil(log2(ndev))`` alphas (recursive doubling) moving ``ndev - 1``
+    slab-messages.  Per sharded level and cycle: ``2*degree + 1`` operator
+    applies (degree smoothing each side + the residual) plus one R and one
+    P transfer; the sharded coarsest adds the solve-side rhs all-gather.
+    A replicated level is one all-gather event at the switch (the boundary
+    restriction) and *zero* everywhere else — prolongation back across the
+    boundary is communication-free by construction.
+
+    Returns one dict per level (+ the coarsest):
+    ``{level, placement, msgs, latency, halo_bytes, gather_bytes}`` —
+    message count and latency are per rank per cycle, bytes split the
+    neighbor-halo traffic from the all-gather traffic so benchmarks can
+    report both levers separately.
+    """
+    ndev = dg.ndev
+    ag_lat = max(1, math.ceil(math.log2(max(ndev, 2))))
+    degree = dg.degree
+    rows = []
+    ns = len(dg.levels)
+
+    def event_lat(halo):
+        """Alphas of one window exchange: ppermutes overlap (1), an
+        allgather-fallback window is a full collective (ag_lat)."""
+        if not halo.exchanged_slabs:
+            return 0
+        return ag_lat if halo.strategy == "allgather" else 1
+
+    for li, lv in enumerate(dg.levels):
+        n_apply = 2 * degree + 1
+        halo = lv.a_op.halo
+        vec_bytes = halo.cpad * lv.bs * itemsize        # one exchanged slab
+        msgs = n_apply * halo.exchanged_slabs
+        lat = n_apply * event_lat(halo)
+        halo_bytes = msgs * vec_bytes
+        gather_bytes = 0
+        boundary = li == ns - 1 and dg.repl
+        if boundary:
+            # restriction crosses the switch: one all-gather of the fine
+            # residual slabs; prolongation back is free (replicated halo)
+            msgs += ndev - 1
+            lat += ag_lat
+            gather_bytes += (ndev - 1) * lv.rpad * lv.bs * itemsize
+        else:
+            for t in (lv.r_op, lv.p_op):
+                t_halo = t.halo
+                # the windowed operand's slabs: (cpad, bc-block) vectors
+                t_bytes = t_halo.cpad * t.bc * itemsize
+                msgs += t_halo.exchanged_slabs
+                lat += event_lat(t_halo)
+                halo_bytes += t_halo.exchanged_slabs * t_bytes
+        rows.append(dict(level=li, placement="sharded", msgs=msgs,
+                         latency=lat, halo_bytes=halo_bytes,
+                         gather_bytes=gather_bytes))
+    for off, rl in enumerate(dg.repl):
+        rows.append(dict(level=ns + off, placement="replicated", msgs=0,
+                         latency=0, halo_bytes=0, gather_bytes=0))
+    if dg.repl:
+        rows.append(dict(level=dg.n_levels, placement="replicated",
+                         msgs=0, latency=0, halo_bytes=0, gather_bytes=0))
+    else:
+        c = dg.coarse
+        rows.append(dict(level=dg.n_levels, placement="sharded",
+                         msgs=ndev - 1, latency=ag_lat, halo_bytes=0,
+                         gather_bytes=(ndev - 1) * c.rpad * c.bs
+                         * itemsize))
+    return rows

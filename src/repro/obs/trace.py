@@ -1,0 +1,222 @@
+"""Device-resident tracing: named scopes + the solve counter carry.
+
+The device half of the observability layer (ISSUE 7).  Two opt-in
+mechanisms, gated by one knob (``REPRO_OBS``, resolved by
+``repro.kernels.backend.resolve_obs``):
+
+``"spans"``     every kernel family (``block_spmv``, ``block_spmm``,
+                ``pbjacobi``, ``fused_pair_gemm``, the pair/seg SpGEMM
+                stages) and every V-cycle stage
+                (``vcycle/level{i}/smooth|restrict|prolong``, ``coarse``)
+                runs inside a ``jax.named_scope`` + profiler
+                ``TraceAnnotation``, so a ``jax.profiler.trace`` capture
+                reads as a legible per-level timeline instead of a wall
+                of fused HLO.  Scopes are metadata only: the lowered
+                computation is numerically identical, pinned bitwise by
+                ``tests/test_obs.py``.
+
+``"counters"``  spans *plus* a device-side ``CycleTally`` threaded
+                through the ``pcg``/``block_pcg``/``vcycle`` carries:
+                per-level visit counts, smoother applications, coarse
+                solves, operator/preconditioner applications, and the
+                modeled HBM bytes of the cycle
+                (``repro.obs.model.vcycle_traffic``) multiplied in — so
+                a converged ``CGResult.counters`` states exactly what the
+                solve did and what it should have cost.
+
+``"off"``       (default) both mechanisms vanish **at trace time**: the
+                ``span`` helper returns a null context and no tally is
+                threaded, so the jaxpr carries zero residue and nothing
+                retraces — the same contract ``repro.robust.inject``
+                pins for the fault hooks.
+
+Mode is read at *trace* time (like the kernel-path knobs): programs
+jitted while the mode was ``off`` keep their clean traces even if the
+mode is flipped later — set ``REPRO_OBS`` (or enter ``use(...)``) before
+building the solver under observation.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+MODES = ("off", "spans", "counters")
+
+#: Explicit override (``use`` context manager); ``None`` defers to the
+#: ``REPRO_OBS`` env knob via ``backend.resolve_obs``.
+_MODE: Optional[str] = None
+
+
+def resolve(mode: Optional[str] = None) -> str:
+    """Active observability mode: explicit arg > ``use`` scope > env."""
+    from repro.kernels import backend
+    if mode is not None:
+        return backend.resolve_obs(mode)
+    if _MODE is not None:
+        return _MODE
+    return backend.resolve_obs()
+
+
+def spans_enabled(mode: Optional[str] = None) -> bool:
+    return resolve(mode) in ("spans", "counters")
+
+
+def counters_enabled(mode: Optional[str] = None) -> bool:
+    return resolve(mode) == "counters"
+
+
+@contextlib.contextmanager
+def use(mode: str):
+    """Scoped mode override (tests and ad-hoc profiling runs).
+
+    Only affects programs *traced* inside the scope — a closure jitted
+    before entry keeps its cached trace, mirroring ``inject.active``.
+    """
+    from repro.kernels import backend
+    global _MODE
+    prev = _MODE
+    _MODE = backend.resolve_obs(mode)
+    try:
+        yield
+    finally:
+        _MODE = prev
+
+
+def span(name: str, mode: Optional[str] = None):
+    """Named scope around one solver stage (trace-time no-op when off).
+
+    Inside a traced program this nests the stage under ``name`` in the
+    XLA metadata/name stack, which is what ``jax.profiler`` renders as
+    the per-level timeline; outside a trace it additionally opens a
+    profiler ``TraceAnnotation`` so eager stages show up too.  With the
+    mode off it returns a null context — zero jaxpr residue, nothing to
+    retrace.
+    """
+    if not spans_enabled(mode):
+        return contextlib.nullcontext()
+    ctx = contextlib.ExitStack()
+    ctx.enter_context(jax.named_scope(name))
+    try:
+        ctx.enter_context(jax.profiler.TraceAnnotation(name))
+    except Exception:  # pragma: no cover - profiler backend missing
+        pass
+    return ctx
+
+
+# ---------------------------------------------------------------------------
+# Device-side counter carry
+# ---------------------------------------------------------------------------
+
+class CycleTally(NamedTuple):
+    """Device-side solve counters, threaded through the Krylov carries.
+
+    All int32 except ``modeled_bytes``; per-level arrays are indexed by
+    hierarchy level (0 = finest).  Lives inside the jitted programs as
+    ordinary carry state — reading it costs one host transfer *after*
+    the solve, never a sync inside the loop.
+    """
+
+    level_visits: Array      # (n_levels,) down-leg visits per level
+    smoother_applies: Array  # (n_levels,) smoother calls (pre + post)
+    coarse_solves: Array     # ()  direct coarse solves
+    operator_applies: Array  # ()  fine-operator applications (Krylov)
+    precond_applies: Array   # ()  V-cycle invocations
+    modeled_bytes: Array     # ()  modeled HBM bytes (vcycle_traffic model)
+
+
+def zero_tally(n_levels: int) -> CycleTally:
+    """Fresh all-zero tally for an ``n_levels``-deep hierarchy (the count
+    includes the coarse level; per-level arrays cover the smoothed ones)."""
+    nl = max(int(n_levels) - 1, 0)
+    z = jnp.zeros((), jnp.int32)
+    return CycleTally(level_visits=jnp.zeros((nl,), jnp.int32),
+                      smoother_applies=jnp.zeros((nl,), jnp.int32),
+                      coarse_solves=z, operator_applies=z,
+                      precond_applies=z,
+                      modeled_bytes=jnp.zeros((), jnp.float64)
+                      if jax.config.jax_enable_x64
+                      else jnp.zeros((), jnp.float32))
+
+
+def attach_model_bytes(tally: CycleTally, cycle_bytes: float) -> CycleTally:
+    """Fill ``modeled_bytes`` = preconditioner applications x the modeled
+    per-cycle traffic (``repro.obs.model.vcycle_traffic(...)["total"]``).
+    Pure and jittable — the gamg solve closures call it on exit."""
+    total = tally.precond_applies.astype(tally.modeled_bytes.dtype) \
+        * cycle_bytes
+    return tally._replace(modeled_bytes=total)
+
+
+def describe_tally(tally: CycleTally) -> str:
+    """One human line (host-side; forces the transfer)."""
+    import numpy as np
+    lv = np.asarray(tally.level_visits)
+    sm = np.asarray(tally.smoother_applies)
+    return (f"precond={int(tally.precond_applies)} "
+            f"op={int(tally.operator_applies)} "
+            f"coarse={int(tally.coarse_solves)} "
+            f"level_visits={lv.tolist()} smoother={sm.tolist()} "
+            f"modeled_MB={float(tally.modeled_bytes) / 1e6:.2f}")
+
+
+# ---------------------------------------------------------------------------
+# Host-side spans for the distributed path
+# ---------------------------------------------------------------------------
+
+@contextlib.contextmanager
+def rank0_span(name: str, registry=None):
+    """Host-side timing span emitted only on process rank 0.
+
+    The dist solvers run inside ``shard_map`` where per-rank host work
+    would desynchronize collectives; this span therefore wraps the
+    *call site* (staging, the jitted shard_map invocation) on the host,
+    and only rank 0 records — every other process runs the identical
+    code path with recording skipped, so multi-process runs stay
+    collective-safe by construction.  Always yields a ``stop(out)``
+    callable that blocks on device output before the clock stops.
+    """
+    emit = jax.process_index() == 0 and spans_enabled()
+    state = {"out": None}
+
+    def stop(out):
+        state["out"] = out
+        return out
+
+    t0 = time.perf_counter()
+    try:
+        yield stop
+    finally:
+        if emit:
+            from repro.obs.metrics import block_ready, default_registry
+            if state["out"] is not None:
+                block_ready(state["out"])
+            dt = time.perf_counter() - t0
+            reg = registry if registry is not None else default_registry()
+            reg.histogram(f"{name}/seconds",
+                          help="rank-0 host span").observe(dt)
+
+
+def wrap_threaded_precond(apply_m: Callable, precond_dtype,
+                          outer_dtype) -> Callable:
+    """Tally-threaded twin of ``repro.core.krylov.wrap_precond``:
+    ``apply_m`` has signature ``(r, tally) -> (z, tally)`` and the
+    mixed-precision boundary casts around it exactly like the untallied
+    wrapper (bitwise no-op when the dtypes already agree)."""
+    if precond_dtype is None:
+        return apply_m
+    pd = jnp.dtype(precond_dtype)
+    outer = jnp.dtype(outer_dtype)
+    if pd == outer:
+        return apply_m
+
+    def wrapped(r, tally):
+        z, tally = apply_m(r.astype(pd), tally)
+        return z.astype(outer), tally
+
+    return wrapped
