@@ -88,6 +88,23 @@ def run(m: int = 10) -> None:
     emit(f"t3.ptap.ungated.m{m}", us_ungated,
          f"gate_speedup={us_ungated/us_gated:.2f}x")
 
+    # autotuned vs default kernel tiling (PR 8): sweep the level-0 SpMV
+    # signature in-process (no cache write — the nightly baseline must not
+    # depend on ~/.cache state) and report the winner next to the static
+    # default's time.  On interpret-mode CPU the spread is modest; on TPU
+    # the same sweep keys the winner per machine/backend.
+    from repro.kernels import autotune
+    ell0 = setupd.levels[0].A0.to_ell()
+    sig = dict(br=ell0.br, bc=ell0.bc, kmax=ell0.kmax,
+               dtype=str(ell0.data.dtype))
+    swept = autotune.sweep("block_spmv", sig, nbr=min(ell0.nbr, 512),
+                           repeats=3, interpret=True, record_winner=False)
+    us_default = swept["table"]["tile_rows=8"]  # the static default
+    emit(f"t3.autotune.block_spmv.m{m}", swept["best_us"],
+         f"tuned={swept['params']};default_us={us_default:.1f};"
+         f"speedup_vs_default={us_default/max(swept['best_us'],1e-9):.2f}x;"
+         f"sig={autotune.entry_key('block_spmv', sig)}")
+
     # distributed off-process reduction: report bytes from the AMG dry-run
     path = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "launch_artifacts",

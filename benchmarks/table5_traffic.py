@@ -28,6 +28,7 @@ from repro.core.scalar_csr import expand_bcsr
 from repro.fem.assemble import assemble_elasticity
 
 from benchmarks.common import emit, value_itemsize, vcycle_traffic
+from repro.obs.model import hierarchy_storage_bytes
 
 
 def run(ladder=(6, 8, 10)) -> None:
@@ -88,6 +89,28 @@ def run(ladder=(6, 8, 10)) -> None:
              f"value={ts['value']};index={ts['index']};"
              f"total={ts['total']};"
              f"index_ratio_vs_block={ts['index']/t64['index']:.1f}x")
+
+        # transpose-free restriction (PR 8): the setup above is the
+        # transpose-free default; a stored-R setup duplicates the
+        # prolongator payload.  Report both the per-cycle traffic delta
+        # (restriction stops charging a second value+index stream) and
+        # the resident hierarchy storage (transfer side roughly halves).
+        setupd_st = gamg.setup(prob.A, prob.B, coarse_size=30,
+                               restriction="stored")
+        t_st = vcycle_traffic(setupd_st, itemsize=value_itemsize("f64"))
+        assert t64["total"] < t_st["total"], (t64, t_st)
+        emit(f"t5.restriction_traffic.m{m}", 0.0,
+             f"transpose_free={t64['total']};stored={t_st['total']};"
+             f"saved={t_st['total']-t64['total']};"
+             f"ratio={t_st['total']/t64['total']:.3f}x")
+        s_tf = hierarchy_storage_bytes(setupd)
+        s_st = hierarchy_storage_bytes(setupd_st)
+        assert s_tf["transfer"] < s_st["transfer"]
+        emit(f"t5.hierarchy_storage.m{m}", 0.0,
+             f"transfer_free={s_tf['transfer']};"
+             f"transfer_stored={s_st['transfer']};"
+             f"transfer_ratio={s_st['transfer']/s_tf['transfer']:.2f}x;"
+             f"total_free={s_tf['total']};total_stored={s_st['total']}")
         per_unknown.append((n, s_bytes / n, b_bytes / n))
 
         # blocked COO assembly plan vs scalar equivalent (Sec. 5)

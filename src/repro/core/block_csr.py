@@ -328,6 +328,72 @@ def transpose_bcsr(A: BlockCSR) -> BlockCSR:
     return BlockCSR.from_arrays(t_indptr, t_indices, t_data, A.nbr)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EllTransposePlan:
+    """Build-time plan for applying ``A^T`` straight off A's ELL blocks.
+
+    The transpose-free restriction (``repro.core.spmv.apply_ell_t``): each
+    output block row ``c`` lists the ELL *slots* of A holding a block in
+    column ``c``, so the apply gathers from ``A``'s own ``(nbr, kmax, br,
+    bc)`` payload, transposing block-local on register — no duplicated
+    ``r_ell`` values or indices ever stored.  Slot order per output row
+    matches ``transpose_structure``'s (fine rows ascending), so the
+    summation order equals the stored-``r_ell`` apply's.
+
+    Like ``BlockELL``, the index arrays are traced pytree leaves (constants
+    inside jitted solves); ``nbr`` — A's block-row count, needed to fold
+    the input vector into blocks — is static aux data.
+    """
+
+    rows: Array     # (nbc, tkmax) int32 — A's block row per slot, pad -> 0
+    gather: Array   # (nbc, tkmax) int32 — flattened (nbr*kmax) ELL slots
+    mask: Array     # (nbc, tkmax) bool — False on padded slots
+    nbr: int        # block rows of the underlying A
+
+    @property
+    def nbc(self) -> int:
+        return int(self.rows.shape[0])
+
+    @property
+    def tkmax(self) -> int:
+        return int(self.rows.shape[1])
+
+    def tree_flatten(self):
+        return (self.rows, self.gather, self.mask), (self.nbr,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], children[2], aux[0])
+
+
+def transpose_apply_plan(A: BlockCSR, kmax: int) -> EllTransposePlan:
+    """Host symbolic phase of the transpose-free ``A^T`` apply.
+
+    ``kmax`` is the slot width of A's ELL form (``A.to_ell().kmax``); the
+    ELL slot of BCSR nonzero ``j`` is ``row(j) * kmax + within-row(j)``,
+    which is what ``gather`` indexes after flattening A's ELL payload.
+    """
+    counts = np.diff(A.indptr)
+    for_r = np.repeat(np.arange(A.nbr), counts)
+    within = np.arange(A.nnzb) - np.repeat(A.indptr[:-1], counts)
+    slot = for_r * kmax + within
+    t_indptr, t_rows, perm = transpose_structure(A.indptr, A.indices, A.nbc)
+    t_counts = np.diff(t_indptr)
+    tkmax = max(int(t_counts.max()) if len(t_counts) else 0, 1)
+    rows = np.zeros((A.nbc, tkmax), dtype=np.int32)
+    gather = np.zeros((A.nbc, tkmax), dtype=np.int32)
+    mask = np.zeros((A.nbc, tkmax), dtype=bool)
+    out_r = np.repeat(np.arange(A.nbc), t_counts)
+    out_w = np.arange(A.nnzb) - np.repeat(t_indptr[:-1], t_counts)
+    rows[out_r, out_w] = t_rows
+    gather[out_r, out_w] = slot[perm]
+    mask[out_r, out_w] = True
+    return EllTransposePlan(rows=jnp.asarray(rows),
+                            gather=jnp.asarray(gather),
+                            mask=jnp.asarray(mask), nbr=A.nbr)
+
+
 @partial(jax.jit, static_argnames=("nbr", "br", "bc"))
 def _zeros_blocks(nbr: int, br: int, bc: int, dtype) -> Array:
     return jnp.zeros((nbr, br, bc), dtype)

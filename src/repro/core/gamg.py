@@ -35,7 +35,12 @@ from repro.core.aggregation import (
     greedy_aggregate,
     mis_aggregate_device,
 )
-from repro.core.block_csr import BlockCSR, ELLPlan, transpose_bcsr
+from repro.core.block_csr import (
+    BlockCSR,
+    ELLPlan,
+    transpose_apply_plan,
+    transpose_bcsr,
+)
 from repro.core.ptap import PtAPCache, ptap_numeric_data, ptap_symbolic
 from repro.core.smooth import (
     invert_diag_blocks,
@@ -56,19 +61,36 @@ Array = jax.Array
 
 @dataclasses.dataclass
 class LevelSetup:
-    """Cold, host-side symbolic data for one level (structure + plans)."""
+    """Cold, host-side symbolic data for one level (structure + plans).
+
+    Under the transpose-free default (``setup(restriction=
+    "transpose_free")``) ``R``/``r_ell`` are ``None`` and ``pt`` carries
+    the build-time ``P^T``-apply plan instead: the hot path restricts
+    straight off ``p_ell``'s blocks and the hierarchy never stores the
+    transposed duplicate.  Cold consumers that genuinely need the stored
+    form (the scalar baseline's expansion, the dist sharded staging) go
+    through ``restriction_bcsr``.
+    """
 
     A0: BlockCSR            # level operator at setup time
     P: BlockCSR             # smoothed prolongator (values fixed on reuse)
-    R: BlockCSR             # cached transpose (prolongator-side cache)
+    R: "BlockCSR | None"    # stored transpose (restriction="stored" only)
     ptap_cache: PtAPCache
     a_ell_plan: ELLPlan
     p_ell: "object"         # BlockELL (fixed values)
-    r_ell: "object"
+    r_ell: "object"         # BlockELL or None (transpose-free default)
     aggr: Aggregation
     omega: Array
     n_fine: int
     n_coarse: int
+    pt: "object" = None     # EllTransposePlan (transpose-free default)
+
+
+def restriction_bcsr(ls: LevelSetup) -> BlockCSR:
+    """The stored-form restriction of a level, computing the transpose on
+    demand when the setup is transpose-free (cold consumers only — the hot
+    path restricts via ``vcycle.apply_restriction`` without it)."""
+    return ls.R if ls.R is not None else transpose_bcsr(ls.P)
 
 
 @dataclasses.dataclass
@@ -99,6 +121,7 @@ def setup(A: BlockCSR, B: Array, *, theta: float = 0.08,
           max_levels: int = 10, coarse_size: int = 100,
           smoother: str = "chebyshev", degree: int = 2,
           coarsener: str = "mis", precision=None,
+          restriction: str = "transpose_free",
           coarse_eq_limit: "int | None" = None) -> GAMGSetup:
     """Cold GAMG setup on the block format (no scalar expansion anywhere).
 
@@ -114,6 +137,14 @@ def setup(A: BlockCSR, B: Array, *, theta: float = 0.08,
     smoothing) always runs at the operator dtype; the policy governs what
     ``recompute`` builds and what the solves run at.
 
+    ``restriction`` selects how ``P^T`` is applied in the V-cycle:
+    ``"transpose_free"`` (default) stores no restriction at all — a
+    build-time ``EllTransposePlan`` lets the hot path restrict straight
+    off ``p_ell``'s blocks, roughly halving prolongator-side hierarchy
+    memory and shedding the setup transpose; ``"stored"`` keeps the legacy
+    explicit ``R = transpose_bcsr(P)`` / ``r_ell`` (bitwise the
+    pre-transpose-free behaviour).
+
     ``coarse_eq_limit`` is the distributed placement hint (equations per
     rank at or below which a level is agglomerated, PETSc's
     ``-pc_gamg_process_eq_limit``); the single-device path ignores it and
@@ -122,6 +153,10 @@ def setup(A: BlockCSR, B: Array, *, theta: float = 0.08,
     from repro.kernels.backend import resolve_precision
     precision = resolve_precision(precision)
     assert A.br == A.bc, "system operator must have square blocks"
+    if restriction not in ("transpose_free", "stored"):
+        raise ValueError(
+            f"invalid restriction mode {restriction!r}: expected "
+            f"'transpose_free' or 'stored'")
     levels: List[LevelSetup] = []
     Acur, Bcur = A, jnp.asarray(B)
     nns = int(Bcur.shape[1])
@@ -149,11 +184,18 @@ def setup(A: BlockCSR, B: Array, *, theta: float = 0.08,
         Anext = BlockCSR.from_arrays(cache.ac_plan.indptr,
                                      cache.ac_plan.indices, a_next_data,
                                      cache.n_coarse)
-        R = transpose_bcsr(P)
+        p_ell = P.to_ell()
+        if restriction == "stored":
+            R = transpose_bcsr(P)
+            r_ell, pt = R.to_ell(), None
+        else:
+            R, r_ell = None, None
+            pt = transpose_apply_plan(P, p_ell.kmax)
         levels.append(LevelSetup(
             A0=Acur, P=P, R=R, ptap_cache=cache,
-            a_ell_plan=Acur.ell_plan(), p_ell=P.to_ell(), r_ell=R.to_ell(),
-            aggr=aggr, omega=omega, n_fine=Acur.nbr, n_coarse=aggr.n_agg))
+            a_ell_plan=Acur.ell_plan(), p_ell=p_ell, r_ell=r_ell,
+            aggr=aggr, omega=omega, n_fine=Acur.nbr, n_coarse=aggr.n_agg,
+            pt=pt))
         stats["level_rows"].append(Anext.nbr * Anext.br)
         stats["level_nnzb"].append(Anext.nnzb)
         stats["level_bs"].append(Anext.br)
@@ -216,8 +258,9 @@ def level_state(ls: LevelSetup, a_data: Array,
                            preferred_element_type=acc).astype(h)
     lam = lambda_max_dinv_a(a_ell.indices, dinva_ell, a_ell.mask,
                             A.nbr, A.br)
+    r_ell = ls.r_ell.astype(h) if ls.r_ell is not None else None
     return LevelState(a_ell=a_ell, p_ell=ls.p_ell.astype(h),
-                      r_ell=ls.r_ell.astype(h), dinv=dinv, lam_max=lam)
+                      r_ell=r_ell, dinv=dinv, lam_max=lam, p_t=ls.pt)
 
 
 def jittered_cholesky(densef: Array, base_scale: float,

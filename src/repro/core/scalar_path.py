@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.block_csr import BlockCSR
-from repro.core.gamg import GAMGSetup, level_state
+from repro.core.gamg import GAMGSetup, level_state, restriction_bcsr
 from repro.core.ptap import ptap_numeric_data
 from repro.core.scalar_csr import expand_bcsr
 from repro.core.vcycle import Hierarchy, LevelState
@@ -106,7 +106,10 @@ def recompute_scalar(setupd: GAMGSetup, a_fine_data: Array) -> Hierarchy:
         A = ls.A0.with_data(a_data)
         a_ell = expand_bcsr(A).to_ell()
         p_ell = expand_bcsr(ls.P).to_ell().astype(h)
-        r_ell = expand_bcsr(ls.R).to_ell().astype(h)
+        # scalar CSR cannot reuse P's blocks transposed-on-register, so the
+        # baseline keeps an expanded stored restriction regardless of the
+        # setup's restriction mode
+        r_ell = expand_bcsr(restriction_bcsr(ls)).to_ell().astype(h)
         states.append(LevelState(a_ell=a_ell, p_ell=p_ell, r_ell=r_ell,
                                  dinv=blocked.dinv, lam_max=blocked.lam_max))
         a_data = ptap_numeric_data(ls.ptap_cache, a_data,

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.block_csr import BlockCSR, BlockELL
+from repro.core.block_csr import BlockCSR, BlockELL, EllTransposePlan
 from repro.obs import trace as obs_trace
 
 Array = jax.Array
@@ -58,6 +58,28 @@ def spmm_ell(ell: BlockELL, X: Array) -> Array:
         return y.reshape(ell.nbr * br, m)
 
 
+@jax.jit
+def apply_ell_t(ell: BlockELL, pt: EllTransposePlan, x: Array) -> Array:
+    """y = A^T @ x straight off A's ELL blocks (transpose-free restriction).
+
+    ``pt`` (``repro.core.block_csr.transpose_apply_plan``) addresses A's own
+    flattened ``(nbr*kmax, br, bc)`` payload, so the restriction reuses the
+    prolongator's value stream byte-for-byte — the stored ``r_ell``
+    duplicate is gone from the hierarchy.  Padded plan slots point at slot
+    0 (a real block) and are zeroed by the mask.  Panel-polymorphic like
+    ``apply_ell``: ``x`` is ``(nbr*br,)`` or ``(nbr*br, k)``.
+    """
+    with obs_trace.span("apply_ell_t"):
+        nbr, kmax, br, bc = ell.data.shape
+        blocks = ell.data.reshape(nbr * kmax, br, bc)[pt.gather]
+        blocks = jnp.where(pt.mask[..., None, None], blocks, 0)
+        xb = x.reshape((nbr, br) + x.shape[1:])
+        xg = xb[pt.rows]                        # (nbc, tkmax, br[, k])
+        y = jnp.einsum("ckab,cka...->cb...", blocks, xg,
+                       preferred_element_type=ell.data.dtype)
+        return y.reshape((ell.nbc * bc,) + x.shape[1:])
+
+
 def apply_ell(ell: BlockELL, x: Array) -> Array:
     """Shape-polymorphic ELL apply: (n,) -> spmv_ell, (n, k) -> panel SpMM.
 
@@ -88,12 +110,15 @@ def spmv_bcsr_ref(A: BlockCSR, x: Array) -> Array:
 
 
 def spmv(A, x: Array, *, use_kernel: bool | None = None,
-         interpret: bool | None = None, accum_dtype=None) -> Array:
+         interpret: bool | None = None, tile_rows: int | None = None,
+         accum_dtype=None) -> Array:
     """Front door: accepts BlockCSR (converts) or BlockELL.
 
     ``use_kernel=None`` / ``interpret=None`` resolve per backend: the Pallas
     kernel compiled natively on TPU, the jnp reference elsewhere (see
-    ``repro.kernels.backend``).  ``accum_dtype`` threads the kernel
+    ``repro.kernels.backend``).  ``tile_rows=None`` resolves through the
+    autotuner (``repro.kernels.autotune``, governed by ``REPRO_TUNE``) with
+    the static default as fallback.  ``accum_dtype`` threads the kernel
     accumulator rule (None = native; the jnp reference path accumulates
     natively and low-precision callers should use the kernel path).
     """
@@ -103,18 +128,20 @@ def spmv(A, x: Array, *, use_kernel: bool | None = None,
         from repro.kernels.block_spmv import ops as _k
         return _k.block_spmv(ell, x,
                              interpret=_backend.resolve_interpret(interpret),
-                             accum_dtype=accum_dtype)
+                             tile_rows=tile_rows, accum_dtype=accum_dtype)
     return spmv_ell(ell, x)
 
 
 def spmm(A, X: Array, *, path: str | None = None,
-         interpret: bool | None = None, accum_dtype=None) -> Array:
+         interpret: bool | None = None, tile_rows: int | None = None,
+         accum_dtype=None) -> Array:
     """Multi-RHS front door: Y = A @ X, X: (n, k), A BlockCSR or BlockELL.
 
     ``path=None`` resolves per backend (``repro.kernels.backend
     .resolve_spmm_path``): the Pallas panel kernel where it compiles
     natively (TPU), the jnp reference elsewhere; ``REPRO_SPMM_PATH``
-    forces it globally.  ``accum_dtype`` threads the kernel accumulator
+    forces it globally.  ``tile_rows=None`` resolves through the autotuner
+    (``REPRO_TUNE``); ``accum_dtype`` threads the kernel accumulator
     (None = native).
     """
     from repro.kernels import backend as _backend
@@ -123,7 +150,7 @@ def spmm(A, X: Array, *, path: str | None = None,
         from repro.kernels.block_spmm import ops as _k
         return _k.block_spmm(ell, X,
                              interpret=_backend.resolve_interpret(interpret),
-                             accum_dtype=accum_dtype)
+                             tile_rows=tile_rows, accum_dtype=accum_dtype)
     return spmm_ell(ell, X)
 
 

@@ -16,8 +16,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.block_csr import BlockELL
-from repro.core.spmv import apply_ell
+from repro.core.block_csr import BlockELL, EllTransposePlan
+from repro.core.spmv import apply_ell, apply_ell_t
 from repro.obs import trace as obs_trace
 from repro.robust import inject
 
@@ -27,17 +27,26 @@ Array = jax.Array
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class LevelState:
-    """Numeric per-level state (pytree).  Structure lives in the specs."""
+    """Numeric per-level state (pytree).  Structure lives in the specs.
+
+    Restriction is stored one of two ways (``apply_restriction`` picks):
+    ``p_t`` — the transpose-free default — applies ``P^T`` straight off
+    ``p_ell``'s blocks via the build-time plan, so the prolongator-side
+    payload exists once; ``r_ell`` is the legacy explicit ``P^T`` copy
+    (``gamg.setup(restriction="stored")``), kept for the scalar baseline
+    and bitwise comparisons.
+    """
 
     a_ell: BlockELL       # level operator (bs x bs blocks)
     p_ell: BlockELL       # prolongator (bs_f x bs_c blocks), fixed values
-    r_ell: BlockELL       # restriction = P^T
+    r_ell: Optional[BlockELL]            # stored restriction = P^T, or None
     dinv: Array           # (nbr, bs, bs) inverted diagonal blocks
     lam_max: Array        # chebyshev upper bound for D^{-1}A
+    p_t: Optional[EllTransposePlan] = None   # transpose-free P^T plan
 
     def tree_flatten(self):
         return (self.a_ell, self.p_ell, self.r_ell, self.dinv,
-                self.lam_max), None
+                self.lam_max, self.p_t), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -149,13 +158,80 @@ def pbjacobi_smooth(lv: LevelState, b: Array, x: Array,
                                b, x, its, omega)
 
 
-def apply_smoother(lv, b, x, smoother: str, degree: int):
+def _fused_step(lv: LevelState, b: Array, x: Array, d: Array, c1, c2):
+    """One fused recurrence step ``d' = c1*d + c2*D^{-1}(b - A x);
+    x' = x + d'`` through the single-pass Pallas kernel."""
+    from repro.kernels import backend as _backend
+    from repro.kernels.fused_smoother import ops as _fs
+    return _fs.smoother_step(lv.a_ell, lv.dinv, b, x, d, c1, c2,
+                             interpret=_backend.resolve_interpret(None))
+
+
+def chebyshev_smooth_fused(lv: LevelState, b: Array, x: Array,
+                           degree: int = 2, lo_frac: float = 0.1,
+                           hi_frac: float = 1.05) -> Array:
+    """Chebyshev smoothing with each recurrence step as one fused pass.
+
+    Same recurrence constants as ``chebyshev_recurrence``; the residual is
+    formed fresh from the current iterate inside the kernel (``b - A x``,
+    mathematically identical to the incremental ``r -= A d`` update), so
+    the fused path differs from the unfused one only in rounding.
+    """
+    lo = lo_frac * lv.lam_max
+    hi = hi_frac * lv.lam_max
+    theta = 0.5 * (hi + lo)
+    delta = 0.5 * (hi - lo)
+    sigma = theta / delta
+    rho = 1.0 / sigma
+    x, d = _fused_step(lv, b, x, jnp.zeros_like(b), 0.0, 1.0 / theta)
+    for _ in range(degree - 1):
+        rho_new = 1.0 / (2.0 * sigma - rho)
+        x, d = _fused_step(lv, b, x, d, rho_new * rho,
+                           2.0 * rho_new / delta)
+        rho = rho_new
+    return x
+
+
+def pbjacobi_smooth_fused(lv: LevelState, b: Array, x: Array,
+                          omega: float = 0.6, its: int = 2) -> Array:
+    """Damped point-block Jacobi with each step as one fused pass."""
+    d = jnp.zeros_like(b)
+    for _ in range(its):
+        x, d = _fused_step(lv, b, x, d, 0.0, omega)
+    return x
+
+
+def apply_smoother(lv, b, x, smoother: str, degree: int,
+                   path: str | None = None):
     """Smoother-name dispatch — the single source of truth shared by the
     V-cycle here and the distributed path's replicated (agglomerated)
-    levels, whose exact-parity argument depends on running this verbatim."""
+    levels, whose exact-parity argument depends on running this verbatim.
+
+    ``path`` selects the execution strategy via ``repro.kernels.backend
+    .resolve_smooth_path`` (``REPRO_SMOOTH_PATH``): "fused" runs each
+    recurrence step as one Pallas pass (``repro.kernels.fused_smoother``,
+    TPU default — the ``r``/``z`` intermediates never touch HBM),
+    "reference" the unfused jnp recurrences (CPU default, the bitwise
+    legacy path).  Resolution happens at trace time, like the other knobs.
+    """
+    from repro.kernels.backend import resolve_smooth_path
+    if resolve_smooth_path(path) == "fused":
+        if smoother == "chebyshev":
+            return chebyshev_smooth_fused(lv, b, x, degree=degree)
+        return pbjacobi_smooth_fused(lv, b, x, its=degree)
     if smoother == "chebyshev":
         return chebyshev_smooth(lv, b, x, degree=degree)
     return pbjacobi_smooth(lv, b, x, its=degree)
+
+
+def apply_restriction(lv: LevelState, r: Array) -> Array:
+    """Restrict a fine-level residual: ``P^T r`` via the stored ``r_ell``
+    when the level carries one, else transpose-free off ``p_ell``'s own
+    blocks (``apply_ell_t``).  Shared by the single-device V-cycle and the
+    dist replicated tail — the dispatch is structural (trace-time)."""
+    if lv.r_ell is not None:
+        return apply_ell(lv.r_ell, r)
+    return apply_ell_t(lv.p_ell, lv.p_t, r)
 
 
 def vcycle(hier: Hierarchy, b: Array, smoother: str = "chebyshev",
@@ -198,7 +274,7 @@ def vcycle(hier: Hierarchy, b: Array, smoother: str = "chebyshev",
         # restrict; inject.maybe is a trace-time identity unless a fault
         # schedule is installed (repro.robust.inject)
         with span(f"vcycle/level{li}/restrict"):
-            rhs = inject.maybe("vcycle", apply_ell(lv.r_ell, r), level=li)
+            rhs = inject.maybe("vcycle", apply_restriction(lv, r), level=li)
         if counted:
             tally = tally._replace(
                 level_visits=tally.level_visits.at[li].add(1),

@@ -54,15 +54,16 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec
 
-from repro.core.block_csr import BlockCSR, BlockELL
+from repro.core.block_csr import BlockCSR, BlockELL, EllTransposePlan
 from repro.core.gamg import GAMGSetup, LevelSetup, coarse_cholesky, \
-    jittered_cholesky, level_state
+    jittered_cholesky, level_state, restriction_bcsr
 from repro.core.krylov import wrap_precond
 from repro.core.precision import PrecisionPolicy
 from repro.core.ptap import ptap_numeric_data
-from repro.core.spmv import apply_ell
+from repro.core.spmv import apply_ell, apply_ell_t
 from repro.core.vcycle import (
     LevelState,
+    apply_restriction,
     apply_smoother,
     chebyshev_recurrence,
     pbjacobi_recurrence,
@@ -168,19 +169,23 @@ class DistSwitch:
     (``repro.dist.pamg.build_payload_gather`` / ``build_row_gather``):
     window ids into one ``all_gather`` of the last sharded level's padded
     slabs that reassemble the global Galerkin payload (recompute) and the
-    global fine residual (restriction).  ``r_ell`` is the global
-    restriction applied rank-redundantly after that gather; ``p_b`` is the
-    boundary prolongator — sharded fine rows whose plan indices address
-    the *replicated* coarse correction directly (``"replicated"`` halo,
-    zero traffic).
+    global fine residual (restriction).  The boundary restriction is
+    applied rank-redundantly after that gather — through the stored global
+    ``r_ell`` when the setup carries one, else transpose-free off the
+    global prolongator payload (``p_g`` + the ``p_t`` plan, the default).
+    ``p_b`` is the boundary prolongator — sharded fine rows whose plan
+    indices address the *replicated* coarse correction directly
+    (``"replicated"`` halo, zero traffic).
     """
 
     payload_sel: np.ndarray       # (nnzb,) into gathered stage2 payload slabs
     row_sel: np.ndarray           # (nbr_fine,) into gathered residual slabs
-    r_ell: BlockELL               # global restriction at hierarchy dtype
+    r_ell: Optional[BlockELL]     # stored global restriction, or None
     p_b: DistEll                  # slab rows <- replicated coarse vector
     nbr_c: int                    # replicated coarse vector block rows
     bs_c: int
+    p_g: Optional[BlockELL] = None          # global prolongator payload
+    p_t: Optional[EllTransposePlan] = None  # transpose-free P^T plan
 
 
 @dataclasses.dataclass
@@ -488,6 +493,10 @@ def build_dist_gamg(setupd: GAMGSetup, ndev: int, *,
         rpad = max(fine.max_count, 1)
         row_mask = (np.arange(rpad)[None, :]
                     < fine.counts[:, None])
+        # the slab-sharded restriction slices a stored-form operand into
+        # per-rank slabs; a transpose-free setup computes it here, cold,
+        # at staging (it is never device-resident globally)
+        R_sh = None if boundary else restriction_bcsr(ls)
         # at the switch boundary P/R are replaced by the gather-boundary
         # operators in DistSwitch; don't stage the unused sharded forms
         levels.append(DistLevel(
@@ -495,9 +504,9 @@ def build_dist_gamg(setupd: GAMGSetup, ndev: int, *,
             p_op=None if boundary else
                 build_dist_ell(ls.P, fine, coarse, const_data=p_np),
             r_op=None if boundary else
-                build_dist_ell(ls.R, coarse, fine,
+                build_dist_ell(R_sh, coarse, fine,
                                const_data=np.asarray(
-                                   ls.R.data).astype(h_np)),
+                                   R_sh.data).astype(h_np)),
             stage1=s1, stage2=s2, diag_sel=diag_sel, diag_mask=diag_mask,
             row_mask=row_mask, a_nnz_starts=a_nnz_starts, a_pad=a_pad,
             bs=A0.br, rpad=rpad, n_fine=ls.n_fine))
@@ -514,7 +523,11 @@ def build_dist_gamg(setupd: GAMGSetup, ndev: int, *,
                 first.A0.indptr, parts[n_sharded],
                 levels[-1].stage2.out_pad),
             row_sel=build_row_gather(fine, max(fine.max_count, 1)),
-            r_ell=bls.r_ell.astype(h_np),
+            r_ell=(bls.r_ell.astype(h_np)
+                   if bls.r_ell is not None else None),
+            p_g=(None if bls.r_ell is not None
+                 else bls.p_ell.astype(h_np)),
+            p_t=None if bls.r_ell is not None else bls.pt,
             p_b=build_dist_ell(bls.P, fine, parts[n_sharded],
                                const_data=np.asarray(
                                    bls.P.data).astype(h_np),
@@ -750,7 +763,9 @@ def _boundary_restrict(dg: DistGAMG, r: Array) -> Array:
     g = lax.all_gather(r, AXIS, axis=0, tiled=True)   # (ndev*rpad, bs[, k])
     rg = g[jnp.asarray(sw.row_sel)]                   # (nbr_f, bs[, k])
     flat = rg.reshape((rg.shape[0] * rg.shape[1],) + rg.shape[2:])
-    return apply_ell(sw.r_ell, flat)
+    if sw.r_ell is not None:
+        return apply_ell(sw.r_ell, flat)
+    return apply_ell_t(sw.p_g, sw.p_t, flat)
 
 
 def _boundary_prolong(dg: DistGAMG, a, xc: Array, accum=None) -> Array:
@@ -806,7 +821,7 @@ def _rank_vcycle(dg: DistGAMG, args, states, chol: Array, b: Array) -> Array:
             r = rhs - apply_ell(st.a_ell, x)
             bs_stack.append(rhs)
             x_stack.append(x)
-            rhs = apply_ell(st.r_ell, r)
+            rhs = apply_restriction(st, r)
         xc = jax.scipy.linalg.cho_solve((chol, True), rhs)
         for li in reversed(range(ns, ns + len(dg.repl))):
             st = states[li]

@@ -1,0 +1,84 @@
+"""CLI for the kernel tile autotuner.
+
+    python -m repro.kernels.autotune smoke
+        One tiny interpret-mode sweep (block_spmv, 3x3/f64), then clear
+        the in-process memo, reload the cache from disk and assert the
+        winner round-trips.  The nightly workflow's autotune gate.
+
+    python -m repro.kernels.autotune sweep [--family F] [--nbr N]
+        Sweep the elasticity signatures (3x3, 3x6, 6x6 at f64) for one
+        family or all of them, recording winners into the cache.
+
+    python -m repro.kernels.autotune show
+        Print the cache for this machine/backend.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.kernels import autotune
+
+
+def _smoke() -> int:
+    sig = {"br": 3, "bc": 3, "kmax": 4, "dtype": "float64"}
+    won = autotune.sweep("block_spmv", sig, nbr=32, repeats=2,
+                         interpret=True)
+    autotune.clear_memo()
+    reloaded = autotune.lookup("block_spmv", sig, "tile_rows")
+    if reloaded != won["params"]["tile_rows"]:
+        print(f"FAIL: cache round-trip: swept "
+              f"{won['params']['tile_rows']}, reloaded {reloaded}")
+        return 1
+    resolved = autotune.resolve_param("block_spmv", sig, "tile_rows",
+                                      None, 8)
+    print(f"autotune smoke OK: {autotune.entry_key('block_spmv', sig)} -> "
+          f"tile_rows={reloaded} ({won['best_us']:.1f} us), cache at "
+          f"{autotune.cache_path()}, cache-mode resolve={resolved}")
+    return 0
+
+
+def _sweep(family: str | None, nbr: int) -> int:
+    sigs = {
+        "block_spmv": [{"br": b, "bc": b, "kmax": 8, "dtype": "float64"}
+                       for b in (3, 6)],
+        "block_spmm": [{"br": 3, "bc": 3, "kmax": 8, "k": 8,
+                        "dtype": "float64"}],
+        "pbjacobi": [{"bs": b, "dtype": "float64"} for b in (3, 6)],
+        "fused_smoother": [{"br": b, "bc": b, "kmax": 8, "dtype": "float64"}
+                           for b in (3, 6)],
+        "fused_pair_gemm": [{"br": 3, "bk": 3, "bc": 3, "kmax": 8,
+                             "dtype": "float64"}],
+    }
+    fams = [family] if family else sorted(sigs)
+    for fam in fams:
+        for sig in sigs[fam]:
+            won = autotune.sweep(fam, sig, nbr=nbr)
+            print(f"{autotune.entry_key(fam, sig)} -> {won['params']} "
+                  f"({won['best_us']:.1f} us)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.kernels.autotune")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    sub.add_parser("smoke")
+    sw = sub.add_parser("sweep")
+    sw.add_argument("--family", choices=sorted(autotune.CANDIDATES),
+                    default=None)
+    sw.add_argument("--nbr", type=int, default=256)
+    sub.add_parser("show")
+    args = ap.parse_args(argv)
+    if args.cmd == "smoke":
+        return _smoke()
+    if args.cmd == "sweep":
+        return _sweep(args.family, args.nbr)
+    cache = autotune.load_cache().get(autotune.machine_key(), {})
+    print(json.dumps({autotune.machine_key(): cache}, indent=1,
+                     sort_keys=True))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -36,6 +36,18 @@ interpreter.  This module centralizes the decision:
                            ``None`` falls back to ``REPRO_OBS``
                            ("off" | "spans" | "counters"), default off —
                            the zero-jaxpr-residue contract.
+* ``resolve_smooth_path``— V-cycle smoother execution path: the fused
+                           Pallas recurrence step (``repro.kernels.
+                           fused_smoother``) on TPU, the unfused jnp
+                           recurrences elsewhere; forced globally with
+                           ``REPRO_SMOOTH_PATH`` ("fused" | "reference").
+* ``resolve_tune``       — the kernel tile autotuner mode
+                           (``repro.kernels.autotune``): ``None`` falls
+                           back to ``REPRO_TUNE`` ("off" | "cache" |
+                           "sweep"), default "cache" — use cached tuned
+                           tiles when present, static defaults otherwise
+                           ("off" is bitwise the pre-tune behaviour;
+                           "sweep" measures and records on cache miss).
 
 Every front door (``spmv``, ``spgemm_numeric_data``, ``set_values_coo``)
 accepts ``None`` for these knobs and resolves them here, so the same call
@@ -133,6 +145,65 @@ def resolve_spmm_path(path: str | None = None) -> str:
             f"invalid SpMM path {path!r}: expected 'kernel' or 'reference' "
             f"(from REPRO_SPMM_PATH or the path= knob)")
     return path
+
+
+def resolve_smooth_path(path: str | None = None) -> str:
+    """Default V-cycle smoother execution path for this backend.
+
+    "fused"     — the Pallas ``fused_smoother`` kernel: one pass per
+                  recurrence step computing ``d' = c1*d + c2*D^{-1}(b -
+                  A x)``, ``x' = x + d'`` with no ``r``/``z`` HBM
+                  intermediates (compiled on TPU, interpret-mode when
+                  forced elsewhere).
+    "reference" — the unfused jnp recurrences in ``repro.core.vcycle``
+                  (SpMV + pbjacobi + axpys); CPU/GPU default.
+
+    ``REPRO_SMOOTH_PATH`` forces a path globally, mirroring
+    ``REPRO_SPMM_PATH``; re-read per call so tests can flip it
+    mid-process (consumed at *trace* time for jitted solves).
+    """
+    if path is None:
+        path = os.environ.get("REPRO_SMOOTH_PATH")
+    if path is None:
+        path = "fused" if on_accelerator() else "reference"
+    if path not in ("fused", "reference"):
+        raise ValueError(
+            f"invalid smoother path {path!r}: expected 'fused' or "
+            f"'reference' (from REPRO_SMOOTH_PATH or the path= knob)")
+    return path
+
+
+def resolve_tune(mode: str | None = None) -> str:
+    """Default autotuner mode; honours the ``REPRO_TUNE`` knob.
+
+    "off"       — ignore the tuning cache entirely: every ``None`` tile
+                  knob resolves to its static default.  Bitwise the
+                  pre-autotuner behaviour.
+    "cache"     (default) use a cached tuned tile when one exists for the
+                  kernel signature on this machine/backend, else the
+                  static default.  Never measures.
+    "sweep"     — like "cache", but a miss triggers a timing sweep over
+                  the candidate tiles on synthetic operands and records
+                  the winner (``repro.kernels.autotune``).
+
+    Re-read per call; like the path knobs it is consumed at *trace* time,
+    so it must be set before the solver is built.  Invalid values raise
+    ``ValueError``.
+    """
+    if mode is None:
+        mode = os.environ.get("REPRO_TUNE")
+    if mode is None:
+        return "cache"
+    key = str(mode).strip().lower()
+    if key in ("", "0", "off", "false", "none"):
+        return "off"
+    if key in ("cache", "on", "1", "true"):
+        return "cache"
+    if key == "sweep":
+        return "sweep"
+    raise ValueError(
+        f"invalid autotune mode {mode!r}: expected 'off', 'cache' or "
+        f"'sweep' (from REPRO_TUNE or the mode= knob)")
 
 
 def resolve_precision(precision=None):

@@ -16,11 +16,26 @@ from repro.obs import trace as obs_trace
 
 
 def block_spmm(ell: BlockELL, X: jax.Array, *, interpret: bool = True,
-               tile_rows: int = 8, pad_k_to: int = 8,
+               tile_rows: int | None = None, pad_k_to: int | None = None,
                accum_dtype=None) -> jax.Array:
-    """Y = A @ X, flat (n, k) panels in/out (matches core ``spmm_ell``)."""
+    """Y = A @ X, flat (n, k) panels in/out (matches core ``spmm_ell``).
+
+    ``tile_rows=None`` / ``pad_k_to=None`` resolve through the autotuner
+    (``repro.kernels.autotune``, governed by ``REPRO_TUNE``; static
+    defaults 8/8 — the seed's hardcoded tiling).
+    """
     with obs_trace.span("kernels/block_spmm"):
         k = X.shape[1]
+        if tile_rows is None or pad_k_to is None:
+            from repro.kernels import autotune
+            sig = dict(br=ell.br, bc=ell.bc, kmax=ell.kmax, k=k,
+                       dtype=jnp.dtype(ell.data.dtype).name)
+            if tile_rows is None:
+                tile_rows = autotune.resolve_param(
+                    "block_spmm", sig, "tile_rows", None, 8)
+            if pad_k_to is None:
+                pad_k_to = autotune.resolve_param(
+                    "block_spmm", sig, "pad_k_to", None, 8)
         kp = -(-k // pad_k_to) * pad_k_to if pad_k_to > 1 else k
         xb = X.reshape(ell.nbc, ell.bc, k)
         if kp != k:

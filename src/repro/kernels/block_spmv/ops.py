@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.block_csr import BlockELL
 from repro.kernels.block_spmv.block_spmv import block_spmv_ell
@@ -9,9 +10,21 @@ from repro.obs import trace as obs_trace
 
 
 def block_spmv(ell: BlockELL, x: jax.Array, *, interpret: bool = True,
-               tile_rows: int = 8, accum_dtype=None) -> jax.Array:
-    """y = A @ x, flat vectors in/out (matches repro.core.spmv.spmv_ell)."""
+               tile_rows: int | None = None, accum_dtype=None) -> jax.Array:
+    """y = A @ x, flat vectors in/out (matches repro.core.spmv.spmv_ell).
+
+    ``tile_rows=None`` resolves through the autotuner
+    (``repro.kernels.autotune``, governed by ``REPRO_TUNE``; static
+    default 8 — the seed's hardcoded tile).
+    """
     with obs_trace.span("kernels/block_spmv"):
+        if tile_rows is None:
+            from repro.kernels import autotune
+            tile_rows = autotune.resolve_param(
+                "block_spmv",
+                dict(br=ell.br, bc=ell.bc, kmax=ell.kmax,
+                     dtype=jnp.dtype(ell.data.dtype).name),
+                "tile_rows", None, 8)
         xb = x.reshape(ell.nbc, ell.bc)
         y = block_spmv_ell(ell.indices, ell.data, xb, tile_rows=tile_rows,
                            interpret=interpret, accum_dtype=accum_dtype)

@@ -1,4 +1,9 @@
 """Jit'd wrapper for the fused tiled pair-GEMM + segment-reduce kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
 from repro.kernels.fused_pair_gemm.fused_pair_gemm import (
     default_tile_slots,
     fused_pair_gemm as _fused_pair_gemm,
@@ -8,7 +13,23 @@ from repro.obs import trace as obs_trace
 __all__ = ["fused_pair_gemm", "default_tile_slots"]
 
 
-def fused_pair_gemm(*args, **kwargs):
-    """Front door with the observability span (trace-time no-op when off)."""
+def fused_pair_gemm(lhs: jax.Array, rhs: jax.Array, *,
+                    tile_slots: int | None = None, interpret: bool = True,
+                    accum_dtype=None) -> jax.Array:
+    """Front door with the observability span (trace-time no-op when off).
+
+    ``tile_slots=None`` resolves through the autotuner
+    (``repro.kernels.autotune``, governed by ``REPRO_TUNE``); no cached
+    winner falls back to the kernel's VMEM-budget ``default_tile_slots``.
+    """
     with obs_trace.span("kernels/fused_pair_gemm"):
-        return _fused_pair_gemm(*args, **kwargs)
+        if tile_slots is None:
+            from repro.kernels import autotune
+            nslots, kmax, br, bk = lhs.shape
+            tile_slots = autotune.resolve_param(
+                "fused_pair_gemm",
+                dict(br=br, bk=bk, bc=rhs.shape[3], kmax=kmax,
+                     dtype=jnp.dtype(lhs.dtype).name),
+                "tile_slots", None, None)
+        return _fused_pair_gemm(lhs, rhs, tile_slots=tile_slots,
+                                interpret=interpret, accum_dtype=accum_dtype)

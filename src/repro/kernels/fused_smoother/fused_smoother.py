@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: one fused Chebyshev/Jacobi smoother recurrence step.
+
+The unfused smoother recurrences in ``repro.core.vcycle`` materialize two
+HBM intermediates per step — the residual ``r = b - A x`` and the
+preconditioned residual ``z = D^{-1} r`` — each written by one dispatch and
+re-read by the next.  This kernel computes the whole step
+
+    d' = c1 * d + c2 * D^{-1}(b - A x)
+    x' = x + d'
+
+in a single pass per row tile: the A-row contraction, the dinv block
+matvec, the direction recurrence and the iterate update all happen
+on-register, so ``r`` and ``z`` never touch HBM.  Both smoothers are this
+one step with different coefficients (Chebyshev: ``c1 = 0, c2 = 1/theta``
+first, then ``c1 = rho' rho, c2 = 2 rho'/delta``; damped block-Jacobi:
+``c1 = 0, c2 = omega`` every step) — see ``repro.core.vcycle``.
+
+The residual is formed fresh from the *current* iterate each step (the
+paper's ``x += f(D^{-1}(b - A x))`` form), which is mathematically
+identical to the unfused incremental update ``r -= A d`` and differs only
+in rounding.
+
+Layout / tiling (mirrors ``block_spmv``)
+  grid       = (ceil(nbr / TR),)                 sequential over row tiles
+  coef       = (2,)               VMEM, whole    [c1, c2] at accum dtype
+  index tile = (TR, kmax)         VMEM (int32)
+  data tile  = (TR, kmax, bs, bs) VMEM           streamed per grid step
+  dinv tile  = (TR, bs, bs)       VMEM
+  b/d tiles  = (TR, bs[, k])      VMEM
+  x          = (nbr, bs[, k])     VMEM, whole    (gathered by A's indices;
+                                                  block-vector resident
+                                                  like ``block_spmv``'s x)
+  out tiles  = x' and d' (TR, bs[, k])
+
+``accum_dtype`` follows the family contract: operands cast up on-register,
+contracted/updated at that dtype, results rounded back to the payload
+dtype (None = native).  Padded rows carry zero data/dinv/b/d blocks, so
+the padded outputs are exact zeros and are sliced off.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _smoother_kernel(acc_dt, tr, coef_ref, idx_ref, data_ref, dinv_ref,
+                     b_ref, d_ref, x_ref, ox_ref, od_ref):
+    """One row tile: residual, precondition, recurrence, update — fused."""
+    i = pl.program_id(0)
+    idx = idx_ref[...]                        # (TR, kmax) int32
+    kmax = idx.shape[1]
+    x = x_ref[...]                            # (nbr, bs[, k]) whole
+    # A x on this tile: gather whole x blocks, contract against A's tile
+    xg = jnp.take(x, idx.reshape(-1), axis=0).reshape(
+        (tr, kmax) + x.shape[1:]).astype(acc_dt)
+    ax = jnp.einsum("rkab,rkb...->ra...", data_ref[...].astype(acc_dt), xg,
+                    preferred_element_type=acc_dt)
+    r = b_ref[...].astype(acc_dt) - ax        # residual, on-register only
+    z = jnp.einsum("rab,rb...->ra...", dinv_ref[...].astype(acc_dt), r,
+                   preferred_element_type=acc_dt)
+    c1 = coef_ref[0].astype(acc_dt)
+    c2 = coef_ref[1].astype(acc_dt)
+    d_new = c1 * d_ref[...].astype(acc_dt) + c2 * z
+    x_own = jax.lax.dynamic_slice_in_dim(x, i * tr, tr).astype(acc_dt)
+    ox_ref[...] = (x_own + d_new).astype(ox_ref.dtype)
+    od_ref[...] = d_new.astype(od_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_rows", "interpret", "accum_dtype"))
+def smoother_step_ell(indices: jax.Array, data: jax.Array, dinv: jax.Array,
+                      b_blocks: jax.Array, x_blocks: jax.Array,
+                      d_blocks: jax.Array, coef: jax.Array, *,
+                      tile_rows: int = 8, interpret: bool = True,
+                      accum_dtype=None):
+    """(x', d') for one fused recurrence step over block vectors.
+
+    indices/data: A in padded BlockELL form (square: nbc == nbr)
+    dinv:         (nbr, bs, bs) pre-inverted diagonal blocks
+    b/x/d_blocks: (nbr, bs) or (nbr, bs, k) block vectors
+    coef:         (2,) = [c1, c2]
+    returns       (x', d') at ``data.dtype``
+    """
+    nbr, kmax, br, _ = data.shape
+    acc_dt = jnp.dtype(accum_dtype) if accum_dtype is not None else data.dtype
+    tr = min(tile_rows, nbr)
+    pad = (-nbr) % tr
+    vpad = ((0, pad), (0, 0)) + ((0, 0),) * (b_blocks.ndim - 2)
+    if pad:
+        indices = jnp.pad(indices, ((0, pad), (0, 0)))
+        data = jnp.pad(data, ((0, pad), (0, 0), (0, 0), (0, 0)))
+        dinv = jnp.pad(dinv, ((0, pad), (0, 0), (0, 0)))
+        b_blocks = jnp.pad(b_blocks, vpad)
+        d_blocks = jnp.pad(d_blocks, vpad)
+        x_blocks = jnp.pad(x_blocks, vpad)
+    grid = ((nbr + pad) // tr,)
+    coef = coef.astype(acc_dt)
+    vshape = (tr, br) + b_blocks.shape[2:]
+    vmap_ = (lambda i: (i, 0)) if b_blocks.ndim == 2 else (
+        lambda i: (i, 0, 0))
+    xwhole = (lambda i: (0, 0)) if b_blocks.ndim == 2 else (
+        lambda i: (0, 0, 0))
+    out_shape = (nbr + pad, br) + b_blocks.shape[2:]
+    x_new, d_new = pl.pallas_call(
+        functools.partial(_smoother_kernel, acc_dt, tr),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((tr, kmax), lambda i: (i, 0)),
+            pl.BlockSpec((tr, kmax, br, br), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((tr, br, br), lambda i: (i, 0, 0)),
+            pl.BlockSpec(vshape, vmap_),
+            pl.BlockSpec(vshape, vmap_),
+            pl.BlockSpec(x_blocks.shape, xwhole),
+        ],
+        out_specs=(pl.BlockSpec(vshape, vmap_),
+                   pl.BlockSpec(vshape, vmap_)),
+        out_shape=(jax.ShapeDtypeStruct(out_shape, data.dtype),
+                   jax.ShapeDtypeStruct(out_shape, data.dtype)),
+        interpret=interpret,
+    )(coef, indices, data, dinv, b_blocks, d_blocks, x_blocks)
+    return x_new[:nbr], d_new[:nbr]

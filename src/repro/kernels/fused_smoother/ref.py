@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused smoother recurrence step."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("accum_dtype",))
+def smoother_step_ref(indices: jax.Array, data: jax.Array, dinv: jax.Array,
+                      b_blocks: jax.Array, x_blocks: jax.Array,
+                      d_blocks: jax.Array, coef: jax.Array, *,
+                      accum_dtype=None):
+    """Same contract as the kernel: one step of
+
+        d' = c1 * d + c2 * D^{-1}(b - A x),   x' = x + d'
+
+    over (nbr, bs[, k]) block vectors, A in padded BlockELL form.
+    ``accum_dtype`` mirrors the kernel's accumulator rule (None = native);
+    results round back to ``data.dtype``.
+    """
+    acc = jnp.dtype(accum_dtype) if accum_dtype is not None else data.dtype
+    xg = x_blocks[indices].astype(acc)            # (nbr, kmax, bs[, k])
+    ax = jnp.einsum("rkab,rkb...->ra...", data.astype(acc), xg,
+                    preferred_element_type=acc)
+    r = b_blocks.astype(acc) - ax
+    z = jnp.einsum("rab,rb...->ra...", dinv.astype(acc), r,
+                   preferred_element_type=acc)
+    d_new = (coef[0].astype(acc) * d_blocks.astype(acc)
+             + coef[1].astype(acc) * z)
+    x_new = x_blocks.astype(acc) + d_new
+    return x_new.astype(data.dtype), d_new.astype(data.dtype)

@@ -2,17 +2,30 @@
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.pbjacobi.pbjacobi import pbjacobi_update
 from repro.obs import trace as obs_trace
 
 
 def pbjacobi_apply(dinv: jax.Array, r: jax.Array, x: jax.Array, omega,
-                   *, interpret: bool = True, accum_dtype=None) -> jax.Array:
-    """Flat-vector front door: x, r are (nbr*bs,)."""
+                   *, interpret: bool = True, tile_rows: int | None = None,
+                   accum_dtype=None) -> jax.Array:
+    """Flat-vector front door: x, r are (nbr*bs,).
+
+    ``tile_rows=None`` resolves through the autotuner
+    (``repro.kernels.autotune``, governed by ``REPRO_TUNE``; static
+    default 64 — the kernel's historic tile).
+    """
     with obs_trace.span("kernels/pbjacobi"):
         nbr, bs, _ = dinv.shape
+        if tile_rows is None:
+            from repro.kernels import autotune
+            tile_rows = autotune.resolve_param(
+                "pbjacobi",
+                dict(bs=bs, dtype=jnp.dtype(dinv.dtype).name),
+                "tile_rows", None, 64)
         out = pbjacobi_update(dinv, r.reshape(nbr, bs), x.reshape(nbr, bs),
-                              omega, interpret=interpret,
-                              accum_dtype=accum_dtype)
+                              omega, tile_rows=tile_rows,
+                              interpret=interpret, accum_dtype=accum_dtype)
         return out.reshape(-1)

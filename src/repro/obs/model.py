@@ -73,17 +73,75 @@ def vcycle_traffic(setupd, itemsize: int = 8, scalar: bool = False) -> dict:
         # pbjacobi: dinv blocks + r read + x update, per smoothing step
         vec += 2 * degree * 3 * nbr * bs * itemsize
         v += 2 * degree * nbr * bs * bs * itemsize
-        for t in (ls.p_ell, ls.r_ell):
-            tv, ti, tvec = _ell_apply_bytes(t.nbr, t.kmax, t.br, t.bc,
+        pe = ls.p_ell
+        pv, pi, pvec = _ell_apply_bytes(pe.nbr, pe.kmax, pe.br, pe.bc,
+                                        itemsize, scalar)
+        v += pv
+        ix += pi
+        vec += pvec
+        if ls.r_ell is not None:
+            re = ls.r_ell
+            rv, ri, rvec = _ell_apply_bytes(re.nbr, re.kmax, re.br, re.bc,
                                             itemsize, scalar)
-            v += tv
-            ix += ti
-            vec += tvec
+            v += rv
+            ix += ri
+            vec += rvec
+        elif scalar:
+            # the scalar baseline always stores an expanded restriction
+            # (CSR cannot reuse P's blocks transposed-on-register) — charge
+            # the stored-equivalent streams, derived from the plan dims
+            nbc_t, tkmax = ls.pt.rows.shape
+            rv, ri, rvec = _ell_apply_bytes(nbc_t, tkmax, pe.bc, pe.br,
+                                            itemsize, True)
+            v += rv
+            ix += ri
+            vec += rvec
+        else:
+            # transpose-free restriction (apply_ell_t): the value stream is
+            # P's own payload, already charged once above by the
+            # prolongation; restriction re-reads only the plan's two int32
+            # streams per slot plus the vector gather/write
+            nbc_t, tkmax = ls.pt.rows.shape
+            ix += 2 * nbc_t * tkmax * 4
+            vec += (nbc_t * tkmax * pe.br * itemsize
+                    + nbc_t * pe.bc * itemsize)
     nc = setupd.coarse_struct.nbr * setupd.coarse_struct.br
     v += nc * nc * itemsize          # two triangular solves over the factor
     vec += 2 * nc * itemsize
     return {"value": v, "index": ix, "vector": vec,
             "total": v + ix + vec}
+
+
+def hierarchy_storage_bytes(setupd, itemsize: int = 8) -> dict:
+    """Device-resident bytes of the solve-phase hierarchy at a value width.
+
+    Splits ``{"operator", "transfer", "coarse", "total"}``: the level
+    operators' ELL payloads+indices+dinv blocks, the transfer operators
+    (P — and either a stored R duplicate or the transpose-free plan's two
+    int32 streams, whichever the setup built), and the dense coarse
+    factor.  This is the "prolongator-side hierarchy memory roughly
+    halves" accounting: a transpose-free setup swaps R's value+index
+    streams (``nnzb*(br*bc*itemsize + 4)``) for ``nnzb*(2*4 + 1)`` plan
+    bytes (rows/gather int32 + the bool mask).
+    """
+    op = tr = 0
+    for ls in setupd.levels:
+        nbr, kmax = ls.a_ell_plan.indices.shape
+        bs = ls.A0.br
+        op += nbr * kmax * (bs * bs * itemsize + 4)     # a_ell data + idx
+        op += nbr * bs * bs * itemsize                  # dinv blocks
+        pe = ls.p_ell
+        tr += pe.nbr * pe.kmax * (pe.br * pe.bc * itemsize + 4)
+        if ls.r_ell is not None:
+            re = ls.r_ell
+            tr += re.nbr * re.kmax * (re.br * re.bc * itemsize + 4)
+        else:
+            nbc_t, tkmax = ls.pt.rows.shape
+            tr += nbc_t * tkmax * (2 * 4 + 1)           # rows+gather+mask
+    nc = setupd.coarse_struct.nbr * setupd.coarse_struct.br
+    coarse = nc * nc * itemsize
+    return {"operator": op, "transfer": tr, "coarse": coarse,
+            "total": op + tr + coarse}
 
 
 def dist_cycle_comm(dg, itemsize: int = 8) -> list:

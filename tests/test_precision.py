@@ -100,7 +100,9 @@ def test_f32_hierarchy_stored_at_policy_dtype(solver32):
     for lv in h.levels:
         assert lv.a_ell.data.dtype == jnp.float32
         assert lv.p_ell.data.dtype == jnp.float32
-        assert lv.r_ell.data.dtype == jnp.float32
+        # transpose-free default: no stored restriction duplicate — the
+        # plan reuses p_ell's (already f32) payload
+        assert lv.r_ell is None and lv.p_t is not None
         assert lv.dinv.dtype == jnp.float32
     assert h.coarse_chol.dtype == jnp.float32
     # mixed policy: krylov-dtype copy of the finest operator only

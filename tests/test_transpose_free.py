@@ -1,0 +1,123 @@
+"""Transpose-free restriction: apply P^T straight off the prolongator.
+
+Covers ISSUE 8's restriction tentpole: ``apply_ell_t`` parity with the
+stored ``r_ell`` apply across the elasticity block-shape mixes, the
+default setup dropping the stored restriction duplicate from the
+hierarchy, stored-vs-free solve parity, the traffic/storage model
+reporting reduced bytes, and the dist switch staging the transpose-free
+boundary restriction.
+"""
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401  (enables x64)
+import jax.numpy as jnp
+
+from helpers import random_bcsr
+from repro.core import gamg
+from repro.core.block_csr import transpose_apply_plan, transpose_bcsr
+from repro.core.spmv import apply_ell, apply_ell_t
+from repro.fem.assemble import assemble_elasticity
+from repro.obs.model import hierarchy_storage_bytes, vcycle_traffic
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("br,bc", [(3, 3), (3, 6), (6, 6)])
+def test_apply_ell_t_matches_stored_restriction(br, bc):
+    """P^T x off P's own ELL payload must equal the stored-R apply
+    *bitwise*: the plan's slot order per output row is exactly
+    ``transpose_structure``'s, so the summation order is identical."""
+    P = random_bcsr(RNG, 20, 9, br, bc, density=0.35)
+    ell = P.to_ell()
+    pt = transpose_apply_plan(P, ell.kmax)
+    r_ell = transpose_bcsr(P).to_ell()
+    x = jnp.asarray(RNG.standard_normal(P.nbr * br))
+    np.testing.assert_array_equal(np.asarray(apply_ell_t(ell, pt, x)),
+                                  np.asarray(apply_ell(r_ell, x)))
+    X = jnp.asarray(RNG.standard_normal((P.nbr * br, 3)))
+    np.testing.assert_array_equal(np.asarray(apply_ell_t(ell, pt, X)),
+                                  np.asarray(apply_ell(r_ell, X)))
+
+
+def test_default_setup_drops_stored_restriction():
+    """The transpose-free default stores no R/r_ell anywhere in the
+    hierarchy — the prolongator-side transfer memory is P + plan only."""
+    prob = assemble_elasticity(4)
+    sd = gamg.setup(prob.A, prob.B, coarse_size=30)
+    assert sd.levels, "need a non-trivial hierarchy"
+    for ls in sd.levels:
+        assert ls.R is None and ls.r_ell is None and ls.pt is not None
+    h = gamg.recompute(sd, prob.A.data)
+    for lv in h.levels:
+        assert lv.r_ell is None and lv.p_t is not None
+
+    sd_st = gamg.setup(prob.A, prob.B, coarse_size=30,
+                       restriction="stored")
+    for ls in sd_st.levels:
+        assert ls.R is not None and ls.r_ell is not None and ls.pt is None
+
+    with pytest.raises(ValueError):
+        gamg.setup(prob.A, prob.B, coarse_size=30, restriction="bogus")
+
+
+def test_stored_and_transpose_free_solve_parity():
+    """Same aggregates, same P values, same summation order -> the two
+    restriction modes produce bitwise-identical V-cycles and solves."""
+    from repro.core.vcycle import vcycle
+    prob = assemble_elasticity(5)
+    sd_tf = gamg.setup(prob.A, prob.B, coarse_size=30)
+    sd_st = gamg.setup(prob.A, prob.B, coarse_size=30,
+                       restriction="stored")
+    h_tf = gamg.recompute(sd_tf, prob.A.data)
+    h_st = gamg.recompute(sd_st, prob.A.data)
+    r = jnp.asarray(RNG.standard_normal(prob.b.shape))
+    np.testing.assert_array_equal(np.asarray(vcycle(h_tf, r)),
+                                  np.asarray(vcycle(h_st, r)))
+    s_tf = gamg.make_solve(sd_tf)(h_tf, prob.b)
+    s_st = gamg.make_solve(sd_st)(h_st, prob.b)
+    assert int(s_tf.iters) == int(s_st.iters)
+    np.testing.assert_array_equal(np.asarray(s_tf.x), np.asarray(s_st.x))
+
+
+def test_traffic_and_storage_models_report_reduced_bytes():
+    """The byte models must see the dropped r_ell: per-cycle modeled
+    traffic shrinks (restriction stops charging a second value+index
+    stream) and the transfer-operator storage roughly halves."""
+    prob = assemble_elasticity(4)
+    sd_tf = gamg.setup(prob.A, prob.B, coarse_size=30)
+    sd_st = gamg.setup(prob.A, prob.B, coarse_size=30,
+                       restriction="stored")
+    t_tf = vcycle_traffic(sd_tf)
+    t_st = vcycle_traffic(sd_st)
+    assert t_tf["total"] < t_st["total"]
+    assert t_tf["value"] < t_st["value"]
+    # the scalar baseline always stores an expanded R: same charge either way
+    assert vcycle_traffic(sd_tf, scalar=True) == \
+        vcycle_traffic(sd_st, scalar=True)
+    s_tf = hierarchy_storage_bytes(sd_tf)
+    s_st = hierarchy_storage_bytes(sd_st)
+    assert s_tf["operator"] == s_st["operator"]
+    assert s_tf["coarse"] == s_st["coarse"]
+    assert s_tf["transfer"] < 0.6 * s_st["transfer"], (s_tf, s_st)
+    assert s_tf["total"] < s_st["total"]
+
+
+def test_dist_switch_stages_transpose_free_boundary():
+    """Agglomerated staging keeps the transpose-free form across the
+    switch: no stored global r_ell, the boundary restriction rides P's
+    payload + the plan.  (Iteration parity itself runs in the dist
+    selftest, which now executes under this default.)"""
+    from repro.dist.solver import build_dist_gamg
+    prob = assemble_elasticity(5)
+    sd = gamg.setup(prob.A, prob.B, coarse_size=12)
+    dg = build_dist_gamg(sd, 2, coarse_eq_limit=1 << 30)
+    assert dg.switch is not None
+    assert dg.switch.r_ell is None
+    assert dg.switch.p_g is not None and dg.switch.p_t is not None
+
+    sd_st = gamg.setup(prob.A, prob.B, coarse_size=12,
+                       restriction="stored")
+    dg_st = build_dist_gamg(sd_st, 2, coarse_eq_limit=1 << 30)
+    assert dg_st.switch.r_ell is not None
+    assert dg_st.switch.p_g is None and dg_st.switch.p_t is None
