@@ -11,7 +11,10 @@ the distributed V-cycle for both placements (fully sharded vs
 agglomerated coarse levels) at the paper's weak-scaling rank counts —
 the latency-bound coarse grids are exactly where the paper is fastest,
 and the rows show the agglomeration crossover paying from ndev >= 8
-(asserted).
+(asserted).  ``overlap_model`` extends the ladder to 2-D process meshes
+(8/27/64 devices) where interior rows exist, emits the
+``hidden_latency`` overlap split, and pins the model against the traced
+collective counts of the actual V-cycle (``repro.dist.measure``).
 """
 from __future__ import annotations
 
@@ -123,6 +126,7 @@ def comm_model(m: int = 7, ndevs=(8, 27, 64)) -> None:
             li = r_sh["level"]
             emit(f"t1.comm.sharded.nd{ndev}.L{li}", 0.0,
                  f"msgs={r_sh['msgs']};lat={r_sh['latency']};"
+                 f"hidden={r_sh['hidden_latency']:.3f};"
                  f"halo_bytes={r_sh['halo_bytes']};"
                  f"gather_bytes={r_sh['gather_bytes']}")
             emit(f"t1.comm.agg.nd{ndev}.L{li}", 0.0,
@@ -152,7 +156,70 @@ def comm_model(m: int = 7, ndevs=(8, 27, 64)) -> None:
             for r_sh, r_ag in zip(sh[switch:], ag[switch:]):
                 assert r_ag["msgs"] == 0 < r_sh["msgs"], (r_sh, r_ag)
                 assert r_ag["latency"] == 0 < r_sh["latency"], (r_sh, r_ag)
+    overlap_model()
+
+
+def overlap_model(m: int = 7, meshes=((2, 4), (2, 16), (2, 32))) -> None:
+    """Overlap accounting on 2-D process meshes, up to 64 fake devices.
+
+    1-D slabs of a 3-D stencil stop having interior rows once the slab is
+    thinner than the stencil reach — exactly the regime of the paper's
+    large rank counts — so the weak-scaling meshes here keep the row axis
+    at two slabs (at the CPU-scale grid even three-way slabs leave the
+    middle rank interior-free) and scale through the column axis
+    (``pc``): interior rows exist, and ``dist_cycle_comm`` charges each
+    exchange as ``max(alpha, t_interior)``.  Emits the ``hidden_latency`` /
+    ``eff_latency`` split per sharded level (asserted nonzero at every
+    ndev >= 8 mesh) and closes with a model-vs-measured message-count
+    column at the 64-device point: ``repro.dist.measure`` (subprocess —
+    it needs ``pr`` fake devices) counts the collective equations in the
+    traced V-cycle, and the model must agree exactly.
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+
+    from repro.dist.partition import ProcessMesh
+    from repro.dist.solver import build_dist_gamg
+    from repro.obs.model import dist_cycle_comm as comm_rows
+
+    prob = assemble_elasticity(m)
+    setupd = gamg.setup(prob.A, prob.B, coarse_size=30, precision="f64")
+    for shape in meshes:
+        nd = shape[0] * shape[1]
+        dg = build_dist_gamg(setupd, ProcessMesh(shape))
+        for r in comm_rows(dg):
+            emit(f"t1.overlap.nd{nd}.L{r['level']}", 0.0,
+                 f"mesh={shape[0]}x{shape[1]};"
+                 f"placement={r['placement']};lat={r['latency']};"
+                 f"hidden={r['hidden_latency']:.3f};"
+                 f"eff={r['eff_latency']:.3f}")
+            if nd >= 8 and r["placement"] == "sharded" \
+                    and r["halo_bytes"] > 0:
+                assert r["hidden_latency"] > 0.0, \
+                    (f"no overlap headroom on sharded level "
+                     f"{r['level']} of mesh {shape}: {r}")
+    pr, pc = meshes[-1]
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={pr}"
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.dist.measure",
+         str(m), str(pr), str(pc)],
+        capture_output=True, text=True, timeout=520, env=env)
+    assert out.returncode == 0, \
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    rep = json.loads(out.stdout.strip().splitlines()[-1])
+    measured = rep["measured"]["cycle"]["msgs"]
+    model = rep["model_msgs"]
+    err = abs(model - measured) / max(measured, 1)
+    emit(f"t1.overlap.measured.nd{pr * pc}", 0.0,
+         f"model_msgs={model};measured_msgs={measured};err={err:.3f}")
+    assert model == measured, \
+        f"comm model drifted from the traced cycle: {model} != {measured}"
 
 
 if __name__ == "__main__":
-    run()       # run() ends with the comm_model rows
+    run()       # run() ends with the comm_model + overlap rows

@@ -1,8 +1,14 @@
 """Distributed (multi-device) AMG path — PETSc-style row-slab decomposition.
 
-``partition``   balanced contiguous block-row slabs (the rank layout).
+``partition``   process meshes and balanced contiguous block-row slabs:
+                ``ProcessMesh`` structures the device set (1-D row slabs,
+                or 2-D ``(pr, pc)`` meshes whose column axis splits each
+                slab's halo-facing work), ``RowPartition`` the rank
+                layout.
 ``pamg``        distributed blocked operators: slab halo exchange
-                (neighbor ``ppermute`` windows), distributed ELL SpMV, and
+                (neighbor ``ppermute`` windows, blocking or split into
+                start/finish around the interior work), distributed ELL
+                SpMV with a build-time interior/boundary row split, and
                 the distributed PtAP stages with the off-process
                 prolongator operand (P_oth) cached device-side.
 ``solver``      ``build_dist_gamg`` / ``make_dist_solver`` — the full
@@ -10,8 +16,13 @@
                 AMG-preconditioned CG) as one ``shard_map`` program, with
                 per-level placement: fine levels slab-sharded, coarse
                 levels agglomerated into a replicated rank-redundant tail
-                below the ``coarse_eq_limit`` equations-per-rank threshold
-                (PETSc GAMG process reduction).
+                below the ``coarse_eq_limit`` equations-per-device
+                threshold (PETSc GAMG process reduction).  The
+                ``REPRO_OVERLAP`` knob picks the halo schedule
+                (overlapped split apply by default, bitwise-identical
+                blocking rendering with ``off``).
+``measure``     traced collective counts of the V-cycle (the
+                model-vs-measured column of the weak-scaling table).
 ``selftest``    subprocess entry point asserting distributed == single
                 device parity (``python -m repro.dist.selftest <m>``).
 """

@@ -6,14 +6,16 @@ state.  The JAX rendering here follows the same split:
 
 host (cold, this module's ``build_*``)
     Remap every global index into (owner rank, slab-local) coordinates,
-    decide the halo pattern, and stack the per-rank plans into
-    ``(ndev, ...)`` arrays that ``shard_map`` splits over the rank axis.
-    Constant operands — the prolongator payloads, including the off-process
-    rows **P_oth** — are pre-gathered per rank at build time (the paper's
+    decide the halo pattern, split each rank's rows into **interior**
+    (every ELL column inside the local slab) and **boundary** (reads the
+    halo window) sets, and stack the per-rank plans into ``(ndev, ...)``
+    arrays that ``shard_map`` splits over the rank axis.  Constant
+    operands — the prolongator payloads, including the off-process rows
+    **P_oth** — are pre-gathered per rank at build time (the paper's
     cached stacked operand), so the hot PtAP does *zero* communication for
     P.
 
-device (hot, the ``*_apply`` / ``halo_window`` functions)
+device (hot, the ``*_apply`` / exchange functions)
     Pure per-rank functions used inside ``shard_map``.  The only
     communication is (a) vector halo windows for SpMV and (b) the
     off-process reduction window over the A·P payload slabs in the second
@@ -21,6 +23,22 @@ device (hot, the ``*_apply`` / ``halo_window`` functions)
     mesh-ordered problems (``Halo.strategy == "ppermute"``), with an
     ``all_gather`` fallback when a plan's reach exceeds the neighbor
     window.
+
+    The exchange comes in two renderings sharing one op sequence:
+
+    * blocking — ``halo_window(x, halo)`` issues the ppermutes and
+      concatenates; the whole apply waits on the window.  This is the
+      ``REPRO_OVERLAP=off`` path and is bitwise the historical behaviour.
+    * overlapped — ``start_halo_exchange`` issues the same ppermutes and
+      returns a ``PendingExchange``; the caller runs
+      ``dist_ell_apply_interior`` on the rows that need no halo while the
+      exchange is in flight, then ``finish_halo_exchange`` +
+      ``dist_ell_apply_boundary`` for the rows that read the window, and
+      ``combine_split`` scatters the two partial results back into slab
+      order.  Each row is computed by exactly one path with the identical
+      per-row contraction, so the overlapped apply is *bitwise* the
+      blocking one — communication/computation overlap is free of any
+      reassociation.
 
 Agglomerated (replicated) coarse levels add a third input layout: when the
 placement policy in ``repro.dist.solver`` takes a level off the sharded
@@ -129,23 +147,36 @@ def center_coord(halo: Halo, rank: int) -> int:
     return halo.width * halo.cpad
 
 
-def halo_window(x: Array, halo: Halo) -> Array:
-    """Device (inside shard_map): build the halo window of a sharded slab.
+@dataclasses.dataclass
+class PendingExchange:
+    """An in-flight halo exchange: the issued collectives, not yet a window.
 
-    ``x`` is this rank's padded slab ``(cpad, ...)``; the result stacks the
-    neighbor slabs ``[-w..w]`` (ppermute), everything (allgather), or is
-    ``x`` itself (local).  Edge ranks receive zero slabs, which padded plan
-    entries never address.
+    ``start_halo_exchange`` issues every ppermute (or the all-gather) and
+    returns immediately; ``finish_halo_exchange`` assembles the window.
+    Between the two the caller is free to run communication-free work
+    (the interior rows) — XLA's latency-hiding scheduler overlaps the
+    collectives with whatever is issued before the first use of their
+    results.
+    """
+
+    parts: tuple
+    halo: Halo
+
+
+def start_halo_exchange(x: Array, halo: Halo) -> PendingExchange:
+    """Device (inside shard_map): issue the halo collectives of a slab.
+
+    ``x`` is this rank's padded slab ``(cpad, ...)``; the pending parts
+    are the neighbor slabs ``[-w..w]`` (ppermute), the gathered stack
+    (allgather), or ``x`` itself (local/replicated — nothing moves).
+    Edge ranks receive zero slabs, which padded plan entries never
+    address.
     """
     if halo.strategy in ("local", "replicated"):
-        return x
-    # "halo" fault-injection site: corrupts the *communicated* window
-    # payload (trace-time identity unless a schedule is installed —
-    # repro.robust.inject); local/replicated strategies move no bytes and
-    # are exempt by construction.
+        return PendingExchange((x,), halo)
     if halo.strategy == "allgather":
-        return inject.maybe(
-            "halo", lax.all_gather(x, AXIS, axis=0, tiled=True))
+        return PendingExchange(
+            (lax.all_gather(x, AXIS, axis=0, tiled=True),), halo)
     parts = []
     for d in range(-halo.width, halo.width + 1):
         if d == 0:
@@ -155,7 +186,36 @@ def halo_window(x: Array, halo: Halo) -> Array:
         perm = [(i, i - d) for i in range(halo.ndev)
                 if 0 <= i - d < halo.ndev]
         parts.append(lax.ppermute(x, AXIS, perm))
-    return inject.maybe("halo", jnp.concatenate(parts, axis=0))
+    return PendingExchange(tuple(parts), halo)
+
+
+def finish_halo_exchange(pend: PendingExchange) -> Array:
+    """Device: assemble the halo window from an in-flight exchange.
+
+    The "halo" fault-injection site lives here, on the *assembled* window
+    — so on the split path a planted fault corrupts the exchanged payload
+    before ``dist_ell_apply_boundary`` consumes it, exactly as the
+    blocking window does (trace-time identity unless a schedule is
+    installed — ``repro.robust.inject``); local/replicated strategies
+    move no bytes and are exempt by construction.
+    """
+    halo = pend.halo
+    if halo.strategy in ("local", "replicated"):
+        return pend.parts[0]
+    if halo.strategy == "allgather":
+        return inject.maybe("halo", pend.parts[0])
+    return inject.maybe("halo", jnp.concatenate(pend.parts, axis=0))
+
+
+def halo_window(x: Array, halo: Halo) -> Array:
+    """Device: the *blocking* window — issue the exchange and wait for it.
+
+    Literally ``finish_halo_exchange(start_halo_exchange(x, halo))``: the
+    op sequence (ppermute order, concatenation, fault-injection point) is
+    the historical one, which is what keeps ``REPRO_OVERLAP=off`` bitwise
+    the pre-overlap apply.
+    """
+    return finish_halo_exchange(start_halo_exchange(x, halo))
 
 
 # ---------------------------------------------------------------------------
@@ -203,6 +263,21 @@ class DistEll:
     either from a constant payload baked at build time (``data``; P and R
     under the reuse model) or are gathered from the rank's runtime payload
     slab (``gather`` into A values).
+
+    The build-time **interior/boundary row split** (the overlap lever):
+    ``int_mask`` marks, per rank, the slab rows whose every masked ELL
+    column lives inside the local slab (interior — no communication
+    needed); the rest read the halo window (boundary).
+    ``indices_local`` carries the same plan re-addressed in slab-local
+    coordinates (valid on interior rows; boundary/masked entries park at
+    slot 0), so ``dist_ell_apply_interior`` gathers straight from the
+    rank's own vector while the exchange is in flight.  Both split
+    applies run at the *full* ``(rpad, ...)`` slab shape and
+    ``combine_split`` selects per row — shape-identical contractions are
+    what makes each row's result bitwise the blocking one (a
+    subset-shaped einsum may lower with a different reduction strategy
+    and drift by an ULP); the discarded half of each dual apply is the
+    flop price of hiding the exchange.
     """
 
     halo: Halo
@@ -213,6 +288,10 @@ class DistEll:
     kmax: int
     br: int
     bc: int
+    indices_local: Optional[np.ndarray] = None  # (ndev, rpad, kmax) slab ids
+    int_mask: Optional[np.ndarray] = None       # (ndev, rpad) interior rows
+    int_counts: Optional[np.ndarray] = None     # (ndev,) interior rows/rank
+    bnd_counts: Optional[np.ndarray] = None     # (ndev,) boundary rows/rank
 
 
 def build_dist_ell(A: BlockCSR, row_part: RowPartition,
@@ -258,10 +337,12 @@ def build_dist_ell(A: BlockCSR, row_part: RowPartition,
     col_local = idx - col_part.starts[owner]
 
     indices = np.zeros((ndev, rpad, kmax), np.int32)
+    indices_local = np.zeros((ndev, rpad, kmax), np.int32)
     gather = np.zeros((ndev, rpad, kmax), np.int64)
     data = (np.zeros((ndev, rpad, kmax) + const_data.shape[1:],
                      const_data.dtype) if const_data is not None else None)
     nnz_starts = A.indptr[row_part.starts]
+    int_mask = np.zeros((ndev, rpad), bool)
     for r in range(ndev):
         sl = row_part.slab(r)
         cnt = sl.stop - sl.start
@@ -269,6 +350,23 @@ def build_dist_ell(A: BlockCSR, row_part: RowPartition,
         coords = np.where(msk[sl], coords, center_coord(halo, r))
         indices[r, :cnt] = coords
         indices[r, cnt:] = center_coord(halo, r)
+        # interior/boundary split: a row is interior iff every masked
+        # entry's column owner is this rank (replicated windows move no
+        # bytes — every row is interior by construction).  The local
+        # re-addressing gathers from the rank's own slab; entries that are
+        # masked out or remote park at slot 0 (zero operand either way).
+        if halo.strategy == "replicated":
+            is_local = np.ones((cnt, kmax), bool)
+            indices_local[r, :cnt] = coords
+        else:
+            is_local = owner[sl] == r
+            indices_local[r, :cnt] = np.where(msk[sl] & is_local,
+                                              col_local[sl], 0)
+        # padding rows (cnt..rpad) count as interior: their plan gathers
+        # slot 0 with a zero operand on both paths, so either side of the
+        # select is the same 0.0
+        int_mask[r, :cnt] = np.where(msk[sl], is_local, True).all(axis=1)
+        int_mask[r, cnt:] = True
         if const_data is not None:
             blocks = const_data[gat[sl]] * msk[sl, :, None, None]
             data[r, :cnt] = blocks
@@ -276,9 +374,15 @@ def build_dist_ell(A: BlockCSR, row_part: RowPartition,
             loc = np.where(msk[sl], gat[sl] - nnz_starts[r], payload_pad - 1)
             gather[r, :cnt] = loc
             gather[r, cnt:] = payload_pad - 1
+    counts = row_part.counts
+    real = np.arange(rpad)[None, :] < counts[:, None]
+    int_counts = (int_mask & real).sum(axis=1)
     return DistEll(halo=halo, indices=indices,
                    gather=gather if const_data is None else None,
-                   data=data, rpad=rpad, kmax=kmax, br=A.br, bc=A.bc)
+                   data=data, rpad=rpad, kmax=kmax, br=A.br, bc=A.bc,
+                   indices_local=indices_local, int_mask=int_mask,
+                   int_counts=int_counts,
+                   bnd_counts=counts - int_counts)
 
 
 def dist_ell_apply(indices: Array, data: Array, x_win: Array,
@@ -297,6 +401,49 @@ def dist_ell_apply(indices: Array, data: Array, x_win: Array,
     acc = jnp.dtype(accum_dtype) if accum_dtype is not None else data.dtype
     return jnp.einsum("rkab,rkb...->ra...", data.astype(acc), g.astype(acc),
                       preferred_element_type=acc).astype(data.dtype)
+
+
+def dist_ell_apply_interior(indices_local: Array, data: Array, x: Array,
+                            accum_dtype=None) -> Array:
+    """Device: the interior partition of the split SpMV — no communication.
+
+    Contracts the full slab against the rank's *own* vector
+    (``indices_local`` addresses ``x`` directly, no window); runs while
+    the halo exchange started by ``start_halo_exchange`` is still in
+    flight.  The contraction is ``dist_ell_apply`` itself at the
+    identical ``(rpad, ...)`` shape — the local slab sits verbatim inside
+    the window, so each *interior* row's result is bitwise the blocking
+    one; boundary rows compute a throwaway value off the parked slot-0
+    operands that ``combine_split`` discards.
+    """
+    return dist_ell_apply(indices_local, data, x, accum_dtype=accum_dtype)
+
+
+def dist_ell_apply_boundary(indices: Array, data: Array, x_win: Array,
+                            accum_dtype=None) -> Array:
+    """Device: the boundary partition — consumes the finished halo window.
+
+    Literally ``dist_ell_apply`` on the window (so every row's result is
+    the blocking one); called after ``finish_halo_exchange``, which is
+    where the ``"halo"`` fault site fires — an injected fault corrupts
+    exactly what the boundary rows read.  ``combine_split`` keeps only
+    the boundary rows from this partial.
+    """
+    return dist_ell_apply(indices, data, x_win, accum_dtype=accum_dtype)
+
+
+def combine_split(int_mask: Array, y_int: Array, y_bnd: Array) -> Array:
+    """Device: per-row select between the two split partials.
+
+    Interior rows take the exchange-free partial, boundary rows the
+    window-fed one.  Both partials were computed at the full slab shape,
+    so the selected value per row is bitwise the blocking apply's; the
+    discarded lane of each row is the redundant-flop price of the
+    overlap.  Padding rows are marked interior and both lanes agree at
+    ``0.0`` for them.
+    """
+    m = int_mask.reshape(int_mask.shape + (1,) * (y_int.ndim - 1))
+    return jnp.where(m, y_int, y_bnd)
 
 
 # ---------------------------------------------------------------------------
@@ -323,6 +470,18 @@ class DistPairStage:
     seg: np.ndarray                     # (ndev, ppad) int32 sorted out slots
     out_pad: int                        # output slab length (max nnz + 1)
     ppad: int
+    # pair-level interior/boundary split of the windowed stage (stage 2):
+    # pairs whose rhs payload block is rank-local vs pairs reading the
+    # exchanged window.  Both renderings of the pair products run at the
+    # full ``(ppad, ...)`` shape (one off the local slab, one off the
+    # finished window) and ``jnp.where(local_mask, ...)`` selects per
+    # pair, then the *same* sorted segment-sum runs — identical products,
+    # identical reduction order, bitwise the blocking stage.  None on the
+    # windowless stage 1.
+    local_mask: Optional[np.ndarray] = None   # (ndev, ppad) local pairs
+    rhs_local: Optional[np.ndarray] = None    # (ndev, ppad) into local slab
+    local_counts: Optional[np.ndarray] = None  # (ndev,)
+    bnd_counts: Optional[np.ndarray] = None    # (ndev,)
 
 
 def _pair_ranges(plan: SpGEMMPlan, out_part: RowPartition):
@@ -390,7 +549,12 @@ def build_stage2(ac_plan: SpGEMMPlan, coarse_part: RowPartition,
     halo = make_halo(width, ap_pad, ndev)
     lhs_data = np.zeros((ndev, ppad) + r_data.shape[1:], r_data.dtype)
     rhs_gather = np.zeros((ndev, ppad), np.int64)
+    rhs_local = np.zeros((ndev, ppad), np.int64)
     seg = np.full((ndev, ppad), out_pad - 1, np.int32)
+    # padded pairs select the window lane (local=False): the full-shape
+    # boundary product is literally the blocking product for every pair,
+    # padded ones included (zero lhs block x the parked center slot)
+    local_mask = np.zeros((ndev, ppad), bool)
     for r in range(ndev):
         s = slice(int(lo[r]), int(hi[r]))
         cnt = s.stop - s.start
@@ -399,9 +563,20 @@ def build_stage2(ac_plan: SpGEMMPlan, coarse_part: RowPartition,
         rhs_gather[r, :cnt] = window_coords(halo, owner[pb], local[pb], r)
         rhs_gather[r, cnt:] = center_coord(halo, r)
         seg[r, :cnt] = ac_plan.out_idx[s] - slot_base[r]
+        # pair split: a pair is local iff its rhs AP block lives in this
+        # rank's payload slab (replicated/local halos: everything local)
+        is_local = (np.ones(cnt, bool)
+                    if halo.strategy in ("local", "replicated")
+                    else owner[pb] == r)
+        rhs_local[r, :cnt] = np.where(is_local, local[pb], 0)
+        local_mask[r, :cnt] = is_local
+    local_counts = local_mask.sum(axis=1)
     return DistPairStage(halo=halo, lhs_gather=None, lhs_data=lhs_data,
                          rhs_gather=rhs_gather, rhs_data=None, seg=seg,
-                         out_pad=out_pad, ppad=ppad)
+                         out_pad=out_pad, ppad=ppad,
+                         local_mask=local_mask, rhs_local=rhs_local,
+                         local_counts=local_counts,
+                         bnd_counts=(hi - lo) - local_counts)
 
 
 def dist_stage_apply(lhs: Array, rhs: Array, seg: Array, out_pad: int,
@@ -416,6 +591,37 @@ def dist_stage_apply(lhs: Array, rhs: Array, seg: Array, out_pad: int,
     acc = jnp.dtype(accum_dtype) if accum_dtype is not None else lhs.dtype
     prod = jnp.einsum("pij,pjk->pik", lhs.astype(acc), rhs.astype(acc),
                       preferred_element_type=acc)
+    return jax.ops.segment_sum(prod, seg, num_segments=out_pad,
+                               indices_are_sorted=True).astype(lhs.dtype)
+
+
+def dist_stage_apply_overlap(lhs: Array, rhs_slab: Array, halo: Halo,
+                             rhs_gather: Array, rhs_local: Array,
+                             local_mask: Array, seg: Array, out_pad: int,
+                             accum_dtype=None) -> Array:
+    """Device: the overlapped rendering of the stage-2 off-process reduce.
+
+    Pair products are elementwise, so splitting them needs no summation
+    surgery: start the window exchange over the rhs payload slabs, form
+    the products straight from the rank's own slab (``rhs_local``) while
+    the ppermutes fly, finish the window, form them again from it, select
+    per pair (``combine_split`` on the pair axis — local pairs gathered
+    identical rhs blocks from the slab, boundary pairs need the window)
+    and run the *same* sorted segment-sum as ``dist_stage_apply``.  Both
+    product einsums run at the full ``(ppad, ...)`` shape, so each pair's
+    selected product — and hence the reduction — is bitwise the blocking
+    stage's.
+    """
+    acc = jnp.dtype(accum_dtype) if accum_dtype is not None else lhs.dtype
+    pend = start_halo_exchange(rhs_slab, halo)
+    prod_loc = jnp.einsum("pij,pjk->pik", lhs.astype(acc),
+                          rhs_slab[rhs_local].astype(acc),
+                          preferred_element_type=acc)
+    win = finish_halo_exchange(pend)
+    prod_bnd = jnp.einsum("pij,pjk->pik", lhs.astype(acc),
+                          win[rhs_gather].astype(acc),
+                          preferred_element_type=acc)
+    prod = combine_split(local_mask, prod_loc, prod_bnd)
     return jax.ops.segment_sum(prod, seg, num_segments=out_pad,
                                indices_are_sorted=True).astype(lhs.dtype)
 

@@ -37,6 +37,19 @@ verbatim, so agglomerated-vs-single-device f64 parity is exact by
 construction — and therefore so is sharded-vs-agglomerated iteration
 parity, which ``repro.dist.selftest`` asserts.
 
+Halo schedule: every sharded operator apply routes through ``_rank_spmv``,
+which renders the exchange either *blocking* (assemble the window, then
+apply — bitwise the historical path, ``REPRO_OVERLAP=off``) or
+*overlapped* (``REPRO_OVERLAP=on``, the default): start the ppermutes, run
+the build-time **interior** rows against the rank's own slab while they
+fly, finish the window, run the **boundary** rows, scatter the disjoint
+partials back into slab order.  Per-row summation order is identical, so
+the two schedules produce bitwise-equal iterates — which the selftest's
+``REPRO_SELFTEST_OVERLAP=1`` section pins.  The knob is resolved at trace
+time (``repro.kernels.backend.resolve_overlap``); the stage-2 PtAP
+reduction overlaps the same way at pair granularity
+(``dist_stage_apply_overlap``).
+
 Parity with the single-device path is exact in structure (same contribution
 order per row, same plans) and floating-point-tight in value (the only
 reassociations are the ``psum`` dot products), which is what
@@ -78,11 +91,19 @@ from repro.dist.pamg import (
     build_row_gather,
     build_stage1,
     build_stage2,
+    combine_split,
     dist_ell_apply,
+    dist_ell_apply_boundary,
+    dist_ell_apply_interior,
     dist_stage_apply,
+    dist_stage_apply_overlap,
+    finish_halo_exchange,
     halo_window,
+    start_halo_exchange,
 )
-from repro.dist.partition import RowPartition, partition_rows
+from repro.dist.partition import ProcessMesh, RowPartition, as_mesh, \
+    partition_rows
+from repro.kernels.backend import resolve_overlap
 from repro.multirhs.block_krylov import block_pcg
 from repro.obs import trace as obs_trace
 from repro.robust import inject
@@ -218,6 +239,11 @@ class DistGAMG:
     switch: Optional[DistSwitch] = None
     coarse_struct: Optional[BlockCSR] = None   # coarsest structure (repl tail)
     coarse_eq_limit: int = 0
+    #: The device set as a ``ProcessMesh``.  The executable shard_map path
+    #: consumes the row axis (``mesh.pr == ndev`` slabs); a 2-D mesh's
+    #: column axis splits each slab's halo traffic ``pc`` ways, which
+    #: ``repro.obs.model.dist_cycle_comm`` accounts.
+    mesh: Optional[ProcessMesh] = None
 
     @property
     def n_levels(self) -> int:
@@ -233,6 +259,11 @@ class DistGAMG:
     # ---- args bundle (the sharded operands of the hot program) ----------
     def sharded_args(self, setupd: Optional[GAMGSetup] = None):
         del setupd  # staged at build time; kept for the call-site shape
+        def split_args(pre: str, op: DistEll):
+            """The interior/boundary split plan of one sharded DistEll."""
+            return {pre + "loc": jnp.asarray(op.indices_local),
+                    pre + "msk": jnp.asarray(op.int_mask)}
+
         lv_args = []
         for lv in self.levels:
             if lv.p_op is not None:
@@ -240,8 +271,11 @@ class DistGAMG:
                     p_idx=jnp.asarray(lv.p_op.indices),
                     p_data=jnp.asarray(lv.p_op.data),
                     r_idx=jnp.asarray(lv.r_op.indices),
-                    r_data=jnp.asarray(lv.r_op.data))
+                    r_data=jnp.asarray(lv.r_op.data),
+                    **split_args("p_", lv.p_op),
+                    **split_args("r_", lv.r_op))
             else:   # switch boundary: the re-slicing prolongator's slabs
+                # (replicated halo — zero traffic, no split plan needed)
                 transfers = dict(
                     pb_idx=jnp.asarray(self.switch.p_b.indices),
                     pb_data=jnp.asarray(self.switch.p_b.data))
@@ -249,11 +283,14 @@ class DistGAMG:
                 transfers,
                 a_idx=jnp.asarray(lv.a_op.indices),
                 a_gather=jnp.asarray(lv.a_op.gather),
+                **split_args("a_", lv.a_op),
                 s1_lhs=jnp.asarray(lv.stage1.lhs_gather),
                 s1_rhs=jnp.asarray(lv.stage1.rhs_data),
                 s1_seg=jnp.asarray(lv.stage1.seg),
                 s2_lhs=jnp.asarray(lv.stage2.lhs_data),
                 s2_rhs=jnp.asarray(lv.stage2.rhs_gather),
+                s2_rhs_loc=jnp.asarray(lv.stage2.rhs_local),
+                s2_msk=jnp.asarray(lv.stage2.local_mask),
                 s2_seg=jnp.asarray(lv.stage2.seg),
                 diag_sel=jnp.asarray(lv.diag_sel),
                 diag_mask=jnp.asarray(lv.diag_mask),
@@ -453,9 +490,15 @@ def _placement_split(setupd: GAMGSetup, ndev: int, limit: int) -> int:
     return n
 
 
-def build_dist_gamg(setupd: GAMGSetup, ndev: int, *,
+def build_dist_gamg(setupd: GAMGSetup, ndev, *,
                     coarse_eq_limit: Optional[int] = None) -> DistGAMG:
     """Cold distributed staging of a single-device GAMG setup.
+
+    ``ndev`` is an int rank count (the legacy 1-D slab convention) or a
+    ``ProcessMesh``: the executable slabs follow the mesh's *row* axis
+    (``mesh.pr``), while a 2-D mesh's column axis is recorded for the
+    communication model (each row group's ``pc`` ranks split its halo
+    traffic — ``repro.obs.model.dist_cycle_comm``).
 
     Constant payloads (P, R, the cached P_oth) are staged at the policy's
     ``hierarchy_dtype`` — the distributed rendering of "the hierarchy is
@@ -468,11 +511,17 @@ def build_dist_gamg(setupd: GAMGSetup, ndev: int, *,
     pre-placement behaviour).
     """
     assert setupd.levels, "distributed path needs at least one AMG level"
+    mesh = as_mesh(ndev)
+    mesh.row_partition(setupd.levels[0].A0.nbr)   # validate rows >= pr
+    ndev = mesh.pr
     if coarse_eq_limit is None:
         coarse_eq_limit = setupd.coarse_eq_limit
     if coarse_eq_limit is None:
         coarse_eq_limit = DEFAULT_COARSE_EQ_LIMIT
-    n_sharded = _placement_split(setupd, ndev, coarse_eq_limit)
+    # the eq-per-rank placement rule counts every device of the mesh
+    # (pr * pc), not just the row axis the slabs follow — a 2-D mesh
+    # agglomerates exactly like the equally-sized 1-D one would
+    n_sharded = _placement_split(setupd, mesh.ndev, coarse_eq_limit)
     h_np = setupd.precision.hierarchy_dtype
     parts = [partition_rows(ls.n_fine, ndev) for ls in setupd.levels]
     parts.append(partition_rows(setupd.coarse_struct.nbr, ndev))
@@ -551,7 +600,7 @@ def build_dist_gamg(setupd: GAMGSetup, ndev: int, *,
                     degree=setupd.degree, precision=setupd.precision,
                     repl=repl, switch=switch,
                     coarse_struct=setupd.coarse_struct if repl else None,
-                    coarse_eq_limit=int(coarse_eq_limit))
+                    coarse_eq_limit=int(coarse_eq_limit), mesh=mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -575,15 +624,14 @@ def _pnorm_cols(a: Array) -> Array:
     return jnp.sqrt(lax.psum(jnp.sum(a * a, axis=(0, 1)), AXIS))
 
 
-def _rank_lambda_max(lv: DistLevel, a_idx: Array, dinva_data: Array,
-                     row_mask: Array, iters: int = 10,
+def _rank_lambda_max(lv: DistLevel, a, dinva_data: Array,
+                     row_mask: Array, overlap: bool, iters: int = 10,
                      accum=None) -> Array:
     """Distributed power iteration — mirrors ``lambda_max_dinv_a``."""
-    halo = lv.a_op.halo
 
     def spmv(x):
-        return dist_ell_apply(a_idx, dinva_data, halo_window(x, halo),
-                              accum_dtype=accum)
+        return _rank_spmv(lv.a_op, a, "a_", dinva_data, x, overlap,
+                          accum=accum)
 
     x0 = row_mask[:, None] * jnp.ones((lv.rpad, lv.bs), dinva_data.dtype)
     x0 = x0 / _pnorm(x0)
@@ -597,7 +645,7 @@ def _rank_lambda_max(lv: DistLevel, a_idx: Array, dinva_data: Array,
     return _pnorm(spmv(x))
 
 
-def _rank_recompute(dg: DistGAMG, args, a_slab: Array):
+def _rank_recompute(dg: DistGAMG, args, a_slab: Array, overlap: bool):
     """Distributed hot hierarchy rebuild: chained PtAP + smoother data.
 
     The payload chain runs at the policy's hierarchy dtype (the incoming
@@ -629,7 +677,7 @@ def _rank_recompute(dg: DistGAMG, args, a_slab: Array):
         dinva = jnp.einsum("rab,rkbc->rkac", dinv.astype(acc_p),
                            a_ell_data.astype(acc_p),
                            preferred_element_type=acc_p).astype(h)
-        lam = _rank_lambda_max(lv, a["a_idx"], dinva, a["row_mask"],
+        lam = _rank_lambda_max(lv, a, dinva, a["row_mask"], overlap,
                                accum=acc)
         st = dict(a_data=a_ell_data, dinv=dinv, lam=lam)
         if li == 0 and policy.mixed:
@@ -640,10 +688,16 @@ def _rank_recompute(dg: DistGAMG, args, a_slab: Array):
         # off-process reduction window for R@(AP)
         ap = dist_stage_apply(a_cur[a["s1_lhs"]], a["s1_rhs"], a["s1_seg"],
                               lv.stage1.out_pad, accum_dtype=acc)
-        ap_win = halo_window(ap, lv.stage2.halo)
-        a_cur = dist_stage_apply(a["s2_lhs"], ap_win[a["s2_rhs"]],
-                                 a["s2_seg"], lv.stage2.out_pad,
-                                 accum_dtype=acc)
+        s2 = lv.stage2
+        if overlap and s2.halo.strategy not in ("local", "replicated"):
+            a_cur = dist_stage_apply_overlap(
+                a["s2_lhs"], ap, s2.halo, a["s2_rhs"], a["s2_rhs_loc"],
+                a["s2_msk"], a["s2_seg"], s2.out_pad, accum_dtype=acc)
+        else:
+            ap_win = halo_window(ap, s2.halo)
+            a_cur = dist_stage_apply(a["s2_lhs"], ap_win[a["s2_rhs"]],
+                                     a["s2_seg"], s2.out_pad,
+                                     accum_dtype=acc)
     if dg.repl:
         g = lax.all_gather(a_cur, AXIS, axis=0, tiled=True)
         a_data = g[jnp.asarray(dg.switch.payload_sel)]
@@ -726,10 +780,31 @@ def _rank_assemble(da: DistAssembly, aargs, E: Array, nu: Array) -> Array:
                                indices_are_sorted=True)
 
 
-def _rank_spmv(op: DistEll, idx: Array, data: Array, x: Array,
-               accum=None) -> Array:
-    return dist_ell_apply(idx, data, halo_window(x, op.halo),
-                          accum_dtype=accum)
+def _rank_spmv(op: DistEll, a, pre: str, data: Array, x: Array,
+               overlap: bool, accum=None) -> Array:
+    """Per-rank SpMV through one of the two exchange renderings.
+
+    ``a`` is the level's sharded-args dict, ``pre`` the operator's key
+    prefix (``"a_"``/``"p_"``/``"r_"``/``"pb_"``).  Blocking
+    (``overlap=False``) is exactly the pre-split apply: assemble the whole
+    window, one apply over all rows — bitwise the historical jaxpr.
+    Overlapped: issue the exchange, contract the full slab against the
+    rank's own vector while it flies, finish the window, contract it
+    again off the window, select per row (interior rows keep the
+    exchange-free lane, boundary rows the windowed one).
+    Halos that move no bytes (``local``/``replicated``) have nothing to
+    hide and always take the blocking rendering.
+    """
+    idx = a[pre + "idx"]
+    if not overlap or op.halo.strategy in ("local", "replicated"):
+        return dist_ell_apply(idx, data, halo_window(x, op.halo),
+                              accum_dtype=accum)
+    pend = start_halo_exchange(x, op.halo)
+    y_int = dist_ell_apply_interior(a[pre + "loc"], data, x,
+                                    accum_dtype=accum)
+    win = finish_halo_exchange(pend)
+    y_bnd = dist_ell_apply_boundary(idx, data, win, accum_dtype=accum)
+    return combine_split(a[pre + "msk"], y_int, y_bnd)
 
 
 def _rank_smooth(dg: DistGAMG, spmv, st, b: Array, x: Array) -> Array:
@@ -768,18 +843,23 @@ def _boundary_restrict(dg: DistGAMG, r: Array) -> Array:
     return apply_ell_t(sw.p_g, sw.p_t, flat)
 
 
-def _boundary_prolong(dg: DistGAMG, a, xc: Array, accum=None) -> Array:
+def _boundary_prolong(dg: DistGAMG, a, xc: Array, overlap: bool,
+                      accum=None) -> Array:
     """Cross replicated->sharded: the boundary prolongator's plan indices
     address the replicated correction directly (``"replicated"`` halo), so
-    re-slicing the correction back into row slabs moves zero bytes.
+    re-slicing the correction back into row slabs moves zero bytes — the
+    split-apply router degenerates to the blocking rendering (nothing to
+    hide) and the jaxpr is the historical one under either knob value.
     ``a`` is the boundary level's sharded-args dict (``pb_idx``/``pb_data``
     are this rank's slab of the re-slicing prolongator)."""
     sw = dg.switch
     xcb = xc.reshape((sw.nbr_c, sw.bs_c) + xc.shape[1:])
-    return dist_ell_apply(a["pb_idx"], a["pb_data"], xcb, accum_dtype=accum)
+    return _rank_spmv(sw.p_b, a, "pb_", a["pb_data"], xcb, overlap,
+                      accum=accum)
 
 
-def _rank_vcycle(dg: DistGAMG, args, states, chol: Array, b: Array) -> Array:
+def _rank_vcycle(dg: DistGAMG, args, states, chol: Array, b: Array,
+                 overlap: bool) -> Array:
     """One V-cycle over the placed hierarchy (zero initial guess).
 
     Sharded levels run the slab recurrences with halo-window SpMVs;
@@ -802,7 +882,7 @@ def _rank_vcycle(dg: DistGAMG, args, states, chol: Array, b: Array) -> Array:
         st = states[li]
 
         def spmv_a(v, a=a, st=st, lv=lv):
-            return _rank_spmv(lv.a_op, a["a_idx"], st["a_data"], v,
+            return _rank_spmv(lv.a_op, a, "a_", st["a_data"], v, overlap,
                               accum=acc)
 
         x = _rank_smooth(dg, spmv_a, st, rhs, jnp.zeros_like(rhs))
@@ -812,7 +892,8 @@ def _rank_vcycle(dg: DistGAMG, args, states, chol: Array, b: Array) -> Array:
         if li == ns - 1 and dg.repl:
             rhs = _boundary_restrict(dg, r)
         else:
-            rhs = _rank_spmv(lv.r_op, a["r_idx"], a["r_data"], r, accum=acc)
+            rhs = _rank_spmv(lv.r_op, a, "r_", a["r_data"], r, overlap,
+                             accum=acc)
     if dg.repl:
         # replicated tail: the single-device V-cycle on global vectors
         for li in range(ns, ns + len(dg.repl)):
@@ -835,13 +916,13 @@ def _rank_vcycle(dg: DistGAMG, args, states, chol: Array, b: Array) -> Array:
         lv = dg.levels[li]
 
         def spmv_a(v, a=a, st=st, lv=lv):
-            return _rank_spmv(lv.a_op, a["a_idx"], st["a_data"], v,
+            return _rank_spmv(lv.a_op, a, "a_", st["a_data"], v, overlap,
                               accum=acc)
 
         if li == ns - 1 and dg.repl:
-            corr = _boundary_prolong(dg, a, xc, accum=acc)
+            corr = _boundary_prolong(dg, a, xc, overlap, accum=acc)
         else:
-            corr = _rank_spmv(lv.p_op, a["p_idx"], a["p_data"], xc,
+            corr = _rank_spmv(lv.p_op, a, "p_", a["p_data"], xc, overlap,
                               accum=acc)
         x = x_stack[li] + corr
         xc = _rank_smooth(dg, spmv_a, st, bs_stack[li], x)
@@ -849,7 +930,8 @@ def _rank_vcycle(dg: DistGAMG, args, states, chol: Array, b: Array) -> Array:
 
 
 def _rank_pcg(dg: DistGAMG, args, states, chol: Array, b: Array,
-              rtol: float, maxiter: int, stall_window: int = 40):
+              rtol: float, maxiter: int, overlap: bool = False,
+              stall_window: int = 40):
     """Distributed PCG — mirrors ``repro.core.krylov.pcg`` with psum dots.
 
     Under a mixed policy the operator uses level 0's krylov-dtype payload
@@ -870,10 +952,11 @@ def _rank_pcg(dg: DistGAMG, args, states, chol: Array, b: Array,
     a_data_kr = st0.get("a_data_kr", st0["a_data"])
 
     def apply_a(v):
-        return _rank_spmv(dg.levels[0].a_op, a0["a_idx"], a_data_kr, v)
+        return _rank_spmv(dg.levels[0].a_op, a0, "a_", a_data_kr, v,
+                          overlap)
 
     apply_m = wrap_precond(
-        lambda r: _rank_vcycle(dg, args, states, chol, r),
+        lambda r: _rank_vcycle(dg, args, states, chol, r, overlap),
         dg.precision.smoother_dtype, b.dtype)
 
     x = jnp.zeros_like(b)
@@ -939,7 +1022,7 @@ def _rank_pcg(dg: DistGAMG, args, states, chol: Array, b: Array,
 
 
 def _rank_block_pcg(dg: DistGAMG, args, states, chol: Array, b: Array,
-                    rtol: float, maxiter: int):
+                    rtol: float, maxiter: int, overlap: bool = False):
     """Distributed masked panel PCG over (rpad, bs, k) slabs.
 
     The recurrence body is ``repro.multirhs.block_krylov.block_pcg``
@@ -954,10 +1037,11 @@ def _rank_block_pcg(dg: DistGAMG, args, states, chol: Array, b: Array,
     a_data_kr = st0.get("a_data_kr", st0["a_data"])
 
     def apply_a(v):
-        return _rank_spmv(dg.levels[0].a_op, a0["a_idx"], a_data_kr, v)
+        return _rank_spmv(dg.levels[0].a_op, a0, "a_", a_data_kr, v,
+                          overlap)
 
     def apply_m(r):
-        return _rank_vcycle(dg, args, states, chol, r)
+        return _rank_vcycle(dg, args, states, chol, r, overlap)
 
     res = block_pcg(apply_a, apply_m, b, rtol=rtol, maxiter=maxiter,
                     col_dot=_pdot_cols, col_norm=_pnorm_cols,
@@ -994,14 +1078,17 @@ def make_dist_solver(dg: DistGAMG, setupd: GAMGSetup, mesh, *,
     del setupd  # structure is baked into dg; kept for call-site symmetry
 
     def rank_fn(args, a0, b):
+        # consumed at trace time, like the kernel path knobs: every rank
+        # traces the same Python, so the schedule choice is collective-safe
+        overlap = resolve_overlap() == "on"
         args, a0, b = jax.tree.map(lambda t: t[0], (args, a0, b))
         # metadata-only spans: identical on every rank, collective-safe
         with obs_trace.span("dist/recompute"):
-            states, chol = _rank_recompute(dg, args, a0)
+            states, chol = _rank_recompute(dg, args, a0, overlap)
         run_pcg = _rank_block_pcg if b.ndim == 3 else _rank_pcg
         with obs_trace.span("dist/pcg"):
             x, k, relres, ok, status = run_pcg(dg, args, states, chol, b,
-                                               rtol, maxiter)
+                                               rtol, maxiter, overlap)
         return (x[None], k[None], relres[None], ok[None], status[None])
 
     sharded = shard_map(rank_fn, mesh, in_specs=(P(AXIS), P(AXIS), P(AXIS)),
@@ -1024,16 +1111,17 @@ def make_dist_coeff_solver(dg: DistGAMG, da: DistAssembly, mesh, *,
     """
 
     def rank_fn(args, aargs, E, nu, b):
+        overlap = resolve_overlap() == "on"
         args, aargs, E, nu, b = jax.tree.map(
             lambda t: t[0], (args, aargs, E, nu, b))
         with obs_trace.span("dist/assemble"):
             a_slab = _rank_assemble(da, aargs, E, nu)
         with obs_trace.span("dist/recompute"):
-            states, chol = _rank_recompute(dg, args, a_slab)
+            states, chol = _rank_recompute(dg, args, a_slab, overlap)
         run_pcg = _rank_block_pcg if b.ndim == 3 else _rank_pcg
         with obs_trace.span("dist/pcg"):
             x, k, relres, ok, status = run_pcg(dg, args, states, chol, b,
-                                               rtol, maxiter)
+                                               rtol, maxiter, overlap)
         return (x[None], k[None], relres[None], ok[None], status[None])
 
     sharded = shard_map(rank_fn, mesh, in_specs=(P(AXIS),) * 5,

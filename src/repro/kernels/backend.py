@@ -48,6 +48,12 @@ interpreter.  This module centralizes the decision:
                            tiles when present, static defaults otherwise
                            ("off" is bitwise the pre-tune behaviour;
                            "sweep" measures and records on cache miss).
+* ``resolve_overlap``    — distributed halo-exchange schedule
+                           (``repro.dist``): ``None`` falls back to
+                           ``REPRO_OVERLAP`` ("on" | "off"), default
+                           "on" — split interior/boundary apply with the
+                           exchange in flight; "off" is bitwise the
+                           blocking pre-split path.
 
 Every front door (``spmv``, ``spgemm_numeric_data``, ``set_values_coo``)
 accepts ``None`` for these knobs and resolves them here, so the same call
@@ -204,6 +210,36 @@ def resolve_tune(mode: str | None = None) -> str:
     raise ValueError(
         f"invalid autotune mode {mode!r}: expected 'off', 'cache' or "
         f"'sweep' (from REPRO_TUNE or the mode= knob)")
+
+
+def resolve_overlap(mode: str | None = None) -> str:
+    """Distributed halo-exchange overlap mode; honours ``REPRO_OVERLAP``.
+
+    "on"        (default) split apply: start the halo ``ppermute``s, run
+                  the interior rows (no communication) while they fly,
+                  finish the window, run the boundary rows.  Same per-row
+                  summation order as blocking, so solutions are bitwise
+                  identical — only the op *schedule* differs.
+    "off"       — the blocking pre-refactor path: assemble the whole
+                  window first, then one apply over all rows.  Bitwise
+                  the pre-split jaxpr (zero residue).
+
+    Re-read per call; consumed at *trace* time when the dist solver is
+    staged, so it must be set before ``make_dist_solver``.  Invalid
+    values raise ``ValueError``.
+    """
+    if mode is None:
+        mode = os.environ.get("REPRO_OVERLAP")
+    if mode is None:
+        return "on"
+    key = str(mode).strip().lower()
+    if key in ("", "0", "off", "false", "blocking"):
+        return "off"
+    if key in ("on", "1", "true", "overlap"):
+        return "on"
+    raise ValueError(
+        f"invalid overlap mode {mode!r}: expected 'on' or 'off' "
+        f"(from REPRO_OVERLAP or the overlap= knob)")
 
 
 def resolve_precision(precision=None):

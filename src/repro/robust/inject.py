@@ -15,8 +15,12 @@ Sites (each hot loop calls ``maybe(site, x, ...)`` at these points):
 ``"coarse"``   coarse-level direct-solve output inside the V-cycle
 ``"hierarchy"``level operator payloads inside ``gamg.recompute``
                (level-gated; the coarsest payload is level ``n_levels-1``)
-``"halo"``     dist halo-exchange windows (``repro.dist.pamg.halo_window``
-               ppermute/allgather results; fires on every exchange)
+``"halo"``     dist halo-exchange windows — the site lives in
+               ``repro.dist.pamg.finish_halo_exchange`` on the *assembled*
+               ppermute/allgather window, so it fires identically on the
+               blocking path (``halo_window``) and on the overlapped split
+               path (where the corrupted window feeds
+               ``dist_ell_apply_boundary``); fires on every exchange
 =============  ============================================================
 
 Zero-overhead contract: with no schedule installed, ``maybe`` returns its

@@ -1,0 +1,100 @@
+"""Host-only unit tests of the mesh/partition layer (no devices).
+
+``repro.dist.partition`` is pure numpy staging, so these run in-process;
+the validation contract is ``ValueError`` — never ``assert`` — so every
+check here must still fire under ``python -O``.
+"""
+import numpy as np
+import pytest
+
+from repro.dist.partition import (
+    ProcessMesh,
+    as_mesh,
+    partition_padded,
+    partition_rows,
+)
+
+
+def test_partition_rows_balance_and_lookup():
+    part = partition_rows(10, 3)
+    assert part.ndev == 3 and part.nrows == 10
+    assert list(part.counts) == [4, 3, 3]        # max - min <= 1
+    assert part.max_count == 4
+    assert list(part.owner_of([0, 3, 4, 9])) == [0, 0, 1, 2]
+    assert list(part.local_of([0, 3, 4, 9])) == [0, 3, 0, 2]
+    assert part.slab(1) == slice(4, 7)
+
+
+def test_partition_rows_validation():
+    with pytest.raises(ValueError, match="at least one rank"):
+        partition_rows(10, 0)
+    with pytest.raises(ValueError, match="at least one rank"):
+        partition_rows(10, -2)
+    with pytest.raises(ValueError, match="negative row count"):
+        partition_rows(-1, 2)
+    assert partition_rows(0, 2).nrows == 0       # empty is fine
+
+
+def test_partition_padded_divisibility():
+    assert list(partition_padded(8, 2).counts) == [4, 4]
+    with pytest.raises(ValueError, match="does not divide"):
+        partition_padded(9, 2)
+    with pytest.raises(ValueError, match="at least one rank"):
+        partition_padded(8, 0)
+
+
+def test_process_mesh_shapes():
+    m1 = ProcessMesh((4,))
+    assert (m1.pr, m1.pc, m1.ndev) == (4, 1, 4)
+    m2 = ProcessMesh((2, 32))
+    assert (m2.pr, m2.pc, m2.ndev) == (2, 32, 64)
+    # numpy ints coerce; the stored shape is plain ints
+    m3 = ProcessMesh((np.int64(3), np.int64(2)))
+    assert m3.shape == (3, 2)
+
+
+def test_process_mesh_validation():
+    with pytest.raises(ValueError, match="must be positive"):
+        ProcessMesh((0,))
+    with pytest.raises(ValueError, match="must be positive"):
+        ProcessMesh((2, 0))
+    with pytest.raises(ValueError, match=r"\(ndev,\) or \(pr, pc\)"):
+        ProcessMesh((2, 2, 2))
+    with pytest.raises(ValueError, match="tuple of ints"):
+        ProcessMesh(3)          # an int is not a shape
+
+
+def test_process_mesh_row_partition():
+    mesh = ProcessMesh((2, 4))
+    part = mesh.row_partition(5)
+    assert part.ndev == 2 and part.nrows == 5    # rows follow pr only
+    with pytest.raises(ValueError, match="larger than the block-row"):
+        ProcessMesh((8, 1)).row_partition(5)
+    # an empty operator partitions trivially on any mesh
+    assert ProcessMesh((8, 1)).row_partition(0).nrows == 0
+
+
+def test_as_mesh_coercion():
+    assert as_mesh(3).shape == (3,)
+    assert as_mesh(np.int32(2)).shape == (2,)
+    mesh = ProcessMesh((2, 2))
+    assert as_mesh(mesh) is mesh
+    with pytest.raises(ValueError, match="int rank count or a ProcessMesh"):
+        as_mesh("4")
+    with pytest.raises(ValueError, match="int rank count or a ProcessMesh"):
+        as_mesh((2, 2))          # a bare tuple must be wrapped explicitly
+
+
+def test_build_dist_gamg_rejects_oversized_mesh():
+    """The front door routes through row_partition's validation."""
+    from repro.core import gamg
+    from repro.dist.solver import build_dist_gamg
+    from repro.fem.assemble import assemble_elasticity
+
+    prob = assemble_elasticity(4)
+    setupd = gamg.setup(prob.A, prob.B, coarse_size=12, precision="f64")
+    nbr = setupd.levels[0].A0.nbr
+    with pytest.raises(ValueError, match="larger than the block-row"):
+        build_dist_gamg(setupd, ProcessMesh((nbr + 1, 1)))
+    with pytest.raises(ValueError, match="int rank count or a ProcessMesh"):
+        build_dist_gamg(setupd, 2.0)
