@@ -1,0 +1,49 @@
+"""Table 8 (new workload): the device-resident quasi-static time march —
+per-step cost of the three re-coarsening policies on the softening
+scenario (``repro.sim``).
+
+The reuse story end to end: ``frozen`` never re-coarsens (one setup, the
+whole march one traced scan, cheapest per step but its CG counts drift
+up as the prolongator goes stale), ``resetup`` rebuilds the hierarchy
+before every step (the accuracy baseline, setup-dominated), and
+``adaptive`` lets the device-side staleness monitor cut frozen segments
+only when the hierarchy has measurably degraded — the policy the
+acceptance test pins as fewest total CG iterations per setup.
+
+Rows (CSV ``name,us_per_call,derived``):
+
+* ``t8.<mode>.m<m>``   wall microseconds per march step (one full run,
+  setups + solves amortized over the steps), with
+  ``steps=...;iters=...;setups=...;recoveries=...;status=...`` derived.
+"""
+from __future__ import annotations
+
+import time
+
+import repro.core  # noqa: F401
+from repro.fem.assemble import assemble_elasticity
+from repro.sim import MarchConfig, SofteningScenario, StalenessConfig, march
+
+from benchmarks.common import emit
+
+SETUP_OPTS = {"coarse_size": 8}
+
+
+def run(m: int = 5, n_steps: int = 8) -> None:
+    prob = assemble_elasticity(m)
+    scen = SofteningScenario.build(prob, rate=0.25, d_max=0.99)
+    cfg = MarchConfig(n_steps=n_steps, seg_len=8, rtol=1e-8, maxiter=400,
+                      staleness=StalenessConfig(iter_drift=2, ref_window=2,
+                                                coeff_rtol=0.25))
+    for mode in ("frozen", "adaptive", "resetup"):
+        t0 = time.perf_counter()
+        res = march(prob, scen, cfg, mode=mode, setup_opts=SETUP_OPTS)
+        dt = time.perf_counter() - t0
+        emit(f"t8.{mode}.m{m}", dt * 1e6 / max(res.steps_done, 1),
+             f"steps={res.steps_done};iters={res.total_iters};"
+             f"setups={res.n_setups};recoveries={res.n_recoveries};"
+             f"status={res.status}")
+
+
+if __name__ == "__main__":
+    run()

@@ -383,9 +383,39 @@ def make_coeff_recompute(setupd: GAMGSetup, assembler):
     return jax.jit(coeff_recompute)
 
 
+def hier_solve(setupd: GAMGSetup, hier: Hierarchy, b: Array,
+               x0: "Array | None" = None, *, rtol: float = 1e-8,
+               maxiter: int = 200) -> CGResult:
+    """Traceable AMG-PCG solve on a hierarchy — the body ``make_solve``
+    jits, exposed unjitted so larger device programs can compose it (the
+    ``repro.sim`` march fuses it with assembly + recompute inside one
+    ``lax.scan`` segment).
+
+    ``x0`` warm-starts CG from a prior iterate (``None`` = cold zero
+    start) — the time-march knob: consecutive quasi-static steps solve
+    nearby systems, so seeding with the previous step's solution starts
+    from a small residual and saves iterations (``pcg`` docstring).
+    """
+    def apply_a(x):
+        return spmv_ell(fine_operator(hier), x)
+
+    def apply_m(r):
+        return vcycle(hier, r, smoother=setupd.smoother,
+                      degree=setupd.degree)
+
+    return pcg(apply_a, apply_m, b, x0=x0, rtol=rtol, maxiter=maxiter,
+               precond_dtype=setupd.precision.smoother_dtype)
+
+
 def make_solve(setupd: GAMGSetup, rtol: float = 1e-8, maxiter: int = 200,
                obs=None):
     """Jitted hot KSPSolve: AMG-preconditioned CG on a Hierarchy pytree.
+
+    The jitted closure's optional third argument warm-starts the solve:
+    ``solve(hier, b, x0)`` seeds CG with a prior iterate (a previous
+    time/Newton step's solution), ``solve(hier, b)`` is the cold start
+    and stays bitwise the pre-warm-start closure (one jit cache entry
+    per calling form).
 
     The outer CG runs at the policy's ``krylov_dtype`` (the dtype of
     ``b`` / the ``fine_operator`` copy); the V-cycle preconditioner runs
@@ -412,27 +442,54 @@ def make_solve(setupd: GAMGSetup, rtol: float = 1e-8, maxiter: int = 200,
         n_levels = setupd.n_levels
 
     @partial(jax.jit, static_argnames=())
-    def solve(hier: Hierarchy, b: Array) -> CGResult:
-        def apply_a(x):
-            return spmv_ell(fine_operator(hier), x)
-
+    def solve(hier: Hierarchy, b: Array,
+              x0: "Array | None" = None) -> CGResult:
         if counted:
+            def apply_a(x):
+                return spmv_ell(fine_operator(hier), x)
+
             def apply_m(r, tl):
                 return vcycle(hier, r, smoother=smoother, degree=degree,
                               tally=tl)
-            res = pcg(apply_a, apply_m, b, rtol=rtol, maxiter=maxiter,
-                      precond_dtype=precond_dtype,
+            res = pcg(apply_a, apply_m, b, x0=x0, rtol=rtol,
+                      maxiter=maxiter, precond_dtype=precond_dtype,
                       tally=obs_trace.zero_tally(n_levels))
             return res._replace(counters=obs_trace.attach_model_bytes(
                 res.counters, cycle_bytes))
 
-        def apply_m(r):
-            return vcycle(hier, r, smoother=smoother, degree=degree)
-
-        return pcg(apply_a, apply_m, b, rtol=rtol, maxiter=maxiter,
-                   precond_dtype=precond_dtype)
+        return hier_solve(setupd, hier, b, x0, rtol=rtol,
+                          maxiter=maxiter)
 
     return solve
+
+
+def make_coeff_solve(setupd: GAMGSetup, assembler, rtol: float = 1e-8,
+                     maxiter: int = 200):
+    """Jitted fused march step: ``(E, nu, b, x0) -> CGResult``.
+
+    The segmented march's per-step primitive — device FEM assembly
+    (``DeviceAssembler.coo_data``), the state-gated PtAP recompute and
+    the warm-started AMG-PCG solve in ONE traced program with zero host
+    transfers.  ``x0`` is the previous step's iterate (pass
+    ``jnp.zeros_like(b)`` for a cold start — the signature keeps it
+    positional so the jit cache stays at one entry across the march).
+    The fully-fused scan/while segments (scenario law + staleness
+    monitor riding along) live in ``repro.sim.driver``.
+    """
+    nnzb = setupd.levels[0].A0.nnzb if setupd.levels \
+        else setupd.coarse_struct.nnzb
+    if assembler.plan.nnzb != nnzb:
+        raise ValueError(
+            f"assembler plan does not match the setup's fine operator: "
+            f"plan has {assembler.plan.nnzb} output blocks, the fine "
+            f"level has {nnzb}")
+
+    def coeff_solve(E, nu, b, x0):
+        hier = recompute(setupd, assembler.coo_data(E, nu))
+        return hier_solve(setupd, hier, b, x0, rtol=rtol,
+                          maxiter=maxiter)
+
+    return jax.jit(coeff_solve)
 
 
 # ---------------------------------------------------------------------------
@@ -480,12 +537,18 @@ class GAMGSolver:
         self.hierarchy = self._coeff_recompute(E, nu)
         self.n_recomputes += 1
 
-    def solve(self, b: Array) -> CGResult:
-        return self._solve(self.hierarchy, b)
+    def solve(self, b: Array, x0: "Array | None" = None) -> CGResult:
+        """Solve; ``x0`` warm-starts CG from a prior iterate (the
+        time-march knob — pass the previous step's solution).  The cold
+        form keeps its own single jit cache entry."""
+        if x0 is None:
+            return self._solve(self.hierarchy, b)
+        return self._solve(self.hierarchy, b, x0)
 
-    def solve_many(self, B: Array):
+    def solve_many(self, B: Array, x0: "Array | None" = None):
         """Panel solve: ``B (n, k)`` -> ``BlockCGResult`` (per-column
-        masked PCG, one operator stream for all k columns).
+        masked PCG, one operator stream for all k columns).  ``x0``
+        warm-starts every column from a prior ``(n, k)`` iterate panel.
 
         Retraces once per distinct k — stream workloads should go through
         ``repro.multirhs.AMGSolveServer``, which buckets k statically.
@@ -494,4 +557,16 @@ class GAMGSolver:
             from repro.multirhs.block_krylov import make_block_solve
             self._solve_many = make_block_solve(self.setup_data,
                                                 **self._solve_opts)
-        return self._solve_many(self.hierarchy, B)
+        if x0 is None:
+            return self._solve_many(self.hierarchy, B)
+        return self._solve_many(self.hierarchy, B, x0)
+
+    def march(self, prob, scenario, cfg, **kw):
+        """Front door to the device-resident time march
+        (``repro.sim.driver.march``): quasi-static coefficient evolution
+        through fused assembly + recompute + warm-started solve steps,
+        with adaptive re-coarsening at staleness boundaries.  ``prob``
+        must be the assembled problem this solver was built from."""
+        from repro.sim.driver import march as _march
+        kw.setdefault("setup_opts", {})
+        return _march(prob, scenario, cfg, **kw)

@@ -68,6 +68,15 @@ def pcg(apply_a: Callable[[Array], Array],
         precond_dtype=None, stall_window: int = 40, tally=None):
     """Standard PCG; fixed SPD preconditioner (one AMG V-cycle).
 
+    ``x0`` warm-starts the iteration from a prior iterate (``None`` is
+    the cold zero start, bitwise the classic recurrence).  CG's theory
+    is start-agnostic — only the initial residual ``b - A x0`` matters —
+    so a good seed (the previous quasi-static/Newton step's solution,
+    threaded by the ``repro.sim`` march) begins within a few digits of
+    the tolerance and converges in a fraction of the cold count.  An
+    exact-solution seed reports ``iters=0, converged=True``: the
+    pre-loop residual check is the same monitor the loop uses.
+
     ``record_history=True`` (a static, trace-time switch — the default
     jitted hot path is unchanged) additionally returns the per-iteration
     unpreconditioned residual-norm trace as a fixed-size ``(maxiter,)``

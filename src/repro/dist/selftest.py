@@ -46,6 +46,14 @@ Checks, on an m^3 Q1 elasticity problem:
     (two-material inclusion) problem — same iteration count, allclose
     solution — with zero retraces across repeated updates
     (``_cache_size() == 1``, including an f32-typed caller).
+  * with ``REPRO_SELFTEST_MARCH=1``: the **warm-started time march over
+    the wire** — a 3-step softening-coefficient march through the
+    ``warm_start=True`` dist coefficient program (each step's x-output
+    slab fed straight back as the next step's x0 slab, no gather/scatter
+    round trip) matches the single-device fused march primitive
+    (``gamg.make_coeff_solve``) step for step — same iteration counts,
+    allclose solutions — with one compiled program for the whole march
+    and the warm final step no slower than a cold re-solve.
   * with ``REPRO_SELFTEST_OVERLAP=1``: the **overlap schedule parity** —
     the ``REPRO_OVERLAP=on`` split apply (interior rows while the
     exchange flies, boundary rows off the finished window) solves in
@@ -290,6 +298,64 @@ def main(m: int) -> int:
         assert run_c._cache_size() == 1, run_c._cache_size()
         print(f"coefficient hot-loop parity: iters={int(itc[0])} "
               f"(assembled rank-locally, no retrace)")
+
+    if os.environ.get("REPRO_SELFTEST_MARCH") == "1":
+        # warm-started coefficient time march over the wire: the same
+        # softening trajectory stepped by (a) the single-device fused
+        # march primitive (gamg.make_coeff_solve) and (b) the
+        # warm_start=True dist coefficient program, whose x output slab
+        # feeds straight back in as the next step's x0 slab — no
+        # gather/scatter round trip, the slab-sharded twin of the
+        # repro.sim march step.  Per-step iteration parity + allclose.
+        from repro.dist.solver import build_dist_assembly, \
+            make_dist_coeff_solver
+        from repro.robust.health import HEALTHY
+        from repro.sim.scenarios import SofteningScenario
+        assert prob.assembler is not None
+        da_m = build_dist_assembly(dg, prob.assembler)
+        run_cm = make_dist_coeff_solver(dg, da_m, mesh, rtol=1e-8,
+                                        maxiter=200, warm_start=True)
+        aargs_m = da_m.sharded_args()
+        coeff_solve = gamg.make_coeff_solve(setupd, prob.assembler,
+                                            rtol=1e-8, maxiter=200)
+        scen = SofteningScenario.build(prob, rate=0.3)
+        state = scen.init_state()
+        x_ref = jax.numpy.zeros_like(prob.b)
+        # commit the cold x0 slab to the program's output sharding so the
+        # warm feedback (x output slab -> next x0 slab) never retraces
+        from jax.sharding import NamedSharding, PartitionSpec
+        x_slab = jax.device_put(
+            np.asarray(dg.scatter_vector(np.zeros(prob.n))),
+            NamedSharding(mesh, PartitionSpec("rank")))
+        march_iters = []
+        for s in range(3):
+            E_s, nu_s, state = scen.step_fields(
+                state, x_ref, jax.numpy.asarray(s, jax.numpy.int32))
+            res_s = jax.block_until_ready(
+                coeff_solve(E_s, nu_s, prob.b, x_ref))
+            xm2, itm2, rrm2, okm2, stm2 = jax.block_until_ready(
+                run_cm(args, aargs_m, *da_m.scatter_fields(E_s, nu_s),
+                       b, x_slab))
+            assert int(np.asarray(stm2)[0]) == HEALTHY, stm2
+            assert bool(okm2[0]), (itm2, rrm2)
+            assert int(itm2[0]) == int(res_s.iters), \
+                f"march step {s}: dist={int(itm2[0])} " \
+                f"single={int(res_s.iters)}"
+            np.testing.assert_allclose(dg.gather_vector(xm2),
+                                       np.asarray(res_s.x), rtol=1e-6,
+                                       atol=1e-9)
+            march_iters.append(int(itm2[0]))
+            x_ref, x_slab = res_s.x, xm2
+        # warm start earns its keep: the last step re-solved cold needs
+        # at least as many iterations as the warm dist step took
+        res_cold = coeff_solve(E_s, nu_s, prob.b,
+                               jax.numpy.zeros_like(prob.b))
+        assert march_iters[-1] <= int(res_cold.iters), \
+            (march_iters, int(res_cold.iters))
+        # one compiled program serves the whole warm march
+        assert run_cm._cache_size() == 1, run_cm._cache_size()
+        print(f"dist warm march parity (3 steps): iters={march_iters} "
+              f"(cold last step: {int(res_cold.iters)})")
 
     if os.environ.get("REPRO_SELFTEST_FAULT") == "1":
         # fault battery over the wire.  The schedule must be live while

@@ -931,8 +931,12 @@ def _rank_vcycle(dg: DistGAMG, args, states, chol: Array, b: Array,
 
 def _rank_pcg(dg: DistGAMG, args, states, chol: Array, b: Array,
               rtol: float, maxiter: int, overlap: bool = False,
-              stall_window: int = 40):
+              stall_window: int = 40, x0: Array | None = None):
     """Distributed PCG — mirrors ``repro.core.krylov.pcg`` with psum dots.
+
+    ``x0`` warm-starts from a prior iterate slab (``None`` = cold zero
+    start, bitwise the classic recurrence) — the same contract as
+    ``pcg(x0=...)``, threaded per rank by the warm dist march.
 
     Under a mixed policy the operator uses level 0's krylov-dtype payload
     copy and the V-cycle runs at the smoother dtype behind the same
@@ -959,7 +963,7 @@ def _rank_pcg(dg: DistGAMG, args, states, chol: Array, b: Array,
         lambda r: _rank_vcycle(dg, args, states, chol, r, overlap),
         dg.precision.smoother_dtype, b.dtype)
 
-    x = jnp.zeros_like(b)
+    x = jnp.zeros_like(b) if x0 is None else x0
     r = b - apply_a(x)
     z = apply_m(r)
     p = z
@@ -1022,7 +1026,8 @@ def _rank_pcg(dg: DistGAMG, args, states, chol: Array, b: Array,
 
 
 def _rank_block_pcg(dg: DistGAMG, args, states, chol: Array, b: Array,
-                    rtol: float, maxiter: int, overlap: bool = False):
+                    rtol: float, maxiter: int, overlap: bool = False,
+                    stall_window: int = 40, x0: Array | None = None):
     """Distributed masked panel PCG over (rpad, bs, k) slabs.
 
     The recurrence body is ``repro.multirhs.block_krylov.block_pcg``
@@ -1043,9 +1048,10 @@ def _rank_block_pcg(dg: DistGAMG, args, states, chol: Array, b: Array,
     def apply_m(r):
         return _rank_vcycle(dg, args, states, chol, r, overlap)
 
-    res = block_pcg(apply_a, apply_m, b, rtol=rtol, maxiter=maxiter,
+    res = block_pcg(apply_a, apply_m, b, x0=x0, rtol=rtol, maxiter=maxiter,
                     col_dot=_pdot_cols, col_norm=_pnorm_cols,
-                    precond_dtype=dg.precision.smoother_dtype)
+                    precond_dtype=dg.precision.smoother_dtype,
+                    stall_window=stall_window)
     return res.x, res.iters, res.relres, res.converged, res.health.status
 
 
@@ -1054,9 +1060,16 @@ def _rank_block_pcg(dg: DistGAMG, args, states, chol: Array, b: Array,
 # ---------------------------------------------------------------------------
 
 def make_dist_solver(dg: DistGAMG, setupd: GAMGSetup, mesh, *,
-                     rtol: float = 1e-8, maxiter: int = 200):
+                     rtol: float = 1e-8, maxiter: int = 200,
+                     warm_start: bool = False):
     """Jitted distributed hot path:
     ``(args, a0, b) -> (x, iters, relres, ok, status)``.
+
+    ``warm_start=True`` is a *build-time* knob that adds a trailing
+    ``x0`` slab input (scattered like ``b``) to the signature —
+    ``(args, a0, b, x0)`` — warm-starting each rank's CG from the prior
+    iterate, the distributed twin of ``pcg(x0=...)``.  The default
+    signature and its traced program are unchanged.
 
     ``args`` from ``dg.sharded_args``, ``a0`` from
     ``dg.scatter_fine_payloads`` (new fine operator values — the Newton
@@ -1077,27 +1090,40 @@ def make_dist_solver(dg: DistGAMG, setupd: GAMGSetup, mesh, *,
     """
     del setupd  # structure is baked into dg; kept for call-site symmetry
 
-    def rank_fn(args, a0, b):
+    def rank_body(args, a0, b, x0):
         # consumed at trace time, like the kernel path knobs: every rank
         # traces the same Python, so the schedule choice is collective-safe
         overlap = resolve_overlap() == "on"
-        args, a0, b = jax.tree.map(lambda t: t[0], (args, a0, b))
         # metadata-only spans: identical on every rank, collective-safe
         with obs_trace.span("dist/recompute"):
             states, chol = _rank_recompute(dg, args, a0, overlap)
         run_pcg = _rank_block_pcg if b.ndim == 3 else _rank_pcg
         with obs_trace.span("dist/pcg"):
             x, k, relres, ok, status = run_pcg(dg, args, states, chol, b,
-                                               rtol, maxiter, overlap)
+                                               rtol, maxiter, overlap,
+                                               x0=x0)
         return (x[None], k[None], relres[None], ok[None], status[None])
 
-    sharded = shard_map(rank_fn, mesh, in_specs=(P(AXIS), P(AXIS), P(AXIS)),
+    if warm_start:
+        def rank_fn(args, a0, b, x0):
+            args, a0, b, x0 = jax.tree.map(
+                lambda t: t[0], (args, a0, b, x0))
+            return rank_body(args, a0, b, x0)
+        in_specs = (P(AXIS),) * 4
+    else:
+        def rank_fn(args, a0, b):
+            args, a0, b = jax.tree.map(lambda t: t[0], (args, a0, b))
+            return rank_body(args, a0, b, None)
+        in_specs = (P(AXIS),) * 3
+
+    sharded = shard_map(rank_fn, mesh, in_specs=in_specs,
                         out_specs=P(AXIS), check_rep=False)
     return _with_rank0_span(jax.jit(sharded), "dist/solve")
 
 
 def make_dist_coeff_solver(dg: DistGAMG, da: DistAssembly, mesh, *,
-                           rtol: float = 1e-8, maxiter: int = 200):
+                           rtol: float = 1e-8, maxiter: int = 200,
+                           warm_start: bool = False):
     """Jitted distributed *coefficient* hot path:
     ``(args, aargs, E, nu, b) -> (x, iters, relres, ok, status)``.
 
@@ -1108,12 +1134,16 @@ def make_dist_coeff_solver(dg: DistGAMG, da: DistAssembly, mesh, *,
     the distributed twin of ``gamg.make_coeff_recompute``.  ``aargs``
     from ``da.sharded_args()``; everything else as ``make_dist_solver``
     (panel ``b`` supported the same way).
+
+    ``warm_start=True`` (build-time) appends an ``x0`` slab input —
+    ``(args, aargs, E, nu, b, x0)`` — so a time march can feed each
+    rank's previous iterate straight back in: the slab-sharded twin of
+    the ``repro.sim`` march step, exercised by the
+    ``REPRO_SELFTEST_MARCH`` selftest section.
     """
 
-    def rank_fn(args, aargs, E, nu, b):
+    def rank_body(args, aargs, E, nu, b, x0):
         overlap = resolve_overlap() == "on"
-        args, aargs, E, nu, b = jax.tree.map(
-            lambda t: t[0], (args, aargs, E, nu, b))
         with obs_trace.span("dist/assemble"):
             a_slab = _rank_assemble(da, aargs, E, nu)
         with obs_trace.span("dist/recompute"):
@@ -1121,10 +1151,24 @@ def make_dist_coeff_solver(dg: DistGAMG, da: DistAssembly, mesh, *,
         run_pcg = _rank_block_pcg if b.ndim == 3 else _rank_pcg
         with obs_trace.span("dist/pcg"):
             x, k, relres, ok, status = run_pcg(dg, args, states, chol, b,
-                                               rtol, maxiter, overlap)
+                                               rtol, maxiter, overlap,
+                                               x0=x0)
         return (x[None], k[None], relres[None], ok[None], status[None])
 
-    sharded = shard_map(rank_fn, mesh, in_specs=(P(AXIS),) * 5,
+    if warm_start:
+        def rank_fn(args, aargs, E, nu, b, x0):
+            args, aargs, E, nu, b, x0 = jax.tree.map(
+                lambda t: t[0], (args, aargs, E, nu, b, x0))
+            return rank_body(args, aargs, E, nu, b, x0)
+        in_specs = (P(AXIS),) * 6
+    else:
+        def rank_fn(args, aargs, E, nu, b):
+            args, aargs, E, nu, b = jax.tree.map(
+                lambda t: t[0], (args, aargs, E, nu, b))
+            return rank_body(args, aargs, E, nu, b, None)
+        in_specs = (P(AXIS),) * 5
+
+    sharded = shard_map(rank_fn, mesh, in_specs=in_specs,
                         out_specs=P(AXIS), check_rep=False)
     return _with_rank0_span(jax.jit(sharded), "dist/coeff_solve")
 

@@ -69,6 +69,11 @@ def block_pcg(apply_a: Callable[[Array], Array],
               record_history: bool = False, tally=None):
     """PCG on a panel ``B: (..., k)`` with per-column masking.
 
+    ``x0`` warm-starts every column from a prior ``(..., k)`` iterate
+    panel (``None`` = cold zero start, bitwise unchanged); a column
+    seeded within tolerance is inactive from iteration 0 — the same
+    contract as ``core.krylov.pcg``'s warm start, column-wise.
+
     A column is *active* while its residual exceeds ``rtol * ||b_col||``
     and no health flag has tripped; frozen columns receive zero updates
     (``alpha = 0``) and keep their CG state, so the surviving columns'
@@ -230,6 +235,11 @@ def make_block_solve(setupd, rtol: float = 1e-8, maxiter: int = 200,
     once per distinct k; the solve server buckets request streams to a
     static k set precisely so this cache stays small.
 
+    ``solve(hier, B, x0)`` warm-starts every column from a prior
+    ``(n, k)`` iterate panel (the time-march knob — see
+    ``core.krylov.pcg``); the two-argument cold form stays bitwise the
+    pre-warm-start closure with its own single cache entry.
+
     The observability mode (``obs=`` > ``use`` scope > ``REPRO_OBS``) is
     resolved *here*, at closure-build time — matching the knob's
     trace-time contract.  Under ``"counters"`` the panel threads a
@@ -248,7 +258,7 @@ def make_block_solve(setupd, rtol: float = 1e-8, maxiter: int = 200,
         n_levels = setupd.n_levels
 
     @partial(jax.jit, static_argnames=())
-    def solve(hier: Hierarchy, B: Array):
+    def solve(hier: Hierarchy, B: Array, x0: "Array | None" = None):
         def apply_a(X):
             return apply_ell(fine_operator(hier), X)
 
@@ -262,8 +272,8 @@ def make_block_solve(setupd, rtol: float = 1e-8, maxiter: int = 200,
                 return vcycle(hier, R, smoother=smoother, degree=degree)
             tally = None
 
-        out = block_pcg(apply_a, apply_m, B, rtol=rtol, maxiter=maxiter,
-                        precond_dtype=precond_dtype,
+        out = block_pcg(apply_a, apply_m, B, x0=x0, rtol=rtol,
+                        maxiter=maxiter, precond_dtype=precond_dtype,
                         record_history=record_history, tally=tally)
         if counted:
             res, hist = out if record_history else (out, None)

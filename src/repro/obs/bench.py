@@ -41,6 +41,7 @@ TABLES: Dict[str, dict] = {
     "table5_traffic": {"ladder": (5, 6)},
     "table6_multirhs": {"m": 5, "ks": (1, 2, 4)},
     "table7_assembly": {"m": 5},
+    "table8_march": {"m": 4, "n_steps": 3},
 }
 
 DEFAULT_BASELINE_DIR = os.path.join("benchmarks", "baselines")

@@ -90,6 +90,35 @@ def describe(health: SolveHealth) -> str:
                     for n, b in zip(names, best))
 
 
+def worst_status(statuses) -> Array:
+    """Fold many status codes into one — the march-level aggregate.
+
+    The codes are *numerically ordered by severity* (``NONFINITE`` >
+    ``BREAKDOWN`` > ``STAGNATION`` > ``MAXITER`` > ``HEALTHY``), so the
+    worst status over a march's steps — or a panel's columns, or a
+    fleet of segments — is a plain ``max``.  Works on device arrays
+    (jittable, e.g. over a ``StepRecord.status`` buffer) and on host
+    numpy alike.
+    """
+    return jnp.max(jnp.asarray(statuses, jnp.int32))
+
+
+def summarize_statuses(statuses) -> dict:
+    """Host-side march summary: ``{status_name: count}`` over the steps
+    (only names that occur), plus ``"worst"`` — what the march driver
+    logs and the battery asserts on.  Syncs; not for the hot loop.
+    """
+    import numpy as np
+    codes = np.asarray(statuses).reshape(-1).astype(np.int64)
+    out = {}
+    for code in np.unique(codes):
+        name = STATUS_NAMES.get(int(code), f"?{int(code)}")
+        out[name] = int((codes == code).sum())
+    out["worst"] = STATUS_NAMES.get(
+        int(codes.max()) if codes.size else HEALTHY, "?")
+    return out
+
+
 def hierarchy_finite(hier) -> Array:
     """Device bool: every floating payload of a hierarchy pytree is finite.
 

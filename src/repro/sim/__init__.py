@@ -1,0 +1,36 @@
+"""Device-resident quasi-static simulation loops (time march).
+
+The outer driver closing the paper's reuse loop: material evolution
+marched through fused ``assembly -> recompute -> warm-started solve``
+steps on device, with adaptive re-coarsening at staleness-tripped
+segment boundaries.  See ``repro.sim.driver``.
+"""
+from repro.sim.driver import (
+    MarchCarry,
+    MarchConfig,
+    MarchResult,
+    SegmentInfo,
+    StepRecord,
+    init_carry,
+    make_scan_march,
+    make_segment,
+    make_step,
+    make_step_fn,
+    march,
+)
+from repro.sim.scenarios import SofteningScenario, ThermalScenario
+from repro.sim.staleness import (
+    StalenessConfig,
+    StalenessState,
+    staleness_init,
+    staleness_update,
+)
+
+__all__ = [
+    "MarchCarry", "MarchConfig", "MarchResult", "SegmentInfo",
+    "StepRecord", "init_carry", "make_scan_march", "make_segment",
+    "make_step", "make_step_fn", "march",
+    "SofteningScenario", "ThermalScenario",
+    "StalenessConfig", "StalenessState", "staleness_init",
+    "staleness_update",
+]

@@ -1,0 +1,421 @@
+"""Device-resident quasi-static time march with adaptive re-coarsening.
+
+The outer loop the paper's reuse story was building toward: march a
+material-evolution law (``repro.sim.scenarios``) through the fused
+``coefficient update -> device assembly -> state-gated PtAP recompute ->
+warm-started AMG-PCG`` step, entirely on device.  Each step feeds the
+previous solution into the law and warm-starts CG from the previous
+iterate (``x0`` threading, ``repro.core.krylov.pcg``).
+
+Three march modes:
+
+``"frozen"``
+    one hierarchy for the whole march, the K-step loop fused into a
+    single ``lax.scan`` program — compiles once, zero host transfers
+    (``tests/test_march.py`` pins the jit cache size and an
+    ``eval_shape`` round-trip), and is bitwise identical to the eager
+    per-step loop (``make_step_fn``).
+
+``"adaptive"``
+    the production policy: frozen-hierarchy *segments* (a jitted
+    ``lax.while_loop``, still zero host transfers while it runs) cut by
+    the device-side staleness monitor (``repro.sim.staleness``) riding
+    the carry.  At a segment boundary the host rebuilds aggregates and
+    prolongator via ``gamg.setup`` against the current coefficient
+    field — the explicit reuse-vs-rebuild runtime policy — and the
+    march resumes warm.
+
+``"resetup"``
+    the accuracy baseline: a full ``gamg.setup`` before *every* step
+    (segments of length one, unconditional rebuild).  The adaptive
+    march must reach the same final state while doing strictly fewer
+    setups — the acceptance pin.
+
+Failure containment (the fault-battery contract): a step whose solve is
+not ``HEALTHY`` does **not** advance the state — the segment exits with
+the carry still at the last healthy trajectory point, and the host
+recovery (mirroring ``repro.robust.recover``'s ladder) rebuilds the
+hierarchy with transient faults suppressed and retries.  A step that
+stays blocked through ``max_recoveries`` rebuilds fails the march
+explicitly (``MarchResult.status == "failed"``) with the last healthy
+state as the result — a failed march never silently marches on poison
+and never returns a poisoned state.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gamg
+from repro.core.block_coo import set_values_coo
+from repro.obs import metrics as obs_metrics
+from repro.robust import health, inject
+from repro.sim.staleness import (
+    StalenessConfig,
+    StalenessState,
+    staleness_init,
+    staleness_update,
+)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MarchConfig:
+    """Static march knobs (baked into the traced step/segment programs)."""
+
+    n_steps: int
+    seg_len: int = 16            # max steps per traced adaptive segment
+    rtol: float = 1e-8
+    maxiter: int = 200
+    warm_start: bool = True      # x0 = previous iterate (False: cold CG)
+    staleness: StalenessConfig = StalenessConfig()
+    max_recoveries: int = 2      # rebuild retries for one blocked step
+
+
+class MarchCarry(NamedTuple):
+    """The device-resident march state (a pytree; rides scan/while)."""
+
+    x: Array             # last healthy solution
+    scen: Any            # scenario evolution state pytree
+    stale: StalenessState
+    step: Array          # int32 next global step index
+
+
+class StepRecord(NamedTuple):
+    """Per-step diagnostics (fixed-size buffers inside the segment)."""
+
+    iters: Array         # int32 CG iterations
+    relres: Array        # final relative residual
+    status: Array        # int32 SolveHealth status code
+    tripped: Array       # bool: staleness tripped after this step
+    coeff_drift: Array   # relative coefficient drift vs the rebuild
+
+
+@dataclasses.dataclass
+class SegmentInfo:
+    """One frozen-hierarchy segment of the march (host bookkeeping)."""
+
+    start: int           # global step index of the segment's first step
+    steps: int           # steps *advanced* inside the segment
+    setup_id: int        # which gamg.setup built its hierarchy
+    reason: str          # "tripped" | "blocked" | "budget" | "done"
+    iters: int           # CG iterations spent in the segment
+
+
+@dataclasses.dataclass
+class MarchResult:
+    """Host-side march summary; per-step arrays cover advanced steps."""
+
+    x: Array                    # final (last healthy) solution
+    scen_state: Any             # final scenario state
+    E: Array                    # coefficient fields at the final state
+    nu: Array
+    steps_done: int
+    n_setups: int
+    n_recoveries: int
+    status: str                 # "ok" | "failed"
+    iters: np.ndarray           # (steps_done,) int
+    relres: np.ndarray
+    step_status: np.ndarray     # (steps_done,) SolveHealth codes
+    tripped: np.ndarray         # (steps_done,) bool
+    coeff_drift: np.ndarray
+    segments: List[SegmentInfo]
+    attempts: List[dict]        # failed (non-advancing) step attempts
+    worst_status: int           # health.worst_status over all attempts
+
+    @property
+    def total_iters(self) -> int:
+        return int(self.iters.sum())
+
+
+def _tree_where(pred: Array, a, b):
+    """Elementwise select over two identically-structured pytrees."""
+    return jax.tree_util.tree_map(
+        lambda u, v: jnp.where(pred, u, v), a, b)
+
+
+def make_step(setupd, assembler, scenario, cfg: MarchConfig):
+    """The traceable march step: ``(carry, b) -> (carry', record,
+    blocked)``.
+
+    Fuses the scenario law, device assembly, the state-gated PtAP
+    recompute and the warm-started solve; the carry advances only when
+    the solve is ``HEALTHY`` — a blocked step leaves the trajectory
+    (solution, scenario state, staleness monitor, step counter)
+    untouched and raises the ``blocked`` flag for the segment loop.
+    """
+    def step(carry: MarchCarry, b: Array):
+        E, nu, scen2 = scenario.step_fields(carry.scen, carry.x,
+                                            carry.step)
+        hier = gamg.recompute(setupd, assembler.coo_data(E, nu))
+        x0 = carry.x if cfg.warm_start else None
+        res = gamg.hier_solve(setupd, hier, b, x0,
+                              rtol=cfg.rtol, maxiter=cfg.maxiter)
+        ok = res.health.status == health.HEALTHY
+        stale2 = staleness_update(carry.stale, res.iters, E,
+                                  cfg.staleness)
+        advanced = MarchCarry(x=res.x, scen=scen2, stale=stale2,
+                              step=carry.step + 1)
+        carry2 = _tree_where(ok, advanced, carry)
+        rec = StepRecord(iters=jnp.asarray(res.iters, jnp.int32),
+                         relres=res.relres,
+                         status=res.health.status,
+                         tripped=ok & stale2.tripped,
+                         coeff_drift=stale2.coeff_drift)
+        return carry2, rec, ~ok
+
+    return step
+
+
+def init_carry(scenario, b: Array) -> MarchCarry:
+    """Initial march carry (zero displacement, pristine scenario state,
+    staleness referenced against the step-0 coefficient field)."""
+    scen = scenario.init_state()
+    x = jnp.zeros_like(b)
+    E, _, _ = scenario.step_fields(scen, x, jnp.asarray(0, jnp.int32))
+    return MarchCarry(x=x, scen=scen, stale=staleness_init(E),
+                      step=jnp.asarray(0, jnp.int32))
+
+
+def make_scan_march(setupd, assembler, scenario, cfg: MarchConfig, *,
+                    unroll: bool = False):
+    """The frozen-hierarchy march as ONE jitted ``lax.scan`` program:
+    ``(b, carry) -> (carry', StepRecord[(n_steps,)])``.
+
+    Compiles once and runs all ``cfg.n_steps`` steps with zero host
+    transfers.  A blocked step simply stops advancing: the remaining
+    scan slots retry it (and record the failed attempts), so the final
+    ``carry.step`` tells the host how far the march truly got.
+
+    ``unroll=True`` fully unrolls the scan into a straight-line program.
+    XLA compiles a *rolled* loop body with slightly different
+    reduction/fusion ULP behaviour than the same step compiled top-level
+    (observable only on the warm-start ``x0 != 0`` path, ~1e-15 after a
+    few steps; iteration counts and statuses are unaffected) — the
+    unrolled variant is bitwise identical to the eager per-step loop
+    (``make_step_fn``), which is what the scan-vs-eager parity test
+    pins.  The rolled default trades that last ULP for O(1) program
+    size.
+    """
+    step = make_step(setupd, assembler, scenario, cfg)
+
+    def run(b, carry):
+        def body(c, _):
+            c2, rec, _ = step(c, b)
+            return c2, rec
+        return jax.lax.scan(body, carry, None, length=cfg.n_steps,
+                            unroll=cfg.n_steps if unroll else 1)
+
+    return jax.jit(run)
+
+
+def make_step_fn(setupd, assembler, scenario, cfg: MarchConfig):
+    """The same step as an eagerly-callable jitted function — the
+    hand-rolled Python-loop march for the scan-vs-eager bitwise parity
+    test, and the primitive the dist selftest marches per rank."""
+    step = make_step(setupd, assembler, scenario, cfg)
+    return jax.jit(step)
+
+
+def make_segment(setupd, assembler, scenario, cfg: MarchConfig):
+    """One frozen-hierarchy adaptive segment as a jitted ``while_loop``:
+    ``(b, carry, n_steps) -> (k, carry', StepRecord[(seg_len,)],
+    blocked)``.
+
+    Runs up to ``cfg.seg_len`` steps with zero host transfers, exiting
+    early when the march completes, the staleness monitor trips, or a
+    step blocks.  ``n_steps`` is a traced scalar so one compiled segment
+    serves the whole march (the cache-size pin).  ``k`` counts *attempts*
+    written into the record buffers; when ``blocked`` the last attempt
+    (slot ``k - 1``) did not advance the carry.
+    """
+    step = make_step(setupd, assembler, scenario, cfg)
+    L = cfg.seg_len
+
+    def run(b, carry, n_steps):
+        dtype = b.dtype
+        recs0 = StepRecord(
+            iters=jnp.full((L,), -1, jnp.int32),
+            relres=jnp.full((L,), jnp.nan, dtype),
+            status=jnp.full((L,), -1, jnp.int32),
+            tripped=jnp.zeros((L,), bool),
+            coeff_drift=jnp.full((L,), jnp.nan,
+                                 carry.stale.coeff_drift.dtype))
+
+        def cond(s):
+            k, c, _, blocked = s
+            return ((k < L) & (c.step < n_steps)
+                    & ~c.stale.tripped & ~blocked)
+
+        def body(s):
+            k, c, recs, _ = s
+            c2, rec, blocked = step(c, b)
+            recs2 = jax.tree_util.tree_map(
+                lambda buf, v: buf.at[k].set(v), recs, rec)
+            return (k + 1, c2, recs2, blocked)
+
+        state = (jnp.asarray(0, jnp.int32), carry, recs0,
+                 jnp.asarray(False))
+        return jax.lax.while_loop(cond, body, state)
+
+    return jax.jit(run)
+
+
+def _setup_from_fields(prob, E, nu, setup_opts: dict):
+    """Host re-coarsening: assemble the operator at the current fields
+    (cached COO plan) and run the cold symbolic ``gamg.setup``."""
+    A = set_values_coo(prob.coo_plan, prob.assembler.value_stream(E, nu))
+    return gamg.setup(A, prob.B, **setup_opts)
+
+
+def march(prob, scenario, cfg: MarchConfig, *, mode: str = "adaptive",
+          b: Optional[Array] = None,
+          setup_opts: Optional[dict] = None) -> MarchResult:
+    """Run the quasi-static march.  See the module docstring for modes.
+
+    ``prob`` is an assembled ``ElasticityProblem`` on the device path
+    (the march needs its ``DeviceAssembler`` and cached COO plan);
+    ``setup_opts`` forwards to every ``gamg.setup`` (re)build.
+    """
+    if prob.assembler is None:
+        raise ValueError(
+            "the march needs the device assembly path: assemble with "
+            "path='device' (the default)")
+    if mode not in ("adaptive", "frozen", "resetup"):
+        raise ValueError(f"invalid march mode {mode!r}: expected "
+                         f"'adaptive', 'frozen' or 'resetup'")
+    if mode == "resetup":
+        cfg = dataclasses.replace(cfg, seg_len=1)
+    assembler = prob.assembler
+    b = prob.b if b is None else b
+    setup_opts = dict(setup_opts or {})
+    reg = obs_metrics.default_registry()
+    labels = {"mode": mode}
+
+    fields_fn = jax.jit(scenario.step_fields)
+    carry = init_carry(scenario, b)
+    E, nu, _ = fields_fn(carry.scen, carry.x, carry.step)
+    setupd = _setup_from_fields(prob, E, nu, setup_opts)
+    n_setups, n_recoveries = 1, 0
+    reg.counter("march/setups",
+                "gamg.setup builds performed by the march").inc(
+                    1, labels=labels)
+
+    rows: List[dict] = []
+    attempts: List[dict] = []
+    segments: List[SegmentInfo] = []
+    status = "ok"
+
+    if mode == "frozen":
+        runner = make_scan_march(setupd, assembler, scenario, cfg)
+        carry, recs = runner(b, carry)
+        rec_np = {k: np.asarray(v) for k, v in recs._asdict().items()}
+        advanced = rec_np["status"] == health.HEALTHY
+        for i in range(cfg.n_steps):
+            row = {k: v[i].item() for k, v in rec_np.items()}
+            (rows if advanced[i] else attempts).append(row)
+        steps_done = int(carry.step)
+        if steps_done < cfg.n_steps:
+            status = "failed"   # frozen mode has no recovery ladder
+        segments.append(SegmentInfo(
+            start=0, steps=steps_done, setup_id=0,
+            reason="done" if status == "ok" else "blocked",
+            iters=int(sum(r["iters"] for r in rows))))
+    else:
+        seg_runner = make_segment(setupd, assembler, scenario, cfg)
+        n_total = jnp.asarray(cfg.n_steps, jnp.int32)
+        need_rebuild = False
+        retry_pending = False
+        fail_step, fails_here = -1, 0
+        while int(carry.step) < cfg.n_steps:
+            seg_start = int(carry.step)
+            ctx = (inject.suppress_transient() if retry_pending
+                   else contextlib.nullcontext())
+            with ctx:
+                if need_rebuild:
+                    E, nu, _ = fields_fn(carry.scen, carry.x, carry.step)
+                    setupd = _setup_from_fields(prob, E, nu, setup_opts)
+                    seg_runner = make_segment(setupd, assembler,
+                                              scenario, cfg)
+                    carry = carry._replace(stale=staleness_init(E))
+                    n_setups += 1
+                    reg.counter("march/setups").inc(1, labels=labels)
+                    need_rebuild = False
+                k, carry, recs, blocked = seg_runner(b, carry, n_total)
+            retry_pending = False
+            k, blocked = int(k), bool(blocked)
+            tripped = bool(np.asarray(carry.stale.tripped))
+            rec_np = {key: np.asarray(v)
+                      for key, v in recs._asdict().items()}
+            n_ok = k - 1 if blocked else k
+            seg_rows = [{key: v[i].item() for key, v in rec_np.items()}
+                        for i in range(n_ok)]
+            rows.extend(seg_rows)
+            seg_iters = int(sum(r["iters"] for r in seg_rows))
+            if blocked:
+                reason = "blocked"
+            elif tripped:
+                reason = "tripped"
+            elif int(carry.step) >= cfg.n_steps:
+                reason = "done"
+            else:
+                reason = "budget"
+            segments.append(SegmentInfo(
+                start=seg_start, steps=n_ok, setup_id=n_setups - 1,
+                reason=reason, iters=seg_iters))
+            reg.counter("march/segments",
+                        "frozen-hierarchy march segments").inc(
+                            1, labels=labels)
+            reg.histogram("march/segment_steps",
+                          "steps advanced per frozen segment",
+                          buckets=obs_metrics.ITER_BUCKETS).observe(
+                              n_ok, labels=labels)
+            if blocked:
+                bad = {key: v[k - 1].item()
+                       for key, v in rec_np.items()}
+                bad["step"] = int(carry.step)
+                attempts.append(bad)
+                if int(carry.step) == fail_step:
+                    fails_here += 1
+                else:
+                    fail_step, fails_here = int(carry.step), 1
+                if fails_here > cfg.max_recoveries:
+                    status = "failed"
+                    break
+                # recovery ladder: rebuild against the current (last
+                # healthy) trajectory point with transient faults
+                # suppressed during the retraces, then retry the step
+                n_recoveries += 1
+                reg.counter("march/recoveries",
+                            "blocked-step rebuild retries").inc(
+                                1, labels=labels)
+                need_rebuild, retry_pending = True, True
+            elif tripped or mode == "resetup":
+                need_rebuild = True
+
+    reg.counter("march/steps", "march steps advanced").inc(
+        len(rows), labels=labels)
+    reg.counter("march/solve_iters", "total CG iterations").inc(
+        sum(r["iters"] for r in rows), labels=labels)
+
+    E, nu, _ = fields_fn(carry.scen, carry.x, carry.step)
+    all_status = [r["status"] for r in rows] + \
+        [a["status"] for a in attempts]
+    return MarchResult(
+        x=carry.x, scen_state=carry.scen, E=E, nu=nu,
+        steps_done=int(carry.step), n_setups=n_setups,
+        n_recoveries=n_recoveries, status=status,
+        iters=np.asarray([r["iters"] for r in rows], np.int64),
+        relres=np.asarray([r["relres"] for r in rows]),
+        step_status=np.asarray([r["status"] for r in rows], np.int64),
+        tripped=np.asarray([r["tripped"] for r in rows], bool),
+        coeff_drift=np.asarray([r["coeff_drift"] for r in rows]),
+        segments=segments, attempts=attempts,
+        worst_status=int(health.worst_status(
+            np.asarray(all_status))) if all_status else health.HEALTHY)

@@ -1,0 +1,146 @@
+"""Built-in quasi-static material-evolution scenarios (the march laws).
+
+A scenario is the coefficient-update law of the time march: a frozen
+container of host-built constants exposing
+
+* ``init_state()``                      — the evolution state pytree
+  (damage field, nothing, ...) that rides the scan carry;
+* ``step_fields(state, x, step)``       — pure and jittable: from the
+  previous step's solution ``x`` and the evolution state, produce the
+  per-element fields ``(E, nu)`` the step solves with plus the advanced
+  state.  This is what the march feeds into the fused
+  ``assembly -> recompute -> warm solve`` step, entirely on device.
+
+Both built-ins update **values only** — mesh, boundary conditions and
+the blocked-COO plan are fixed, which keeps every step inside the
+cached-plan / state-gated reuse model (``repro.fem.assemble``).
+
+``SofteningScenario`` — damage/plasticity-style softening: a
+monotone per-element damage variable grows with the local displacement
+magnitude and knocks down ``E``.  Softer elements displace more, so the
+law feeds back on itself and the coefficient field walks steadily away
+from the setup-time operator — the workload that makes adaptive
+re-coarsening pay (``tests/test_march.py`` pins adaptive < frozen on
+total CG iterations here).
+
+``ThermalScenario`` — thermal-stress cycling: a stateless periodic
+modulation of ``E`` with a per-element phase (a traveling hot spot).
+Coefficients come back to where they started every period, so a frozen
+hierarchy stays adequate — the counter-workload where the staleness
+monitor should *not* trip with a tolerance above the cycle amplitude.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def _element_dof_gather(mesh, free_nodes: np.ndarray) -> np.ndarray:
+    """(ne, nn) gather map: element-local node -> padded free-node row.
+
+    Fixed (eliminated) nodes map to row ``n_free`` — the caller appends a
+    zero pad row to the reshaped solution, so clamped nodes contribute
+    zero displacement without any masking in the traced law.
+    """
+    n_free = len(free_nodes)
+    renum = np.full(mesh.n_nodes, n_free, dtype=np.int64)
+    renum[free_nodes] = np.arange(n_free)
+    return renum[mesh.connectivity]
+
+
+def _padded_element_displacements(x: Array, gather: np.ndarray,
+                                  n_free: int) -> Array:
+    """(ne, nn, 3) per-element nodal displacements from the flat free-dof
+    solution vector (clamped nodes read the zero pad row)."""
+    u = x.reshape(n_free, 3)
+    upad = jnp.concatenate([u, jnp.zeros((1, 3), u.dtype)], axis=0)
+    return upad[gather]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SofteningScenario:
+    """Monotone damage softening: ``E = E0 * (1 - damage(x))``.
+
+    ``damage' = clip(damage + rate * s_e, 0, d_max)`` with ``s_e`` the
+    element-mean displacement magnitude — accumulating plasticity-style
+    (damage never heals, so the law is monotone by construction) and
+    capped at ``d_max`` so the operator stays SPD with a stiffness
+    contrast of at most ``1 / (1 - d_max)``.  Elements that displace
+    more soften faster and then displace more still — the positive
+    feedback that drives the coefficient field heterogeneously toward
+    the cap and makes the frozen prolongator go stale.
+    """
+
+    E0: Array                # (ne,) baseline stiffness
+    nu0: Array               # (ne,) Poisson ratio (damage leaves it alone)
+    gather: np.ndarray       # (ne, nn) element-dof gather map
+    n_free: int
+    rate: float = 0.01       # damage per unit element displacement, per step
+    d_max: float = 0.99      # damage cap
+
+    @classmethod
+    def build(cls, prob, *, rate: float = 0.01, d_max: float = 0.99
+              ) -> "SofteningScenario":
+        """From an assembled ``ElasticityProblem`` (device path)."""
+        ne = prob.mesh.n_elements
+        E0 = (prob.E_field if prob.E_field is not None
+              else jnp.ones((ne,), jnp.float64))
+        nu0 = (prob.nu_field if prob.nu_field is not None
+               else jnp.full((ne,), 0.3, jnp.float64))
+        return cls(E0=jnp.asarray(E0), nu0=jnp.asarray(nu0),
+                   gather=_element_dof_gather(prob.mesh, prob.free_nodes),
+                   n_free=len(prob.free_nodes), rate=float(rate),
+                   d_max=float(d_max))
+
+    def init_state(self) -> Array:
+        """Damage field, initially pristine."""
+        return jnp.zeros_like(self.E0)
+
+    def step_fields(self, state: Array, x: Array, step):
+        ue = _padded_element_displacements(x, self.gather, self.n_free)
+        s_e = jnp.linalg.norm(ue, axis=-1).mean(axis=-1)       # (ne,)
+        damage = jnp.clip(state + self.rate * s_e, 0.0, self.d_max)
+        return self.E0 * (1.0 - damage), self.nu0, damage
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ThermalScenario:
+    """Thermal-stress cycling: ``E = E0 * (1 + amp * sin(2 pi t / period
+    + phase))`` with a per-element phase from the element centroid —
+    stateless, periodic, solution-independent."""
+
+    E0: Array                # (ne,)
+    nu0: Array               # (ne,)
+    phase: Array             # (ne,) per-element phase offsets
+    amp: float = 0.3         # relative modulation amplitude (< 1)
+    period: float = 8.0      # steps per cycle
+
+    @classmethod
+    def build(cls, prob, *, amp: float = 0.3, period: float = 8.0
+              ) -> "ThermalScenario":
+        from repro.fem.assemble import element_centroids
+        ne = prob.mesh.n_elements
+        E0 = (prob.E_field if prob.E_field is not None
+              else jnp.ones((ne,), jnp.float64))
+        nu0 = (prob.nu_field if prob.nu_field is not None
+               else jnp.full((ne,), 0.3, jnp.float64))
+        c = element_centroids(prob.mesh)
+        phase = 2.0 * np.pi * c.sum(axis=1) / max(c.sum(axis=1).max(), 1.0)
+        return cls(E0=jnp.asarray(E0), nu0=jnp.asarray(nu0),
+                   phase=jnp.asarray(phase), amp=float(amp),
+                   period=float(period))
+
+    def init_state(self):
+        """No evolution state (empty pytree node in the carry)."""
+        return ()
+
+    def step_fields(self, state, x: Array, step):
+        t = jnp.asarray(step, self.E0.dtype)
+        mod = 1.0 + self.amp * jnp.sin(
+            2.0 * jnp.pi * t / self.period + self.phase)
+        return self.E0 * mod, self.nu0, state

@@ -1,0 +1,109 @@
+"""Device-side hierarchy-staleness monitor (the re-coarsening policy).
+
+The reuse model (PETSc ``-pc_gamg_reuse_interpolation``) freezes
+aggregates and prolongator values at setup time; ``gamg.recompute`` only
+refreshes operators and smoother data.  That is exactly right while the
+coefficients drift a little — and measurably wrong once they drift a
+lot: the frozen prolongator was smoothed against the *setup-time*
+operator, and its interpolation quality (hence the CG iteration count)
+decays as the true operator walks away from it.  SParSH-AMG frames
+setup-reuse-vs-rebuild as an explicit runtime policy; this module is
+that policy as a pure device function riding the march carry.
+
+Two tripwires, both computed from quantities the march already holds —
+no extra reductions over the hierarchy, no host syncs:
+
+* **iteration drift** — a reference iteration count is established as
+  the minimum over the first ``ref_window`` post-rebuild steps (warm
+  starts settle within a couple of steps); once established, a step
+  needing more than ``ref_iters + iter_drift`` iterations trips.
+* **coefficient drift** — relative L2 distance of the per-element
+  ``E`` field from its rebuild-time snapshot exceeding ``coeff_rtol``
+  trips even before the iteration count degrades (the cheap leading
+  indicator: the field is already on device and tiny compared to the
+  operator).
+
+``staleness_update`` is called once per march step inside the traced
+segment; the ``tripped`` flag in the carry is what the segment's
+``while_loop`` condition reads to cut a segment boundary.  The host then
+rebuilds aggregates/prolongator via ``gamg.setup`` and resets the
+monitor with ``staleness_init`` — see ``repro.sim.driver``.
+
+Property contract (``tests/test_march.py``): monotone softening
+eventually trips (the relative drift of ``E -> E * (1 - damage)`` grows
+to the damage cap), constant coefficients never trip (zero drift,
+iteration counts can only establish or match the reference).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+#: Sentinel "reference not yet established" iteration count.
+_REF_UNSET = jnp.iinfo(jnp.int32).max
+
+
+class StalenessConfig(NamedTuple):
+    """Static policy knobs (baked into the traced segment)."""
+
+    iter_drift: int = 4      # iterations above the reference that trip
+    ref_window: int = 3      # steps that establish the reference count
+    coeff_rtol: float = 0.4  # relative ||E - E_ref|| that trips
+
+
+class StalenessState(NamedTuple):
+    """Per-march monitor state (a pytree riding the scan carry)."""
+
+    e_ref: Array        # (ne,) coefficient snapshot at the last rebuild
+    ref_iters: Array    # int32 reference count (min over the window)
+    steps_since: Array  # int32 steps since the last rebuild
+    tripped: Array      # bool: a segment boundary is due
+    coeff_drift: Array  # last relative coefficient drift (diagnostic)
+    iter_excess: Array  # int32 last iters - reference (diagnostic)
+
+
+def staleness_init(e_ref: Array) -> StalenessState:
+    """Fresh monitor state for a hierarchy just built against ``e_ref``."""
+    e_ref = jnp.asarray(e_ref)
+    return StalenessState(
+        e_ref=e_ref,
+        ref_iters=jnp.asarray(_REF_UNSET, jnp.int32),
+        steps_since=jnp.asarray(0, jnp.int32),
+        tripped=jnp.asarray(False),
+        coeff_drift=jnp.asarray(0.0, e_ref.dtype),
+        iter_excess=jnp.asarray(0, jnp.int32))
+
+
+def staleness_update(state: StalenessState, iters: Array, E: Array,
+                     cfg: StalenessConfig) -> StalenessState:
+    """One monitor step after a successful solve (pure, jittable).
+
+    ``iters`` is the step's CG iteration count, ``E`` the per-element
+    coefficient field the step solved with.  Inside the reference window
+    the count only *establishes* the reference (min), so the first
+    post-rebuild steps — whose warm starts are still settling — cannot
+    trip the drift criterion themselves.
+    """
+    iters = jnp.asarray(iters, jnp.int32)
+    in_window = state.steps_since < cfg.ref_window
+    ref = jnp.where(in_window,
+                    jnp.minimum(state.ref_iters, iters), state.ref_iters)
+    # unset reference (e.g. ref_window=0) never reports an excess
+    excess = iters - jnp.where(ref == _REF_UNSET, iters, ref)
+    iter_trip = ~in_window & (excess > cfg.iter_drift)
+    diff = jnp.linalg.norm(E - state.e_ref)
+    base = jnp.maximum(jnp.linalg.norm(state.e_ref),
+                       jnp.finfo(state.e_ref.dtype).tiny)
+    drift = diff / base
+    coeff_trip = drift > cfg.coeff_rtol
+    return StalenessState(
+        e_ref=state.e_ref,
+        ref_iters=ref,
+        steps_since=state.steps_since + 1,
+        tripped=iter_trip | coeff_trip,
+        coeff_drift=drift.astype(state.coeff_drift.dtype),
+        iter_excess=excess.astype(jnp.int32))

@@ -99,6 +99,17 @@ def test_dist_overlap_parity_8rank():
     assert "overlap solve parity" in stdout, stdout
 
 
+def test_dist_warm_march_parity():
+    """ISSUE 10 (tier-1): the warm-started time march over the wire — a
+    3-step softening march through the ``warm_start=True`` dist
+    coefficient program (x output slab fed back as the next x0 slab)
+    matches the single-device fused march primitive step for step, with
+    one compiled program for the whole march."""
+    stdout = _run_selftest(2, 4, {"REPRO_SELFTEST_MARCH": "1"})
+    assert "OK" in stdout
+    assert "dist warm march parity (3 steps)" in stdout, stdout
+
+
 @pytest.mark.slow
 def test_dist_fault_injection_detected():
     """ISSUE 6 (nightly): the fault-injection section of the selftest —

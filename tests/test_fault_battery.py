@@ -236,6 +236,82 @@ def test_server_persistent_column_fault_stays_failed(prob):
 
 
 # ---------------------------------------------------------------------------
+# Mid-march injection (ISSUE 10): the march-level recovery ladder
+# ---------------------------------------------------------------------------
+
+MARCH_SETUP = {"coarse_size": 8}
+
+
+def _march_prob():
+    from repro.sim import MarchConfig, SofteningScenario
+    prob = assemble_elasticity(4)
+    scen = SofteningScenario.build(prob, rate=0.3, d_max=0.99)
+    cfg = MarchConfig(n_steps=3, seg_len=8, rtol=1e-8)
+    return prob, scen, cfg
+
+
+def test_march_transient_fault_recovered_within_one_step():
+    """A transient spmv NaN firing mid-march blocks the step it poisons
+    — detected within that step (the CG loop exits one iteration after
+    injection), the state does NOT advance — and the march recovery
+    ladder rebuilds with transients suppressed and finishes healthy."""
+    from repro.sim import march
+    prob, scen, cfg = _march_prob()
+    with inject.active(inject.parse_schedule("spmv:nan@1")):
+        res = march(prob, scen, cfg, mode="adaptive",
+                    setup_opts=MARCH_SETUP)
+    assert res.status == "ok"
+    assert res.steps_done == cfg.n_steps
+    assert res.n_recoveries >= 1
+    # every ADVANCED step is healthy; the poisoned attempt is on record
+    assert (res.step_status == health.HEALTHY).all()
+    assert len(res.attempts) >= 1
+    bad = res.attempts[0]
+    assert bad["status"] == health.NONFINITE
+    assert bad["iters"] <= 2, bad   # flagged within one CG iteration
+    assert res.worst_status == health.NONFINITE
+    assert np.isfinite(np.asarray(res.x)).all()
+    assert np.isfinite(res.relres).all() and (res.relres <= cfg.rtol).all()
+
+
+def test_march_persistent_fault_fails_explicitly():
+    """A persistent fault survives every rebuild's retrace: the march
+    exhausts ``max_recoveries`` on the poisoned step and fails
+    EXPLICITLY — the state never advances past the last healthy point
+    and the returned solution is the (finite) last healthy iterate,
+    never the poisoned one."""
+    from repro.sim import march
+    prob, scen, cfg = _march_prob()
+    with inject.active(inject.parse_schedule("spmv:nan@1:persistent")):
+        res = march(prob, scen, cfg, mode="adaptive",
+                    setup_opts=MARCH_SETUP)
+    assert res.status == "failed"
+    assert res.steps_done == 0              # poisoned from step 0
+    assert res.n_recoveries == cfg.max_recoveries
+    assert len(res.attempts) == cfg.max_recoveries + 1
+    assert all(a["status"] == health.NONFINITE for a in res.attempts)
+    assert np.isfinite(np.asarray(res.x)).all()
+
+
+def test_frozen_march_never_advances_on_poison():
+    """The frozen march has no recovery ladder: a blocked step simply
+    stops the trajectory — the remaining scan slots record failed
+    attempts, the march reports ``failed``, and the carry still holds
+    the last healthy state."""
+    from repro.sim import march
+    prob, scen, cfg = _march_prob()
+    with inject.active(inject.parse_schedule("spmv:nan@1")):
+        res = march(prob, scen, cfg, mode="frozen",
+                    setup_opts=MARCH_SETUP)
+    assert res.status == "failed"
+    assert res.steps_done == 0
+    assert len(res.iters) == 0              # nothing advanced
+    assert len(res.attempts) == cfg.n_steps  # every slot retried + logged
+    assert res.worst_status == health.NONFINITE
+    assert np.isfinite(np.asarray(res.x)).all()
+
+
+# ---------------------------------------------------------------------------
 # Property sweep (hypothesis): detection latency + ladder containment
 # ---------------------------------------------------------------------------
 

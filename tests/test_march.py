@@ -1,0 +1,341 @@
+"""Device-resident time march (``repro.sim``) — ISSUE 10 contracts.
+
+Tier-1 pins (small grid, seconds):
+
+* a 3-step adaptive march on the softening scenario completes healthy
+  end to end (assembly -> recompute -> warm solve fused per step, host
+  bookkeeping consistent);
+* scan-vs-eager parity: the unrolled one-program march is **bitwise**
+  the hand-rolled jitted-step Python loop at f64; the rolled production
+  scan matches on every integer record exactly and on the trajectory to
+  ~1e-13 (XLA compiles a rolled loop body with different reduction ULP
+  behaviour than the identical step compiled top-level — see
+  ``make_scan_march``);
+* zero host round trips per frozen segment: one jit cache entry across
+  repeated runs and an ``eval_shape`` trace of the full march program;
+* hypothesis properties of the staleness monitor alone (no solves):
+  monotone softening eventually trips, constant coefficients never do.
+
+Slow-marked (nightly) — the acceptance battery on the m=5 softening
+trajectory: the adaptive march reaches the per-step full re-setup
+baseline's final state (1e-10) with strictly fewer setups, and spends
+fewer total CG iterations than the frozen-hierarchy march.
+"""
+import numpy as np
+import pytest
+
+try:        # property tests run under hypothesis when available, and as
+    # a deterministic seed sweep otherwise (the container may lack it)
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+import repro.core  # noqa: F401,E402  (x64 on)
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import gamg  # noqa: E402
+from repro.fem.assemble import assemble_elasticity  # noqa: E402
+from repro.robust import health  # noqa: E402
+from repro.sim import (  # noqa: E402
+    MarchConfig,
+    SofteningScenario,
+    StalenessConfig,
+    ThermalScenario,
+    init_carry,
+    make_scan_march,
+    make_segment,
+    make_step_fn,
+    march,
+    staleness_init,
+    staleness_update,
+)
+from repro.sim.driver import _setup_from_fields  # noqa: E402
+
+SETUP_OPTS = {"coarse_size": 8}
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return assemble_elasticity(4)
+
+
+@pytest.fixture(scope="module")
+def scen(prob):
+    return SofteningScenario.build(prob, rate=0.3, d_max=0.99)
+
+
+@pytest.fixture(scope="module")
+def setupd(prob, scen):
+    carry = init_carry(scen, prob.b)
+    E, nu, _ = scen.step_fields(carry.scen, carry.x, carry.step)
+    return _setup_from_fields(prob, E, nu, SETUP_OPTS)
+
+
+# ---------------------------------------------------------------------------
+# Tier-1: quick march end to end
+# ---------------------------------------------------------------------------
+
+def test_quick_adaptive_march(prob, scen):
+    """3 warm-started steps, adaptive mode: healthy, finite, consistent
+    host bookkeeping (the CI tier-1 march)."""
+    cfg = MarchConfig(n_steps=3, seg_len=8, rtol=1e-8)
+    res = march(prob, scen, cfg, mode="adaptive", setup_opts=SETUP_OPTS)
+    assert res.status == "ok"
+    assert res.steps_done == 3
+    assert (res.step_status == health.HEALTHY).all()
+    assert res.worst_status == health.HEALTHY
+    assert np.isfinite(np.asarray(res.x)).all()
+    assert np.isfinite(res.relres).all() and (res.relres <= 1e-8).all()
+    assert res.n_setups >= 1 and res.n_recoveries == 0
+    assert sum(s.steps for s in res.segments) == 3
+    assert res.total_iters == int(res.iters.sum()) > 0
+    # the softening law actually softened: damage grew, E dropped
+    assert float(np.asarray(res.scen_state).max()) > 0
+    assert float(np.asarray(res.E).min()) < float(np.asarray(scen.E0).min())
+
+
+def test_march_mode_and_path_validation(prob, scen):
+    cfg = MarchConfig(n_steps=1)
+    with pytest.raises(ValueError, match="invalid march mode"):
+        march(prob, scen, cfg, mode="bogus", setup_opts=SETUP_OPTS)
+
+
+def test_gamg_solver_march_front_door(prob, scen):
+    """``GAMGSolver.march`` delegates to the sim driver."""
+    solver = gamg.GAMGSolver(prob.A, prob.B, coarse_size=8, rtol=1e-8,
+                             maxiter=200, precision="f64")
+    cfg = MarchConfig(n_steps=2, seg_len=4)
+    res = solver.march(prob, scen, cfg, mode="frozen",
+                       setup_opts=SETUP_OPTS)
+    assert res.status == "ok" and res.steps_done == 2
+
+
+# ---------------------------------------------------------------------------
+# Tier-1: scan-vs-eager parity + zero-host-transfer pins
+# ---------------------------------------------------------------------------
+
+def _frozen_cfg(n_steps=3):
+    # a monitor that never trips: pure frozen-hierarchy march
+    return MarchConfig(n_steps=n_steps, seg_len=8, rtol=1e-9,
+                       staleness=StalenessConfig(iter_drift=10**6,
+                                                 ref_window=1,
+                                                 coeff_rtol=10**6))
+
+
+def test_scan_vs_eager_bitwise_parity(prob, scen, setupd):
+    """K steps of the one-program march == the hand-rolled jitted-step
+    Python loop, **bitwise** at f64 (the ``unroll=True`` program), and
+    the rolled production scan agrees on every integer record exactly
+    with the trajectory inside 1e-13."""
+    cfg = _frozen_cfg(3)
+    b = prob.b
+    carry0 = init_carry(scen, b)
+
+    runner = make_scan_march(setupd, prob.assembler, scen, cfg,
+                             unroll=True)
+    c_scan, recs = runner(b, carry0)
+
+    step_fn = make_step_fn(setupd, prob.assembler, scen, cfg)
+    c = carry0
+    eager_recs = []
+    for _ in range(cfg.n_steps):
+        c, rec, blocked = step_fn(c, b)
+        assert not bool(blocked)
+        eager_recs.append(rec)
+
+    assert int(c_scan.step) == int(c.step) == cfg.n_steps
+    np.testing.assert_array_equal(np.asarray(c_scan.x), np.asarray(c.x))
+    for leaf_s, leaf_e in zip(jax.tree_util.tree_leaves(c_scan.scen),
+                              jax.tree_util.tree_leaves(c.scen)):
+        np.testing.assert_array_equal(np.asarray(leaf_s),
+                                      np.asarray(leaf_e))
+    assert np.asarray(recs.iters).tolist() == \
+        [int(r.iters) for r in eager_recs]
+    assert np.asarray(recs.status).tolist() == \
+        [int(r.status) for r in eager_recs]
+
+    # the rolled default: exact integer records, trajectory to ~1e-13
+    # (XLA's rolled loop body computes reductions with different ULP
+    # rounding than the top-level-compiled step; warm-start path only)
+    rolled = make_scan_march(setupd, prob.assembler, scen, cfg)
+    c_roll, recs_roll = rolled(b, carry0)
+    assert np.array_equal(np.asarray(recs_roll.iters),
+                          np.asarray(recs.iters))
+    assert np.array_equal(np.asarray(recs_roll.status),
+                          np.asarray(recs.status))
+    np.testing.assert_allclose(np.asarray(c_roll.x), np.asarray(c.x),
+                               rtol=0, atol=1e-13)
+
+
+def test_frozen_march_single_trace_zero_host_transfers(prob, scen, setupd):
+    """The zero-host-transfer acceptance pins: the frozen march and the
+    adaptive segment each compile ONCE (jit cache stays at one entry
+    across repeated calls), and the whole march program shape-evaluates
+    abstractly — a host round trip inside the traced program would make
+    ``eval_shape`` impossible."""
+    cfg = _frozen_cfg(3)
+    b = prob.b
+    carry0 = init_carry(scen, b)
+
+    runner = make_scan_march(setupd, prob.assembler, scen, cfg)
+    c1, _ = runner(b, carry0)
+    runner(b, c1._replace(step=jnp.asarray(0, jnp.int32)))
+    assert runner._cache_size() == 1, runner._cache_size()
+
+    abstract = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), (b, carry0))
+    out = jax.eval_shape(runner, *abstract)
+    c_shape, recs_shape = out
+    assert c_shape.x.shape == b.shape
+    assert recs_shape.iters.shape == (cfg.n_steps,)
+
+    seg = make_segment(setupd, prob.assembler, scen, cfg)
+    n = jnp.asarray(3, jnp.int32)
+    _, c2, _, _ = seg(b, carry0, n)
+    # a different (traced) budget must NOT retrace
+    seg(b, c2._replace(step=jnp.asarray(0, jnp.int32)),
+        jnp.asarray(2, jnp.int32))
+    assert seg._cache_size() == 1, seg._cache_size()
+    jax.eval_shape(seg, *jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(jnp.shape(a), jnp.asarray(a).dtype),
+        (b, carry0, n)))
+
+
+# ---------------------------------------------------------------------------
+# Tier-1: staleness-monitor properties (pure monitor, no solves)
+# ---------------------------------------------------------------------------
+
+def _check_monotone_softening_trips(ne, seed, rate, coeff_rtol):
+    """A monotone multiplicative softening walks the coefficient field
+    arbitrarily far from the rebuild reference, so the drift criterion
+    must fire in finitely many steps for any positive tolerance."""
+    rng = np.random.default_rng(seed)
+    E0 = jnp.asarray(1.0 + rng.random(ne))
+    cfg = StalenessConfig(iter_drift=10**6, ref_window=1,
+                          coeff_rtol=coeff_rtol)
+    state = staleness_init(E0)
+    E = np.asarray(E0)
+    softening = 1.0 - rate * (0.5 + 0.5 * rng.random(ne))
+    for _ in range(200):
+        E = E * softening
+        state = staleness_update(state, jnp.asarray(5, jnp.int32),
+                                 jnp.asarray(E), cfg)
+        if bool(state.tripped):
+            return
+    raise AssertionError(
+        f"monotone softening never tripped: drift={float(state.coeff_drift)}")
+
+
+def _check_constant_coefficients_quiet(ne, seed, iters, n_steps,
+                                       iter_drift, coeff_rtol,
+                                       ref_window):
+    """Zero drift and flat iteration counts: the monitor must stay quiet
+    for every configuration — a trip here would make the adaptive march
+    degenerate into per-step re-setup."""
+    rng = np.random.default_rng(seed)
+    E0 = jnp.asarray(1.0 + rng.random(ne))
+    cfg = StalenessConfig(iter_drift=iter_drift, ref_window=ref_window,
+                          coeff_rtol=coeff_rtol)
+    state = staleness_init(E0)
+    for _ in range(n_steps):
+        state = staleness_update(state, jnp.asarray(iters, jnp.int32),
+                                 E0, cfg)
+        assert not bool(state.tripped)
+        assert float(state.coeff_drift) == 0.0
+
+
+if HAVE_HYPOTHESIS:
+    @given(ne=st.integers(4, 64), seed=st.integers(0, 2**31 - 1),
+           rate=st.floats(0.01, 0.2), coeff_rtol=st.floats(0.05, 0.5))
+    @settings(max_examples=25, deadline=None)
+    def test_monotone_softening_eventually_trips(ne, seed, rate,
+                                                 coeff_rtol):
+        _check_monotone_softening_trips(ne, seed, rate, coeff_rtol)
+
+    @given(ne=st.integers(4, 64), seed=st.integers(0, 2**31 - 1),
+           iters=st.integers(1, 50), n_steps=st.integers(1, 40),
+           iter_drift=st.integers(0, 10),
+           coeff_rtol=st.floats(1e-3, 1.0), ref_window=st.integers(1, 5))
+    @settings(max_examples=25, deadline=None)
+    def test_constant_coefficients_never_trip(ne, seed, iters, n_steps,
+                                              iter_drift, coeff_rtol,
+                                              ref_window):
+        _check_constant_coefficients_quiet(ne, seed, iters, n_steps,
+                                           iter_drift, coeff_rtol,
+                                           ref_window)
+else:
+    @pytest.mark.parametrize("seed", range(12))
+    def test_monotone_softening_eventually_trips(seed):
+        rng = np.random.default_rng(1000 + seed)
+        _check_monotone_softening_trips(
+            int(rng.integers(4, 64)), seed,
+            float(rng.uniform(0.01, 0.2)), float(rng.uniform(0.05, 0.5)))
+
+    @pytest.mark.parametrize("seed", range(12))
+    def test_constant_coefficients_never_trip(seed):
+        rng = np.random.default_rng(2000 + seed)
+        _check_constant_coefficients_quiet(
+            int(rng.integers(4, 64)), seed, int(rng.integers(1, 50)),
+            int(rng.integers(1, 40)), int(rng.integers(0, 10)),
+            float(rng.uniform(1e-3, 1.0)), int(rng.integers(1, 5)))
+
+
+def test_thermal_cycle_stays_below_tolerance(prob):
+    """The counter-workload: a periodic modulation bounded below the
+    drift tolerance cycles forever without a trip."""
+    scen = ThermalScenario.build(prob, amp=0.2, period=8.0)
+    cfg = StalenessConfig(iter_drift=10**6, ref_window=1, coeff_rtol=0.5)
+    x = jnp.zeros_like(prob.b)
+    E_ref, _, _ = scen.step_fields((), x, jnp.asarray(0, jnp.int32))
+    state = staleness_init(E_ref)
+    for s in range(1, 17):      # two full periods
+        E, _, _ = scen.step_fields((), x, jnp.asarray(s, jnp.int32))
+        state = staleness_update(state, jnp.asarray(7, jnp.int32), E, cfg)
+        assert not bool(state.tripped), (s, float(state.coeff_drift))
+
+
+# ---------------------------------------------------------------------------
+# Nightly: the acceptance battery (m=5 softening trajectory)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_march_acceptance_adaptive_vs_frozen_vs_resetup():
+    """ISSUE 10 acceptance: on the built-in softening scenario the
+    adaptive march reaches the same final state (1e-10) as per-step full
+    re-setup while doing strictly fewer setups, and spends fewer total
+    CG iterations than the frozen-hierarchy march on the same
+    trajectory (the hypothesis-stated ``adaptive <= frozen`` property,
+    pinned strictly here)."""
+    prob = assemble_elasticity(5)
+    scen = SofteningScenario.build(prob, rate=0.25, d_max=0.99)
+    cfg = MarchConfig(n_steps=8, seg_len=8, rtol=1e-10, maxiter=400,
+                      staleness=StalenessConfig(iter_drift=2,
+                                                ref_window=2,
+                                                coeff_rtol=0.25))
+    runs = {mode: march(prob, scen, cfg, mode=mode,
+                        setup_opts=SETUP_OPTS)
+            for mode in ("frozen", "adaptive", "resetup")}
+    for mode, res in runs.items():
+        assert res.status == "ok", (mode, res.status)
+        assert res.steps_done == cfg.n_steps, mode
+        assert (res.step_status == health.HEALTHY).all(), mode
+
+    adaptive, frozen, resetup = (runs["adaptive"], runs["frozen"],
+                                 runs["resetup"])
+    # same physics: the adaptive final state matches the per-step
+    # re-setup baseline to the march tolerance
+    x_ref = np.asarray(resetup.x)
+    rel = (np.linalg.norm(np.asarray(adaptive.x) - x_ref)
+           / np.linalg.norm(x_ref))
+    assert rel <= 1e-10, rel
+    # strictly fewer setups than the baseline, strictly fewer total CG
+    # iterations than never re-coarsening
+    assert adaptive.n_setups < resetup.n_setups, \
+        (adaptive.n_setups, resetup.n_setups)
+    assert adaptive.total_iters < frozen.total_iters, \
+        (adaptive.total_iters, frozen.total_iters)
+    # the frozen hierarchy genuinely degraded on this trajectory —
+    # otherwise the comparison above is vacuous
+    assert frozen.iters[-1] > frozen.iters[0], frozen.iters.tolist()
